@@ -1,0 +1,105 @@
+"""Shared benchmark harness for the paper-figure reproductions.
+
+Methodology mirrors the paper (§4.1): each configuration is run repeatedly
+with different seeds; we report mean and 95% CI of GFLOPS and total
+transferred GB. Matrix 8192x8192, tile 512 (16x16 tiles), inner block 128,
+fp64 item size — the paper's exact problem shape.
+
+Environment knobs:
+  REPRO_BENCH_RUNS   repetitions per configuration (default 30, paper-level)
+  REPRO_BENCH_GPUS   comma list of GPU counts       (default 1..8)
+  REPRO_BENCH_FAST   =1 shrinks to 3 runs x {2,4,8} GPUs for smoke use
+"""
+from __future__ import annotations
+
+import csv
+import os
+from pathlib import Path
+from typing import Callable, Dict, List
+
+from repro.configs.paper_machine import paper_machine
+from repro.core import DADA, Summary, make_strategy, run_many
+from repro.linalg.cholesky import cholesky_graph
+from repro.linalg.lu import lu_graph
+from repro.linalg.qr import qr_graph
+
+MATRIX = 8192
+TILE = 512
+NT = MATRIX // TILE
+RESULTS_DIR = Path(__file__).resolve().parent / "results"
+
+GRAPHS: Dict[str, Callable] = {
+    "cholesky": lambda: cholesky_graph(NT, TILE, with_fns=False),
+    "lu": lambda: lu_graph(NT, TILE, with_fns=False),
+    "qr": lambda: qr_graph(NT, TILE, with_fns=False),
+}
+
+
+def bench_settings():
+    fast = os.environ.get("REPRO_BENCH_FAST", "") == "1"
+    runs = int(os.environ.get("REPRO_BENCH_RUNS", "3" if fast else "30"))
+    gpus_env = os.environ.get("REPRO_BENCH_GPUS", "2,4,8" if fast else "1,2,3,4,5,6,7,8")
+    gpus = [int(x) for x in gpus_env.split(",") if x]
+    return runs, gpus
+
+
+STRATEGIES: Dict[str, Callable] = {
+    "heft": lambda: make_strategy("heft"),
+    "ws": lambda: make_strategy("ws"),
+    "dada(0)": lambda: DADA(alpha=0.0),
+    "dada(a)": lambda: DADA(alpha=0.5),
+    "dada(a)+cp": lambda: DADA(alpha=0.5, use_cp=True),
+}
+
+
+def sweep(
+    fig: str,
+    kernel: str,
+    strategies: Dict[str, Callable],
+    n_runs: int,
+    gpu_counts: List[int],
+) -> List[dict]:
+    """Run strategies x gpu-counts; persist CSV; return row dicts."""
+    rows = []
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    out_path = RESULTS_DIR / f"{fig}.csv"
+    graph_factory = GRAPHS[kernel]
+    for n_gpus in gpu_counts:
+        machine = paper_machine(n_gpus)
+        for label, sfac in strategies.items():
+            s: Summary = run_many(
+                graph_factory, machine, sfac, n_runs=n_runs
+            )
+            row = dict(
+                fig=fig,
+                kernel=kernel,
+                strategy=label,
+                n_gpus=n_gpus,
+                n_runs=s.n,
+                gflops=round(s.gflops_mean, 2),
+                gflops_ci95=round(s.gflops_ci95, 2),
+                gbytes=round(s.gbytes_mean, 4),
+                gbytes_ci95=round(s.gbytes_ci95, 4),
+                makespan_s=round(s.makespan_mean, 5),
+                steals=round(s.steals_mean, 1),
+            )
+            rows.append(row)
+            print(
+                f"  {fig} {kernel} gpus={n_gpus} {label:12s} "
+                f"{row['gflops']:8.1f} GF (±{row['gflops_ci95']}) "
+                f"{row['gbytes']:7.3f} GB (±{row['gbytes_ci95']})",
+                flush=True,
+            )
+    with out_path.open("w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=list(rows[0].keys()))
+        w.writeheader()
+        w.writerows(rows)
+    return rows
+
+
+def emit_csv_lines(rows: List[dict]) -> None:
+    """Skeleton contract: ``name,us_per_call,derived`` lines on stdout."""
+    for r in rows:
+        name = f"{r['fig']}/{r['kernel']}/{r['strategy']}/gpus{r['n_gpus']}"
+        us = r["makespan_s"] * 1e6
+        print(f"{name},{us:.1f},gflops={r['gflops']};gbytes={r['gbytes']}")

@@ -1,0 +1,26 @@
+"""Fig. 1 — impact of the affinity control parameter alpha on Cholesky
+(DPOTRF), matrix 8192x8192: performance and transfers vs #GPUs, for several
+alpha values, with and without communication prediction."""
+from __future__ import annotations
+
+from repro.core import DADA
+
+from .common import bench_settings, emit_csv_lines, sweep
+
+ALPHAS = [0.0, 0.25, 0.5, 0.75, 1.0]
+
+
+def main() -> list:
+    runs, gpus = bench_settings()
+    strategies = {}
+    for a in ALPHAS:
+        strategies[f"dada({a:g})"] = lambda a=a: DADA(alpha=a)
+    for a in ALPHAS:
+        strategies[f"dada({a:g})+cp"] = lambda a=a: DADA(alpha=a, use_cp=True)
+    rows = sweep("fig1_alpha_sweep", "cholesky", strategies, runs, gpus)
+    emit_csv_lines(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Compare dry-run variants for the §Perf hillclimbing log.
+
+  PYTHONPATH=src python -m benchmarks.perf_compare \
+      results/dryrun/kimi-k2-1t-a32b__train_4k__pod1.json \
+      results/dryrun/kimi-k2-1t-a32b__train_4k__pod1__moechunks.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+from repro.analysis.roofline import analyse_record, fmt_s
+
+
+def row(path: str):
+    rec = json.loads(Path(path).read_text())
+    r = analyse_record(rec)
+    if r is None:
+        raise SystemExit(f"{path}: status={rec.get('status')}")
+    return rec, r
+
+
+def main(argv=None) -> None:
+    argv = argv or sys.argv[1:]
+    base_p, var_p = argv[0], argv[1]
+    brec, b = row(base_p)
+    vrec, v = row(var_p)
+    print(f"cell: {b.arch} x {b.shape} x {b.mesh}")
+    print(f"{'term':12s} {'before':>12s} {'after':>12s} {'delta':>8s}")
+    for name, x, y in [
+        ("compute", b.compute_s, v.compute_s),
+        ("memory", b.memory_s, v.memory_s),
+        ("collective", b.collective_s, v.collective_s),
+        ("step(max)", b.step_s, v.step_s),
+    ]:
+        d = (y - x) / x * 100 if x else 0.0
+        print(f"{name:12s} {fmt_s(x):>12s} {fmt_s(y):>12s} {d:+7.1f}%")
+    print(f"{'MFU_est':12s} {b.mfu_est*100:11.2f}% {v.mfu_est*100:11.2f}%")
+    for kind in ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                 "collective-permute"):
+        x = brec["collective_bytes_per_device"].get(kind, 0.0)
+        y = vrec["collective_bytes_per_device"].get(kind, 0.0)
+        if x or y:
+            print(f"  {kind:20s} {x/1e9:10.2f} GB -> {y/1e9:10.2f} GB")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Roofline report over all dry-run cells (single-pod table per spec;
+multi-pod rows appended for the pod-axis collective comparison).
+
+Run after ``python -m repro.launch.dryrun``:
+  PYTHONPATH=src python -m benchmarks.roofline
+"""
+from __future__ import annotations
+
+import csv
+from pathlib import Path
+
+from repro.analysis.roofline import load_rows, table
+
+RESULTS = Path(__file__).resolve().parent.parent / "results"
+
+
+def main() -> None:
+    rows = load_rows(RESULTS / "dryrun", mesh="pod1")
+    print(table(rows))
+    out = RESULTS / "roofline.csv"
+    with out.open("w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(
+            ["arch", "shape", "mesh", "chips", "compute_s", "memory_s",
+             "collective_s", "bottleneck", "mfu_est", "model_flops",
+             "analytic_flops", "hlo_flops_raw", "useful_ratio"]
+        )
+        for r in rows + load_rows(RESULTS / "dryrun", mesh="pod2"):
+            w.writerow(
+                [r.arch, r.shape, r.mesh, r.chips, r.compute_s, r.memory_s,
+                 r.collective_s, r.bottleneck, round(r.mfu_est, 4),
+                 r.model_flops, r.analytic_flops, r.hlo_flops_raw,
+                 round(r.useful_ratio, 4)]
+            )
+    print(f"\nwrote {out}")
+    # hillclimb candidates
+    if rows:
+        worst = min(rows, key=lambda r: r.mfu_est)
+        coll = max(rows, key=lambda r: r.collective_s / max(r.step_s, 1e-12))
+        print(f"\nworst MFU_est      : {worst.arch} x {worst.shape} ({worst.mfu_est*100:.1f}%)")
+        print(f"most collective-bnd: {coll.arch} x {coll.shape} "
+              f"({coll.collective_s/max(coll.step_s,1e-12)*100:.0f}% of step)")
+
+
+if __name__ == "__main__":
+    main()

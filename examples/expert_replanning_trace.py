@@ -1,0 +1,71 @@
+"""Dynamic expert re-planning under routing drift (paper §6's robustness
+question, answered at LM scale).
+
+Simulates 50 "training windows" of a kimi-shaped MoE layer whose routing
+distribution drifts (expert popularity random-walks). Every window the
+runtime re-plans expert placement; we compare policies over the whole trace:
+
+  * static round-robin (never move),
+  * re-balance greedily every window (alpha=0: pure balance, ignores where
+    weights live),
+  * DADA(alpha=1.0): balance + affinity to the current placement.
+
+Metrics accumulated over the trace: total expert-weight movement (bytes
+proxy) and mean load imbalance — the paper's transfer/performance
+compromise, now across *time*.
+
+Run:  PYTHONPATH=src python examples/expert_replanning_trace.py
+"""
+import sys
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.dist.sched_bridge import plan_expert_placement
+
+G, E, WINDOWS = 16, 384, 50
+rng = np.random.default_rng(0)
+
+# drifting routing popularity (log-space random walk)
+logpop = rng.normal(0, 1.0, E)
+traces = []
+for _ in range(WINDOWS):
+    logpop = logpop + rng.normal(0, 0.25, E)
+    traces.append(np.exp(logpop))
+
+rr = np.arange(E) % G
+
+
+def imbalance(mass, assign):
+    loads = np.bincount(assign, weights=mass, minlength=G)
+    return loads.max() / mass.sum() * G - 1.0
+
+
+results = {}
+for label, alpha, replan in [
+    ("static-rr", None, False),
+    ("rebalance(a=0)", 0.0, True),
+    ("dada(a=0.25)", 0.25, True),
+    ("dada(a=0.5)", 0.5, True),
+    ("dada(a=0.75)", 0.75, True),
+    ("dada(a=1)", 1.0, True),
+]:
+    assign = rr.copy()
+    moved_total = 0
+    imbs = []
+    for mass in traces:
+        if replan:
+            pl = plan_expert_placement(mass, G, prev_assignment=assign, alpha=alpha)
+            moved_total += pl.moved_experts
+            assign = pl.assignment
+        imbs.append(imbalance(mass, assign))
+    results[label] = (moved_total, float(np.mean(imbs)))
+    print(f"{label:16s} weights moved: {moved_total:5d}   "
+          f"mean load imbalance: {np.mean(imbs)*100:6.1f}%")
+
+mv_bal, imb_bal = results["rebalance(a=0)"]
+mv_mid, imb_mid = results["dada(a=0.5)"]
+print(f"\nalpha traces the movement/balance frontier: alpha=0.5 reaches "
+      f"{imb_mid*100:.1f}% imbalance (pure balance: {imb_bal*100:.1f}%) while "
+      f"moving {mv_bal/max(mv_mid,1):.1f}x fewer weights; alpha=1 never moves "
+      f"— the paper's affinity compromise, sustained under drift.")

@@ -1,0 +1,36 @@
+"""Dual approximation (paper §3.2) as a pipeline-stage partitioner.
+
+Partitions jamba's 32 heterogeneous layers (Mamba / attention / MoE mix)
+into pipeline stages using per-layer analytic costs from the roofline
+model — the guess-and-check λ binary search from DADA's balance phase.
+
+Run:  PYTHONPATH=src python examples/pipeline_partition.py
+"""
+import sys
+sys.path.insert(0, "src")
+
+from repro.analysis.flops import (
+    _attn_flops_per_tok, _mamba_flops_per_tok, _mlp_flops_per_tok,
+    _moe_flops_per_tok,
+)
+from repro.configs.registry import get_config
+from repro.dist.sched_bridge import partition_layers, stage_loads
+
+# gemma-7b: uniform blocks but a 256k-vocab unembedding that loads the
+# last stage — the case where equal-depth cuts are wrong
+cfg = get_config("gemma-7b")
+layer = _attn_flops_per_tok(cfg, 2048) + _mlp_flops_per_tok(cfg)
+costs = [layer / 1e6] * cfg.n_layers
+costs[0] += 2 * cfg.d_model * cfg.vocab / 1e6 * 0.1   # embed lookup (cheap)
+costs[-1] += 2 * cfg.d_model * cfg.vocab / 1e6        # lm head matmul
+
+print(f"gemma-7b: {cfg.n_layers} layers + vocab head, per-stage-unit cost "
+      f"{min(costs):.0f}-{max(costs):.0f} MFLOP/tok")
+for k in (2, 4, 8):
+    starts = partition_layers(costs, k)
+    loads = stage_loads(costs, starts)
+    naive = [sum(costs[i * len(costs) // k:(i + 1) * len(costs) // k]) for i in range(k)]
+    print(f"  {k} stages: cuts at {starts}")
+    print(f"    dual-approx max load {max(loads):8.0f}  vs equal-depth cut "
+          f"{max(naive):8.0f}  (imbalance {max(loads)/ (sum(costs)/k) - 1:+.1%} vs "
+          f"{max(naive)/(sum(costs)/k) - 1:+.1%})")

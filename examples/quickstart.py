@@ -1,0 +1,37 @@
+"""Quickstart: the paper's scheduling framework in 30 lines.
+
+Builds a tile-Cholesky task DAG, schedules it with HEFT and DADA on the
+paper's 12-CPU + 8-GPU machine model, executes the DADA schedule with real
+JAX tile kernels, and verifies the numerics.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+
+from repro.configs.paper_machine import paper_machine
+from repro.core import DADA, make_strategy, run_simulation
+from repro.linalg import tiles as T
+from repro.linalg.cholesky import cholesky_graph
+from repro.linalg.execute import execute_schedule
+
+N, TILE = 1024, 128
+NT = N // TILE
+
+machine = paper_machine(n_gpus=4)
+graph = cholesky_graph(NT, TILE)
+print(f"Cholesky {N}x{N}: {len(graph)} tasks, {graph.n_edges} edges")
+
+for strat in [make_strategy("heft"), DADA(alpha=0.5, use_cp=True), make_strategy("ws")]:
+    res = run_simulation(cholesky_graph(NT, TILE, with_fns=False), machine, strat, seed=0)
+    print(f"  {res.strategy:12s} {res.gflops:7.1f} GFLOPS  "
+          f"{res.gbytes*1e3:7.1f} MB moved  {res.n_steals} steals")
+
+# execute the affinity schedule for real and check the factorization
+a = T.random_spd(N, seed=0, dtype=jnp.float32)
+res = run_simulation(cholesky_graph(NT, TILE, with_fns=False), machine, DADA(alpha=0.5), seed=0)
+store = execute_schedule(graph, T.split_tiles(a, TILE), res)
+L = jnp.tril(T.join_tiles(store, NT, TILE))
+err = float(jnp.abs(L @ L.T - a).max() / jnp.abs(a).max())
+print(f"DADA schedule executed on JAX: ||LL^T - A|| rel err = {err:.2e}")
+assert err < 1e-5
+print("OK")

@@ -1,0 +1,195 @@
+"""Analytic FLOP / byte accounting per (arch x shape) cell.
+
+Why analytic: XLA's ``cost_analysis()`` counts while-loop bodies ONCE
+(verified in tests/test_roofline.py), so any scanned model (layer stacks,
+microbatch accumulation, SSM/xLSTM recurrences) is undercounted by the trip
+count. The roofline therefore uses these closed-form counts as the compute/
+memory terms, reports the raw HLO numbers alongside, and cross-checks the
+two on scan-free lowerings.
+
+Conventions: 1 MAC = 2 FLOPs; causal attention scores cost S_ctx/2 per
+query on average during train/prefill and S_ctx per query at decode.
+Train multiplier = 4x forward (fwd + 2x bwd + 1x remat recompute when
+cfg.remat) — the standard accounting.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import ShapeSpec
+
+
+def _attn_flops_per_tok(cfg: ModelConfig, ctx: float) -> float:
+    d, H, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    if cfg.mla is not None:
+        m = cfg.mla
+        qk = m.qk_nope_dim + m.qk_rope_dim
+        proj = 2 * (
+            d * m.q_lora_rank
+            + m.q_lora_rank * H * qk
+            + d * (m.kv_lora_rank + m.qk_rope_dim)
+            + m.kv_lora_rank * H * (m.qk_nope_dim + m.v_head_dim)
+            + H * m.v_head_dim * d
+        )
+        scores = 2 * H * (qk + m.v_head_dim) * ctx
+        return proj + scores
+    proj = 2 * d * (H * hd + 2 * Hkv * hd) + 2 * H * hd * d
+    scores = 2 * H * hd * ctx * 2  # QK^T + PV
+    return proj + scores
+
+
+def _mlp_flops_per_tok(cfg: ModelConfig) -> float:
+    mult = 3 if cfg.act in ("silu", "geglu") else 2
+    return 2 * mult * cfg.d_model * cfg.d_ff
+
+
+def _moe_flops_per_tok(cfg: ModelConfig) -> float:
+    m = cfg.moe
+    return 2 * cfg.d_model * m.n_experts + m.top_k * 2 * 3 * cfg.d_model * m.d_ff
+
+
+def _mamba_flops_per_tok(cfg: ModelConfig) -> float:
+    d = cfg.d_model
+    din = cfg.mamba_expand * d
+    N = cfg.mamba_d_state
+    rank = max(1, d // 16)
+    return (
+        2 * d * 2 * din  # in_proj
+        + 2 * cfg.mamba_d_conv * din
+        + 2 * din * (rank + 2 * N)
+        + 2 * rank * din
+        + 8 * din * N  # scan update + readout
+        + 2 * din * d  # out_proj
+    )
+
+
+def _mlstm_flops_per_tok(cfg: ModelConfig) -> float:
+    d = cfg.d_model
+    din = 2 * d
+    H = cfg.n_heads
+    hd = din // H
+    return (
+        2 * d * 2 * din  # up
+        + 3 * 2 * din * din  # q,k,v
+        + 8 * H * hd * hd  # C update + C q readout
+        + 2 * din * din  # o proj
+        + 2 * din * d  # down
+    )
+
+
+def _slstm_flops_per_tok(cfg: ModelConfig) -> float:
+    d = cfg.d_model
+    return 2 * d * 4 * d + 2 * d * 4 * d + 2 * d * d + 20 * d
+
+
+def forward_flops_per_tok(cfg: ModelConfig, ctx: float) -> float:
+    """Decoder-stack forward FLOPs for one token with context ``ctx``."""
+    total = 0.0
+    for i in range(cfg.n_layers):
+        kind = cfg.block_pattern[i % cfg.period]
+        if kind == "attn":
+            total += _attn_flops_per_tok(cfg, ctx)
+        elif kind == "mamba":
+            total += _mamba_flops_per_tok(cfg)
+        elif kind == "mlstm":
+            total += _mlstm_flops_per_tok(cfg)
+        elif kind == "slstm":
+            total += _slstm_flops_per_tok(cfg)
+        if kind in ("attn", "mamba"):
+            if cfg.moe is not None and (i % cfg.period) % cfg.moe.every == cfg.moe.every - 1:
+                total += _moe_flops_per_tok(cfg)
+            else:
+                total += _mlp_flops_per_tok(cfg)
+    return total
+
+
+@dataclass
+class CellCost:
+    flops: float  # best-estimate executed FLOPs for the whole step
+    hbm_bytes: float  # best-estimate HBM traffic for the whole step
+    model_flops: float  # 6*N_active*D headline
+    notes: str = ""
+
+
+def cell_cost(cfg: ModelConfig, shape: ShapeSpec, micro_batches: int = 1) -> CellCost:
+    B, S = shape.global_batch, shape.seq_len
+    P = cfg.frontend_tokens if cfg.family in ("vlm", "audio") else 0
+    pbytes = {"float32": 4, "bfloat16": 2}[cfg.param_dtype]
+    n_params = cfg.params_count()
+
+    if shape.kind == "train":
+        toks = B * S
+        fwd = toks * (forward_flops_per_tok(cfg, S / 2) + 2 * cfg.d_model * cfg.vocab)
+        if cfg.enc_layers:
+            enc = toks * cfg.enc_layers * (
+                _attn_flops_per_tok(cfg, S / 2) + _mlp_flops_per_tok(cfg)
+            )
+            fwd += enc + toks * cfg.n_layers * _attn_flops_per_tok(cfg, S / 2)  # cross
+        mult = 4.0 if cfg.remat else 3.0
+        flops = fwd * mult
+        # params read fwd+bwd per microbatch, grads written once per micro,
+        # optimizer read/write m,v (fp32) + params once per step
+        hbm = n_params * pbytes * (2 * micro_batches + 1) + n_params * 4 * 5
+        # activations: rough 14 bytes/token/layer-d (bf16 remat residuals)
+        hbm += toks * cfg.d_model * (cfg.n_layers + cfg.enc_layers) * 4
+        model_flops = 6 * cfg.active_params_count() * toks
+        return CellCost(flops, hbm, model_flops)
+
+    if shape.kind == "prefill":
+        toks = B * S
+        flops = toks * forward_flops_per_tok(cfg, S / 2) + B * 2 * cfg.d_model * cfg.vocab
+        if cfg.enc_layers:
+            flops += toks * cfg.enc_layers * (
+                _attn_flops_per_tok(cfg, S / 2) + _mlp_flops_per_tok(cfg)
+            ) + toks * cfg.n_layers * _attn_flops_per_tok(cfg, S / 2)
+        hbm = n_params * pbytes + toks * cfg.d_model * cfg.n_layers * 2
+        model_flops = 2 * cfg.active_params_count() * toks
+        return CellCost(flops, hbm, model_flops)
+
+    # decode: one token against a cache of length S
+    toks = B
+    flops = toks * (forward_flops_per_tok(cfg, S) + 2 * cfg.d_model * cfg.vocab)
+    if cfg.enc_layers:
+        # cross-attention K/V recomputed from encoder memory (baseline)
+        flops += toks * cfg.n_layers * _attn_flops_per_tok(cfg, S)
+        flops += B * S * cfg.n_layers * 2 * 2 * cfg.d_model * cfg.n_kv_heads * cfg.hd
+    # params: MoE decode touches min(B*top_k, E) experts per moe layer
+    active_param_bytes = n_params * pbytes
+    if cfg.moe is not None:
+        m = cfg.moe
+        n_moe = sum(
+            1 for i in range(cfg.n_layers)
+            if cfg.block_pattern[i % cfg.period] in ("attn", "mamba")
+            and (i % cfg.period) % m.every == m.every - 1
+        )
+        expert_bytes = 3 * cfg.d_model * m.d_ff * pbytes
+        touched = min(B * m.top_k, m.n_experts)
+        active_param_bytes = (
+            n_params - n_moe * m.n_experts * 3 * cfg.d_model * m.d_ff
+        ) * pbytes + n_moe * touched * expert_bytes
+    hbm = active_param_bytes + cache_bytes(cfg, B, S) * 1.0 + toks * cfg.d_model * cfg.n_layers * 8
+    model_flops = 2 * cfg.active_params_count() * toks
+    return CellCost(flops, hbm, model_flops)
+
+
+def cache_bytes(cfg: ModelConfig, B: int, S: int) -> float:
+    """Total decode-cache bytes (read once per decode step)."""
+    cbytes = {"float32": 4, "bfloat16": 2}[cfg.compute_dtype]
+    total = 0.0
+    for i in range(cfg.n_layers):
+        kind = cfg.block_pattern[i % cfg.period]
+        if kind == "attn":
+            if cfg.mla is not None:
+                total += B * S * (cfg.mla.kv_lora_rank + cfg.mla.qk_rope_dim) * cbytes
+            else:
+                total += 2 * B * S * cfg.n_kv_heads * cfg.hd * cbytes
+        elif kind == "mamba":
+            total += B * cfg.mamba_expand * cfg.d_model * cfg.mamba_d_state * 4
+        elif kind == "mlstm":
+            din = 2 * cfg.d_model
+            total += B * cfg.n_heads * (din // cfg.n_heads) ** 2 * 4
+        elif kind == "slstm":
+            total += 4 * B * cfg.d_model * 4
+    return total

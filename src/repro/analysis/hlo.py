@@ -1,0 +1,168 @@
+"""Post-optimization HLO parsing: collective bytes with while-loop trip
+multipliers.
+
+``compiled.as_text()`` gives the SPMD-partitioned module where collectives
+(all-reduce / all-gather / reduce-scatter / all-to-all / collective-permute)
+appear with *per-device* operand shapes. Collectives inside a ``while`` body
+execute once per trip, so we recover each loop's trip count from its
+condition computation (the ``iter < N`` constant) and multiply.
+
+Validated against unrolled lowerings in tests/test_roofline.py.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_OPS = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"\b([a-z]+\d*(?:e\d+m\d+(?:fn)?)?)\[([\d,]*)\]")
+# header like: "%region_0.1_spmd (param: (s32[], f32[...])) -> (...) {"
+# (nested parens in the arg list, hence the greedy middle)
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%([\w\.\-]+)\s*\(.*->.*\{\s*$")
+_CALL_ATTR = re.compile(r"(?:body|condition|to_apply|called_computations=\{)[=]?%?([\w\.\-]+)")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclass
+class Computation:
+    name: str
+    lines: List[str] = field(default_factory=list)
+    while_calls: List[Tuple[str, str]] = field(default_factory=list)  # (body, cond)
+    other_calls: List[str] = field(default_factory=list)
+
+
+def parse_computations(hlo_text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        m = _COMP_HDR.match(line) if (line and not line.startswith(" ")) else None
+        if m is None and stripped.endswith("{") and "->" in stripped and not line.startswith(" "):
+            m = _COMP_HDR.match(stripped)
+        if m:
+            cur = Computation(m.group(1))
+            comps[cur.name] = cur
+            continue
+        if cur is None or not stripped:
+            continue
+        cur.lines.append(stripped)
+        if " while(" in stripped or stripped.startswith("while("):
+            body = re.search(r"body=%?([\w\.\-]+)", stripped)
+            cond = re.search(r"condition=%?([\w\.\-]+)", stripped)
+            if body and cond:
+                cur.while_calls.append((body.group(1), cond.group(1)))
+        else:
+            for cm in re.finditer(r"(?:to_apply|calls)=%?([\w\.\-]+)", stripped):
+                cur.other_calls.append(cm.group(1))
+            fm = re.search(r"fusion\(.*?\), kind=\w+, calls=%?([\w\.\-]+)", stripped)
+            if fm:
+                cur.other_calls.append(fm.group(1))
+    return comps
+
+
+def trip_count(cond: Computation) -> int:
+    """Largest s32/u32 scalar constant in the loop condition (the bound of
+    the canonical ``iter < N`` compare)."""
+    best = 1
+    for line in cond.lines:
+        for m in re.finditer(r"constant\((\d+)\)", line):
+            v = int(m.group(1))
+            if 1 < v <= 10_000_000:
+                best = max(best, v)
+    return best
+
+
+def _entry_name(comps: Dict[str, Computation], hlo_text: str) -> Optional[str]:
+    m = re.search(r"^ENTRY\s+%?([\w\.\-]+)", hlo_text, re.M)
+    if m:
+        return m.group(1)
+    return next(iter(comps)) if comps else None
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device collective operand bytes by op kind, loop-trip adjusted."""
+    comps = parse_computations(hlo_text)
+    entry = _entry_name(comps, hlo_text)
+    mult: Dict[str, float] = {}
+
+    def visit(name: str, m: float) -> None:
+        if name not in comps:
+            return
+        # a computation may be reached multiple times; accumulate the
+        # largest multiplier (call sites dominate)
+        if mult.get(name, 0) >= m:
+            return
+        mult[name] = m
+        c = comps[name]
+        for body, cond in c.while_calls:
+            trips = trip_count(comps[cond]) if cond in comps else 1
+            visit(body, m * trips)
+            visit(cond, m * trips)
+        for callee in c.other_calls:
+            visit(callee, m)
+
+    if entry:
+        visit(entry, 1.0)
+
+    out = {k: 0.0 for k in COLLECTIVE_OPS}
+    out["total"] = 0.0
+    for name, comp in comps.items():
+        m = mult.get(name, 1.0)
+        for line in comp.lines:
+            for op in COLLECTIVE_OPS:
+                # def line: "%x = f32[..]{..} all-reduce(%y), replica_groups=..."
+                token = None
+                for t in (f" {op}(", f" {op}-start("):
+                    if t in line:
+                        token = t
+                        break
+                if token is None:
+                    continue
+                head = line.split(token, 1)[0]  # result tuple lives here
+                result_bytes = sum(
+                    _shape_bytes(sm.group(1), sm.group(2))
+                    for sm in _SHAPE_RE.finditer(head)
+                )
+                # per-device wire bytes by op semantics
+                wire = result_bytes
+                gm = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+                group_size = int(gm.group(2)) if gm else 0
+                if op == "reduce-scatter" and group_size:
+                    wire = result_bytes * group_size  # operand is G x result
+                elif op == "all-reduce":
+                    wire = 2.0 * result_bytes  # ring: reduce-scatter + gather
+                if "_promoted" in line and " f32[" in head + " ":
+                    # CPU backend promotes bf16 reductions to f32
+                    # (to_apply=%add.*_promoted); TPU reduces in bf16 —
+                    # count at native width
+                    wire *= 0.5
+                out[op] += wire * m
+                out["total"] += wire * m
+                break
+    return out
+
+
+def count_op(hlo_text: str, opname: str) -> int:
+    return len(re.findall(rf"\b{re.escape(opname)}\(", hlo_text))

@@ -1,0 +1,119 @@
+"""Three-term roofline from the dry-run artifacts (TPU v5e targets).
+
+  compute term    = FLOPs / (chips x 197 TFLOP/s bf16)
+  memory term     = HBM bytes / (chips x 819 GB/s)
+  collective term = per-device collective wire bytes / 50 GB/s-link
+
+FLOPs/bytes use the analytic accounting (analysis/flops.py) because XLA's
+cost_analysis counts while-loop bodies once (tests/test_roofline.py); the
+raw HLO numbers are carried alongside for reference. Collective bytes come
+from the compiled HLO with loop-trip multipliers (analysis/hlo.py).
+
+The estimated step time is max(terms) (perfect-overlap ideal); the score
+metric is MFU_est = model_flops / (chips x peak x step_time) — the fraction
+of the chips' roofline the step actually converts into model FLOPs.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s / chip
+LINK_BW = 50e9  # bytes/s / ICI link
+
+
+@dataclass
+class RooflineRow:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    mfu_est: float
+    model_flops: float
+    analytic_flops: float
+    hlo_flops_raw: float
+    useful_ratio: float  # model / analytic
+    note: str
+
+    @property
+    def step_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+
+_NOTES = {
+    "compute": "compute-bound: reduce recompute (remat policy) or shrink the"
+    " useful-ratio gap (fusion, avoiding fp32 matmuls)",
+    "memory": "HBM-bound: shrink resident traffic (KV-cache quantization,"
+    " bf16 states, fewer param re-reads per microbatch)",
+    "collective": "ICI-bound: cut wire bytes (affinity expert placement,"
+    " gradient compression, reduce-scatter instead of all-reduce)",
+}
+
+
+def analyse_record(rec: Dict) -> Optional[RooflineRow]:
+    if rec.get("status") != "ok":
+        return None
+    chips = rec["n_devices"]
+    comp = rec["analytic_flops"] / (chips * PEAK_FLOPS)
+    mem = rec["analytic_hbm_bytes"] / (chips * HBM_BW)
+    coll_dev = rec["collective_bytes_per_device"]["total"]
+    coll = coll_dev / LINK_BW
+    terms = {"compute": comp, "memory": mem, "collective": coll}
+    bottleneck = max(terms, key=terms.get)
+    step = max(terms.values())
+    mfu = rec["model_flops"] / (chips * PEAK_FLOPS * step) if step > 0 else 0.0
+    return RooflineRow(
+        arch=rec["arch"],
+        shape=rec["shape"],
+        mesh=rec["mesh"],
+        chips=chips,
+        compute_s=comp,
+        memory_s=mem,
+        collective_s=coll,
+        bottleneck=bottleneck,
+        mfu_est=mfu,
+        model_flops=rec["model_flops"],
+        analytic_flops=rec["analytic_flops"],
+        hlo_flops_raw=rec["hlo_flops_raw"],
+        useful_ratio=rec["model_flops"] / max(rec["analytic_flops"], 1.0),
+        note=_NOTES[bottleneck],
+    )
+
+
+def load_rows(results_dir: Path, mesh: str = "pod1") -> List[RooflineRow]:
+    rows = []
+    for p in sorted(results_dir.glob(f"*__{mesh}.json")):
+        row = analyse_record(json.loads(p.read_text()))
+        if row is not None:
+            rows.append(row)
+    return rows
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:7.2f}s "
+    if x >= 1e-3:
+        return f"{x*1e3:7.2f}ms"
+    return f"{x*1e6:7.1f}us"
+
+
+def table(rows: List[RooflineRow]) -> str:
+    hdr = (
+        f"{'arch':22s} {'shape':12s} {'compute':9s} {'memory':9s} "
+        f"{'collective':10s} {'bound':10s} {'MFU_est':8s} {'useful':7s}"
+    )
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        lines.append(
+            f"{r.arch:22s} {r.shape:12s} {fmt_s(r.compute_s)} {fmt_s(r.memory_s)} "
+            f"{fmt_s(r.collective_s)}  {r.bottleneck:10s} {r.mfu_est*100:6.1f}% "
+            f"{r.useful_ratio*100:6.1f}%"
+        )
+    return "\n".join(lines)

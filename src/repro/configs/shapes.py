@@ -1,0 +1,27 @@
+"""Assigned input shapes (the same 4 for every LM arch)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def applicable(arch_cfg, shape: ShapeSpec) -> tuple[bool, str]:
+    """Whether a (arch, shape) cell runs; reason if skipped (DESIGN.md §6)."""
+    if shape.name == "long_500k" and not arch_cfg.subquadratic:
+        return False, "long_500k skipped: pure full-attention arch (quadratic)"
+    return True, ""

@@ -1,0 +1,30 @@
+"""Core: the paper's contribution — data-flow scheduling with affinity.
+
+Exports the task-graph model, machine/performance models, the XKaapi-like
+simulator, and the scheduling strategies (HEFT, DADA, dual approximation,
+work stealing).
+"""
+from .affinity import AFFINITY_FUNCTIONS
+from .api import Summary, make_strategy, run_many, run_simulation
+from .dada import DADA, DualApprox
+from .dag import Access, DataObject, Mode, Task, TaskGraph
+from .heft import HEFT
+from .machine import (
+    HOST_MEM,
+    LinkModel,
+    MachineModel,
+    Resource,
+    ResourceClass,
+    make_machine,
+)
+from .perfmodel import HistoryPerfModel, Residency, TransferModel
+from .simulator import SimResult, Simulator, Strategy
+from .worksteal import WorkSteal
+
+__all__ = [
+    "AFFINITY_FUNCTIONS", "Access", "DADA", "DataObject", "DualApprox",
+    "HEFT", "HOST_MEM", "HistoryPerfModel", "LinkModel", "MachineModel",
+    "Mode", "Residency", "Resource", "ResourceClass", "SimResult",
+    "Simulator", "Strategy", "Summary", "Task", "TaskGraph", "TransferModel",
+    "WorkSteal", "make_machine", "make_strategy", "run_many", "run_simulation",
+]

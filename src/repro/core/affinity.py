@@ -1,0 +1,82 @@
+"""Affinity score functions (paper §3.2 + the "other affinity functions"
+future-work direction).
+
+The paper's definition: "they were computed using the amount of data updated
+by each task. For instance, a task that writes or modifies a data stored on a
+resource R has a high score and is prone to be scheduled on R."
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+from .dag import Task
+from .machine import Resource
+from .perfmodel import Residency
+
+AffinityFn = Callable[[Task, Resource, Residency], float]
+
+
+def score_write_resident(task: Task, resource: Resource, residency: Residency) -> float:
+    """Paper default: bytes of W/RW accesses whose data is resident on R."""
+    return float(
+        sum(
+            d.size_bytes
+            for d in task.writes
+            if residency.is_resident(d.name, resource.mem)
+        )
+    )
+
+
+def score_all_resident(task: Task, resource: Resource, residency: Residency) -> float:
+    """Beyond-paper variant: count all resident accessed bytes, writes double.
+
+    (The conclusion calls for studying other affinity functions.)
+    """
+    s = 0.0
+    seen = set()
+    for a in task.accesses:
+        if a.data.name in seen:
+            continue
+        seen.add(a.data.name)
+        if residency.is_resident(a.data.name, resource.mem):
+            w = 2.0 if a.mode.writes else 1.0
+            s += w * a.data.size_bytes
+    return s
+
+
+def score_missing_bytes(task: Task, resource: Resource, residency: Residency) -> float:
+    """Beyond-paper variant: negative of bytes that would need transferring."""
+    missing = 0
+    for d in task.reads:
+        if not residency.is_resident(d.name, resource.mem):
+            missing += d.size_bytes * residency.transfer_hops(d.name, resource.mem)
+    return -float(missing)
+
+
+def score_accel_write(task: Task, resource: Resource, residency: Residency) -> float:
+    """Paper score restricted to accelerator memories (the default here).
+
+    Host-resident data confers no affinity: every CPU reaches host memory at
+    zero transfer cost, so "the data is on the host" carries no locality
+    signal — the point of affinity is avoiding PCIe/ICI transfers
+    (adaptation recorded in DESIGN.md §2).
+    """
+    if not resource.is_accelerator:
+        return 0.0
+    return score_write_resident(task, resource, residency)
+
+
+def score_accel_all(task: Task, resource: Resource, residency: Residency) -> float:
+    """Accelerator-only, reads + writes (writes weighted double)."""
+    if not resource.is_accelerator:
+        return 0.0
+    return score_all_resident(task, resource, residency)
+
+
+AFFINITY_FUNCTIONS: Dict[str, AffinityFn] = {
+    "write_resident": score_write_resident,
+    "all_resident": score_all_resident,
+    "missing_bytes": score_missing_bytes,
+    "accel_write": score_accel_write,
+    "accel_all": score_accel_all,
+}

@@ -1,0 +1,112 @@
+"""Public API of the scheduling core."""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from .dag import TaskGraph
+from .dada import DADA, DualApprox
+from .heft import HEFT
+from .machine import MachineModel
+from .simulator import SimResult, Simulator, Strategy
+from .worksteal import WorkSteal
+
+
+def make_strategy(name: str, **kwargs) -> Strategy:
+    """Build a strategy from a short spec.
+
+    ``heft`` | ``ws`` | ``dual`` | ``dada`` (kwargs: alpha, use_cp, affinity).
+    """
+    name = name.lower()
+    if name == "heft":
+        return HEFT()
+    if name == "ws":
+        return WorkSteal()
+    if name == "dual":
+        return DualApprox(**kwargs)
+    if name == "dada":
+        return DADA(**kwargs)
+    raise ValueError(f"unknown strategy {name!r}")
+
+
+def run_simulation(
+    graph: TaskGraph,
+    machine: MachineModel,
+    strategy,
+    seed: int = 0,
+    noise: float = 0.03,
+) -> SimResult:
+    if isinstance(strategy, str):
+        strategy = make_strategy(strategy)
+    sim = Simulator(graph, machine, strategy, seed=seed, noise=noise)
+    return sim.run()
+
+
+@dataclass
+class Summary:
+    """Mean + 95% confidence interval over repeated runs (paper methodology:
+    >=30 runs per configuration, mean and 95% CI reported)."""
+
+    strategy: str
+    n: int
+    gflops_mean: float
+    gflops_ci95: float
+    gbytes_mean: float
+    gbytes_ci95: float
+    makespan_mean: float
+    steals_mean: float
+
+    def row(self) -> str:
+        return (
+            f"{self.strategy},{self.n},{self.gflops_mean:.2f},{self.gflops_ci95:.2f},"
+            f"{self.gbytes_mean:.3f},{self.gbytes_ci95:.3f},{self.makespan_mean:.4f},"
+            f"{self.steals_mean:.1f}"
+        )
+
+
+def run_many(
+    graph_factory,
+    machine: MachineModel,
+    strategy_factory,
+    n_runs: int = 30,
+    noise: float = 0.03,
+    base_seed: int = 1234,
+) -> Summary:
+    """Run ``n_runs`` seeded simulations and summarize (mean, 95% CI).
+
+    ``graph_factory`` and ``strategy_factory`` are callables so each run gets
+    fresh graph/strategy state (the history model calibrates within a run).
+    """
+    gf: List[float] = []
+    gb: List[float] = []
+    mk: List[float] = []
+    st: List[float] = []
+    name = ""
+    for i in range(n_runs):
+        graph = graph_factory()
+        strat = strategy_factory()
+        name = strat.name
+        res = run_simulation(graph, machine, strat, seed=base_seed + i, noise=noise)
+        gf.append(res.gflops)
+        gb.append(res.gbytes)
+        mk.append(res.makespan)
+        st.append(res.n_steals)
+
+    def ci95(xs: Sequence[float]) -> float:
+        if len(xs) < 2:
+            return 0.0
+        return 1.96 * float(np.std(xs, ddof=1)) / math.sqrt(len(xs))
+
+    return Summary(
+        strategy=name,
+        n=n_runs,
+        gflops_mean=float(np.mean(gf)),
+        gflops_ci95=ci95(gf),
+        gbytes_mean=float(np.mean(gb)),
+        gbytes_ci95=ci95(gb),
+        makespan_mean=float(np.mean(mk)),
+        steals_mean=float(np.mean(st)),
+    )

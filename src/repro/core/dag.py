@@ -1,0 +1,195 @@
+"""Data-flow task graph, XKaapi-style.
+
+Tasks declare typed accesses (READ / WRITE / RW) on named data objects.
+Dependencies are derived from access modes in *program order*, exactly as a
+data-flow runtime does it:
+
+  RAW: a reader depends on the last writer of the data.
+  WAW: a writer depends on the last writer.
+  WAR: a writer depends on every reader since the last writer.
+
+This mirrors XKaapi semantics ("parallelism is explicit while the detection
+of synchronizations is implicit").
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+
+class Mode(enum.Enum):
+    R = "r"
+    W = "w"
+    RW = "rw"
+
+    @property
+    def reads(self) -> bool:
+        return self in (Mode.R, Mode.RW)
+
+    @property
+    def writes(self) -> bool:
+        return self in (Mode.W, Mode.RW)
+
+
+@dataclass(frozen=True)
+class DataObject:
+    """A named, sized piece of data (e.g. a matrix tile)."""
+
+    name: str
+    size_bytes: int
+    # Free-form payload handle used by executors (e.g. tile coordinates).
+    meta: Any = None
+
+    def __repr__(self) -> str:  # keep logs short
+        return f"Data({self.name},{self.size_bytes}B)"
+
+
+@dataclass(frozen=True)
+class Access:
+    data: DataObject
+    mode: Mode
+
+
+@dataclass
+class Task:
+    """A unit of work with data accesses and per-kind cost metadata."""
+
+    tid: int
+    kind: str
+    accesses: Tuple[Access, ...]
+    flops: float = 0.0
+    # Optional: callable executed by the JAX executor; signature
+    # fn(*input_arrays) -> tuple of output arrays matching write accesses.
+    fn: Optional[Callable] = None
+    tag: Any = None
+
+    @property
+    def reads(self) -> Tuple[DataObject, ...]:
+        return tuple(a.data for a in self.accesses if a.mode.reads)
+
+    @property
+    def writes(self) -> Tuple[DataObject, ...]:
+        return tuple(a.data for a in self.accesses if a.mode.writes)
+
+    @property
+    def read_bytes(self) -> int:
+        return sum(d.size_bytes for d in self.reads)
+
+    @property
+    def write_bytes(self) -> int:
+        return sum(d.size_bytes for d in self.writes)
+
+    def __repr__(self) -> str:
+        return f"Task({self.tid}:{self.kind})"
+
+
+class TaskGraph:
+    """A DAG built by appending tasks in program order (data-flow semantics)."""
+
+    def __init__(self) -> None:
+        self.tasks: List[Task] = []
+        self.succ: Dict[int, List[int]] = {}
+        self.pred: Dict[int, List[int]] = {}
+        # data-flow bookkeeping (program-order construction state)
+        self._last_writer: Dict[str, int] = {}
+        self._readers_since_write: Dict[str, List[int]] = {}
+
+    # ------------------------------------------------------------------
+    def add_task(
+        self,
+        kind: str,
+        accesses: Sequence[Tuple[DataObject, Mode]],
+        flops: float = 0.0,
+        fn: Optional[Callable] = None,
+        tag: Any = None,
+    ) -> Task:
+        tid = len(self.tasks)
+        task = Task(
+            tid=tid,
+            kind=kind,
+            accesses=tuple(Access(d, m) for d, m in accesses),
+            flops=flops,
+            fn=fn,
+            tag=tag,
+        )
+        self.tasks.append(task)
+        self.succ[tid] = []
+        self.pred[tid] = []
+
+        deps: set = set()
+        for acc in task.accesses:
+            key = acc.data.name
+            if acc.mode.reads:
+                lw = self._last_writer.get(key)
+                if lw is not None:
+                    deps.add(lw)  # RAW
+            if acc.mode.writes:
+                lw = self._last_writer.get(key)
+                if lw is not None:
+                    deps.add(lw)  # WAW
+                for r in self._readers_since_write.get(key, ()):  # WAR
+                    deps.add(r)
+        deps.discard(tid)
+        for d in sorted(deps):
+            self.succ[d].append(tid)
+            self.pred[tid].append(d)
+
+        # update construction state *after* dep computation
+        for acc in task.accesses:
+            key = acc.data.name
+            if acc.mode.writes:
+                self._last_writer[key] = tid
+                self._readers_since_write[key] = []
+            if acc.mode.reads and not acc.mode.writes:
+                self._readers_since_write.setdefault(key, []).append(tid)
+        return task
+
+    # ------------------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self.tasks)
+
+    @property
+    def n_edges(self) -> int:
+        return sum(len(s) for s in self.succ.values())
+
+    def roots(self) -> List[Task]:
+        return [t for t in self.tasks if not self.pred[t.tid]]
+
+    def data_objects(self) -> Dict[str, DataObject]:
+        out: Dict[str, DataObject] = {}
+        for t in self.tasks:
+            for a in t.accesses:
+                out[a.data.name] = a.data
+        return out
+
+    def total_flops(self) -> float:
+        return sum(t.flops for t in self.tasks)
+
+    def topo_order(self) -> List[int]:
+        """Kahn topological order (deterministic: ready set kept sorted)."""
+        indeg = {t.tid: len(self.pred[t.tid]) for t in self.tasks}
+        ready = sorted(tid for tid, d in indeg.items() if d == 0)
+        order: List[int] = []
+        import heapq
+
+        heapq.heapify(ready)
+        while ready:
+            tid = heapq.heappop(ready)
+            order.append(tid)
+            for s in self.succ[tid]:
+                indeg[s] -= 1
+                if indeg[s] == 0:
+                    heapq.heappush(ready, s)
+        if len(order) != len(self.tasks):
+            raise ValueError("cycle detected in task graph")
+        return order
+
+    def critical_path_length(self, cost: Callable[[Task], float]) -> float:
+        """Longest path using per-task cost (a makespan lower bound)."""
+        dist: Dict[int, float] = {}
+        for tid in self.topo_order():
+            t = self.tasks[tid]
+            base = max((dist[p] for p in self.pred[tid]), default=0.0)
+            dist[tid] = base + cost(t)
+        return max(dist.values(), default=0.0)

@@ -1,0 +1,54 @@
+"""HEFT — Heterogeneous Earliest Finish Time, XKaapi variant (paper §3.1).
+
+Both phases run inside ``activate`` (Algorithm 1):
+  * task prioritizing: ready tasks sorted by decreasing GPU speedup
+    ``S_i = p_i^CPU / p_i^GPU`` (the paper replaces upward-rank with this),
+  * worker selection: each task goes to the worker with the earliest
+    predicted finish time, *always* including predicted transfer time
+    ("HEFT strategy always computes the earliest finish time of a task
+    taking into account the time to transfer data", §4.1).
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+from .dag import Task
+from .simulator import Simulator, Strategy
+
+
+class HEFT(Strategy):
+    name = "heft"
+    allow_steal = False
+    owner_lifo = False
+
+    def place(self, sim: Simulator, ready: List[Task], src: Optional[int]) -> None:
+        machine = sim.machine
+        cpus = machine.cpus
+        gpus = machine.gpus
+        cpu_cls = cpus[0].cls if cpus else gpus[0].cls
+        gpu_cls = gpus[0].cls if gpus else cpu_cls
+
+        # --- task prioritizing: decreasing speedup -----------------------
+        scored = []
+        for t in ready:
+            p_cpu = sim.model.predict(t, cpu_cls)
+            p_gpu = sim.model.predict(t, gpu_cls)
+            s = p_cpu / p_gpu if p_gpu > 0 else 1.0
+            scored.append((-s, t.tid, t))
+        scored.sort()
+
+        # --- worker selection: earliest finish time ----------------------
+        for _, _, t in scored:
+            best_eft = float("inf")
+            best_rid = machine.resources[0].rid
+            for r in machine.resources:
+                start = max(sim.now, sim.load_ts[r.rid])
+                xfer = sim.transfer_model.task_input_transfer_time(
+                    t, r, sim.residency
+                )
+                eft = start + xfer + sim.model.predict(t, r.cls)
+                if eft < best_eft - 1e-15:
+                    best_eft = eft
+                    best_rid = r.rid
+            sim.load_ts[best_rid] = best_eft
+            sim.push(t, best_rid)

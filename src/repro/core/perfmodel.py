@@ -1,0 +1,122 @@
+"""Performance models: history-based task timing + bandwidth transfer model.
+
+Paper §2.3: "Our task prediction relies on an history-based model, and
+transfer time estimation is based on asymptotic bandwidth". The runtime
+observes real durations and corrects erroneous predictions online (StarPU
+does the same). Here the *observed* durations come from the simulator's
+ground-truth rates (with seeded noise), so the model genuinely calibrates
+at runtime instead of being an oracle.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+from .dag import Task
+from .machine import MachineModel, Resource, ResourceClass
+
+
+@dataclass
+class HistoryPerfModel:
+    """Per (task kind, resource class) running mean of observed durations.
+
+    Before any observation the model falls back to a static estimate
+    ``flops / class_rate`` — the same bootstrap StarPU/XKaapi use before
+    calibration kicks in.
+    """
+
+    _stats: Dict[Tuple[str, str], Tuple[int, float]] = field(default_factory=dict)
+
+    def predict(self, task: Task, cls: ResourceClass) -> float:
+        key = (task.kind, cls.name)
+        st = self._stats.get(key)
+        if st is not None and st[0] > 0:
+            return st[1]
+        return cls.exec_time(task.kind, task.flops)
+
+    def observe(self, task: Task, cls: ResourceClass, duration: float) -> None:
+        key = (task.kind, cls.name)
+        n, mean = self._stats.get(key, (0, 0.0))
+        n += 1
+        mean += (duration - mean) / n
+        self._stats[key] = (n, mean)
+
+    def n_observations(self) -> int:
+        return sum(n for n, _ in self._stats.values())
+
+
+@dataclass
+class TransferModel:
+    """Asymptotic-bandwidth estimator for host<->device transfers.
+
+    ``predict`` ignores contention (a *prediction*, as in the paper — the
+    simulator's ground truth does model switch contention, which is exactly
+    the modeling error the paper discusses).
+    """
+
+    bandwidth: float
+    latency: float = 1e-5
+
+    def time(self, nbytes: int) -> float:
+        if nbytes <= 0:
+            return 0.0
+        return self.latency + nbytes / self.bandwidth
+
+    def task_input_transfer_time(
+        self,
+        task: Task,
+        resource: Resource,
+        residency: "Residency",
+    ) -> float:
+        """Predicted time to bring missing inputs of ``task`` to ``resource``."""
+        total = 0.0
+        for d in task.reads:
+            if not residency.is_resident(d.name, resource.mem):
+                hops = residency.transfer_hops(d.name, resource.mem)
+                total += hops * self.time(d.size_bytes)
+        return total
+
+
+class Residency:
+    """Tracks which memory spaces hold a *valid* copy of each data object.
+
+    Writes invalidate all other copies (MSI-like, matching a runtime that
+    manages coherent transfers).
+    """
+
+    def __init__(self) -> None:
+        self._where: Dict[str, set] = {}
+
+    def is_resident(self, name: str, mem: int) -> bool:
+        return mem in self._where.get(name, set())
+
+    def locations(self, name: str) -> set:
+        return set(self._where.get(name, set()))
+
+    def has_any(self, name: str) -> bool:
+        return bool(self._where.get(name))
+
+    def transfer_hops(self, name: str, dst_mem: int) -> int:
+        """1 hop if a copy is on host or dst is host; 2 hops for GPU->GPU
+        (device -> host -> device, the paper-era PCIe path)."""
+        from .machine import HOST_MEM
+
+        locs = self._where.get(name, set())
+        if not locs or dst_mem in locs:
+            return 0
+        if dst_mem == HOST_MEM or HOST_MEM in locs:
+            return 1
+        return 2
+
+    def add_copy(self, name: str, mem: int) -> None:
+        self._where.setdefault(name, set()).add(mem)
+
+    def write(self, name: str, mem: int) -> None:
+        self._where[name] = {mem}
+
+    def initialize(self, names, mem: int) -> None:
+        for n in names:
+            self.write(n, mem)
+
+    def bytes_resident(self, mem: int, sizes: Dict[str, int]) -> int:
+        return sum(sz for n, sz in sizes.items() if self.is_resident(n, mem))

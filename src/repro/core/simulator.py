@@ -1,0 +1,343 @@
+"""Event-driven XKaapi-like runtime simulator.
+
+Reproduces the paper's execution flow (§2.1-2.2):
+  * each worker owns a local ready-queue (pop / push / steal),
+  * completing a task triggers ``activate`` on its newly-ready successors —
+    this is where the scheduling strategy runs,
+  * idle workers emit steal requests to a randomly selected victim (enabled
+    per strategy; HEFT/DADA place every ready task explicitly),
+  * transfers to/from accelerator memories are prefetched when a task is
+    pushed, overlap with computation, and contend on shared PCIe-switch
+    links (FIFO per link group),
+  * the runtime observes real (noisy) durations and feeds the history-based
+    performance model, which therefore calibrates online (§2.3).
+
+Determinism: all randomness flows through one seeded numpy Generator.
+"""
+from __future__ import annotations
+
+import heapq
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .dag import Task, TaskGraph
+from .machine import HOST_MEM, MachineModel, Resource
+from .perfmodel import HistoryPerfModel, Residency, TransferModel
+
+
+@dataclass
+class ScheduledInterval:
+    tid: int
+    rid: int
+    start: float
+    end: float
+
+
+@dataclass
+class SimResult:
+    makespan: float
+    total_bytes: int
+    n_transfers: int
+    n_steals: int
+    busy: Dict[int, float]
+    intervals: List[ScheduledInterval]
+    strategy: str
+    total_flops: float
+
+    @property
+    def gflops(self) -> float:
+        if self.makespan <= 0:
+            return 0.0
+        return self.total_flops / self.makespan / 1e9
+
+    @property
+    def gbytes(self) -> float:
+        return self.total_bytes / 1e9
+
+
+class Strategy:
+    """Scheduling strategy interface: placement happens in ``activate``."""
+
+    name = "base"
+    allow_steal = False
+    owner_lifo = False
+
+    def init(self, sim: "Simulator") -> None:  # pragma: no cover - default
+        pass
+
+    def place(
+        self, sim: "Simulator", ready: List[Task], src: Optional[int]
+    ) -> None:  # pragma: no cover - interface
+        raise NotImplementedError
+
+
+class _Worker:
+    __slots__ = ("rid", "queue", "running", "run_start", "blocked_on")
+
+    def __init__(self, rid: int) -> None:
+        self.rid = rid
+        self.queue: deque = deque()
+        self.running: Optional[Task] = None
+        self.run_start: float = 0.0
+        self.blocked_on: int = 0  # pending input transfers for head task
+
+
+class Simulator:
+    def __init__(
+        self,
+        graph: TaskGraph,
+        machine: MachineModel,
+        strategy: Strategy,
+        seed: int = 0,
+        noise: float = 0.03,
+        transfer_model: Optional[TransferModel] = None,
+    ) -> None:
+        self.graph = graph
+        self.machine = machine
+        self.strategy = strategy
+        self.rng = np.random.default_rng(seed)
+        self.noise = noise
+        self.model = HistoryPerfModel()
+        self.transfer_model = transfer_model or TransferModel(
+            bandwidth=machine.link.bandwidth, latency=machine.link.latency
+        )
+        self.residency = Residency()
+        # all application data starts in host memory (paper setup)
+        self.residency.initialize(graph.data_objects().keys(), HOST_MEM)
+
+        self.now = 0.0
+        self._events: List[Tuple[float, int, str, Any]] = []
+        self._seq = 0
+        self.workers = [_Worker(r.rid) for r in machine.resources]
+        # shared predicted-completion time-stamps (paper §2.3)
+        self.load_ts = [0.0] * len(self.workers)
+        self._n_unfinished_preds = {
+            t.tid: len(graph.pred[t.tid]) for t in graph.tasks
+        }
+        self._done = [False] * len(graph)
+        self._start_times: Dict[int, float] = {}
+        # transfers: (name, dst_mem) -> completion time (in flight)
+        self._inflight: Dict[Tuple[str, int], float] = {}
+        self._link_free: Dict[int, float] = {}
+        self._waiting: Dict[Tuple[str, int], List[int]] = {}  # -> worker rids
+        # metrics
+        self.total_bytes = 0
+        self.n_transfers = 0
+        self.n_steals = 0
+        self.busy = {r.rid: 0.0 for r in machine.resources}
+        self.intervals: List[ScheduledInterval] = []
+        self._n_done = 0
+
+    # ------------------------------------------------------------------
+    # event plumbing
+    def _post(self, t: float, kind: str, payload: Any) -> None:
+        self._seq += 1
+        heapq.heappush(self._events, (t, self._seq, kind, payload))
+
+    # ------------------------------------------------------------------
+    # transfers
+    def _gpu_link_group(self, mem: int) -> Optional[int]:
+        for r in self.machine.resources:
+            if r.mem == mem and r.is_accelerator:
+                return r.link
+        return None
+
+    def _one_hop(self, nbytes: int, group: Optional[int], t: float) -> float:
+        """Serialize the transfer on its link group (FIFO = shared bandwidth)."""
+        start = max(t, self._link_free.get(group, 0.0)) if group is not None else t
+        dur = self.machine.link.time(nbytes)
+        done = start + dur
+        if group is not None:
+            self._link_free[group] = done
+        self.total_bytes += nbytes
+        self.n_transfers += 1
+        return done
+
+    def request_transfer(self, name: str, size: int, dst_mem: int) -> Optional[float]:
+        """Ensure a valid copy of ``name`` will exist at ``dst_mem``.
+
+        Returns the completion time, or None if already resident.
+        """
+        if self.residency.is_resident(name, dst_mem):
+            return None
+        key = (name, dst_mem)
+        if key in self._inflight:
+            return self._inflight[key]
+        locs = self.residency.locations(name)
+        if not locs:
+            raise RuntimeError(f"no valid copy of {name} anywhere")
+        t = self.now
+        if HOST_MEM in locs and dst_mem != HOST_MEM:
+            done = self._one_hop(size, self._gpu_link_group(dst_mem), t)
+        elif dst_mem == HOST_MEM:
+            src = next(iter(sorted(locs)))
+            done = self._one_hop(size, self._gpu_link_group(src), t)
+        else:
+            # GPU -> host -> GPU (two hops, paper-era PCIe path)
+            src = next(iter(sorted(locs)))
+            host_key = (name, HOST_MEM)
+            if host_key in self._inflight:
+                mid = self._inflight[host_key]
+            else:
+                mid = self._one_hop(size, self._gpu_link_group(src), t)
+                self._inflight[host_key] = mid
+                self._post(mid, "xfer", (name, HOST_MEM))
+            done = self._one_hop(size, self._gpu_link_group(dst_mem), mid)
+        self._inflight[key] = done
+        self._post(done, "xfer", (name, dst_mem))
+        return done
+
+    def _prefetch(self, task: Task, rid: int) -> None:
+        mem = self.machine.by_id(rid).mem
+        for d in task.reads:
+            self.request_transfer(d.name, d.size_bytes, mem)
+
+    # ------------------------------------------------------------------
+    # queue operations (pop / push / steal)
+    def push(self, task: Task, rid: int) -> None:
+        """Push ``task`` onto worker ``rid``'s queue (any worker may push
+        into any other worker's queue, §2.2)."""
+        w = self.workers[rid]
+        w.queue.append(task)
+        self._prefetch(task, rid)
+        self._try_start(w)
+
+    def _steal(self, thief: _Worker) -> bool:
+        # Eligible victims: a backlog of >=2, or >=1 while actually running.
+        # (A lone task whose transfers are in flight is not stolen — the
+        # copy is already on its way to the victim's memory.)
+        victims = [
+            w
+            for w in self.workers
+            if w.rid != thief.rid
+            and (len(w.queue) >= 2 or (len(w.queue) >= 1 and w.running is not None))
+        ]
+        if not victims:
+            return False
+        v = victims[int(self.rng.integers(len(victims)))]
+        task = v.queue.popleft()  # thief takes the oldest task
+        self.n_steals += 1
+        thief.queue.append(task)
+        self._prefetch(task, thief.rid)
+        return True
+
+    # ------------------------------------------------------------------
+    def _true_duration(self, task: Task, res: Resource) -> float:
+        base = res.cls.exec_time(task.kind, task.flops)
+        if self.noise > 0:
+            base *= float(np.exp(self.rng.normal(0.0, self.noise)))
+        return base
+
+    def _try_start(self, w: _Worker) -> None:
+        if w.running is not None or not w.queue:
+            return
+        res = self.machine.by_id(w.rid)
+        task = w.queue[0] if not self.strategy.owner_lifo else w.queue[-1]
+        # make sure inputs are (going to be) resident
+        missing = 0
+        for d in task.reads:
+            if not self.residency.is_resident(d.name, res.mem):
+                self.request_transfer(d.name, d.size_bytes, res.mem)
+                key = (d.name, res.mem)
+                self._waiting.setdefault(key, []).append(w.rid)
+                missing += 1
+        if missing:
+            w.blocked_on = missing
+            return
+        # pop + execute
+        if self.strategy.owner_lifo:
+            w.queue.pop()
+        else:
+            w.queue.popleft()
+        w.blocked_on = 0
+        dur = self._true_duration(task, res)
+        w.running = task
+        w.run_start = self.now
+        self._post(self.now + dur, "done", (w.rid, task.tid, dur))
+
+    # ------------------------------------------------------------------
+    def _complete(self, rid: int, tid: int, dur: float) -> None:
+        w = self.workers[rid]
+        res = self.machine.by_id(rid)
+        task = self.graph.tasks[tid]
+        assert w.running is task
+        w.running = None
+        self._done[tid] = True
+        self._n_done += 1
+        self.busy[rid] += dur
+        self.intervals.append(ScheduledInterval(tid, rid, w.run_start, self.now))
+        self.model.observe(task, res.cls, dur)
+        for d in task.writes:
+            self.residency.write(d.name, res.mem)
+            # invalidate any stale dedup entries for this data
+            for key in [k for k in self._inflight if k[0] == d.name]:
+                del self._inflight[key]
+        # load time-stamp correction (§2.3: runtime corrects predictions)
+        if not w.queue:
+            self.load_ts[rid] = self.now
+
+        newly_ready: List[Task] = []
+        for s in self.graph.succ[tid]:
+            self._n_unfinished_preds[s] -= 1
+            if self._n_unfinished_preds[s] == 0:
+                newly_ready.append(self.graph.tasks[s])
+        if newly_ready:
+            # the *activate* operation — where scheduling decisions happen
+            self.strategy.place(self, newly_ready, rid)
+        self._try_start(w)
+        self._steal_round()
+
+    def _steal_round(self) -> None:
+        if not self.strategy.allow_steal:
+            return
+        progress = True
+        while progress:
+            progress = False
+            for w in self.workers:
+                if w.running is None and not w.queue:
+                    if self._steal(w):
+                        self._try_start(w)
+                        progress = True
+
+    # ------------------------------------------------------------------
+    def run(self) -> SimResult:
+        self.strategy.init(self)
+        roots = self.graph.roots()
+        if roots:
+            self.strategy.place(self, roots, None)
+        self._steal_round()
+        while self._events:
+            t, _, kind, payload = heapq.heappop(self._events)
+            self.now = t
+            if kind == "done":
+                rid, tid, dur = payload
+                self._complete(rid, tid, dur)
+            elif kind == "xfer":
+                name, mem = payload
+                self._inflight.pop((name, mem), None)
+                self.residency.add_copy(name, mem)
+                for rid in self._waiting.pop((name, mem), []):
+                    w = self.workers[rid]
+                    if w.blocked_on > 0:
+                        w.blocked_on -= 1
+                        if w.blocked_on == 0:
+                            self._try_start(w)
+                self._steal_round()
+        if self._n_done != len(self.graph):
+            missing = [t.tid for t in self.graph.tasks if not self._done[t.tid]]
+            raise RuntimeError(
+                f"simulation stalled: {len(missing)} tasks unfinished, e.g. {missing[:5]}"
+            )
+        return SimResult(
+            makespan=self.now,
+            total_bytes=self.total_bytes,
+            n_transfers=self.n_transfers,
+            n_steals=self.n_steals,
+            busy=dict(self.busy),
+            intervals=self.intervals,
+            strategy=self.strategy.name,
+            total_flops=self.graph.total_flops(),
+        )

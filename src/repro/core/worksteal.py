@@ -1,0 +1,25 @@
+"""Locality-oblivious random work stealing (paper §4.3 "Comparison with
+work stealing scheduling algorithm").
+
+``activate`` pushes newly-ready tasks onto the completing worker's own queue
+(owner executes newest-first); idle workers steal the oldest task from a
+randomly selected victim. No performance or transfer model is used — the
+"model oblivious" baseline the paper discusses.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+from .dag import Task
+from .simulator import Simulator, Strategy
+
+
+class WorkSteal(Strategy):
+    name = "ws"
+    allow_steal = True
+    owner_lifo = True
+
+    def place(self, sim: Simulator, ready: List[Task], src: Optional[int]) -> None:
+        rid = src if src is not None else 0
+        for t in ready:
+            sim.push(t, rid)

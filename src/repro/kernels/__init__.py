@@ -1,0 +1,4 @@
+"""Pallas TPU kernels for the perf-critical compute layers."""
+from .ops import flash_attention, flash_decode, gemm_update, matmul
+
+__all__ = ["flash_attention", "flash_decode", "gemm_update", "matmul"]

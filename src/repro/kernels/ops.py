@@ -1,0 +1,10 @@
+"""jit'd public wrappers for the Pallas kernels (ref.py holds the oracles).
+
+On TPU call with interpret=False (default); tests and CPU validation use
+interpret=True, which executes the same kernel bodies in Python.
+"""
+from .flash_attention import flash_attention
+from .flash_decode import flash_decode
+from .tile_gemm import gemm_update, matmul
+
+__all__ = ["flash_attention", "flash_decode", "gemm_update", "matmul"]

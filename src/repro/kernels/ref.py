@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gemm_update_ref(c, a, b, *, alpha=-1.0, trans_b=False):
+    bb = b.T if trans_b else b
+    acc = c.astype(jnp.float32) + alpha * (
+        a.astype(jnp.float32) @ bb.astype(jnp.float32)
+    )
+    return acc.astype(c.dtype)
+
+
+def matmul_ref(a, b):
+    return (a.astype(jnp.float32) @ b.astype(jnp.float32)).astype(a.dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, scale=None):
+    """Reference attention. q,k,v: (heads, seq_q, d) / (kv_heads, seq_k, d).
+
+    GQA: q heads grouped over kv heads (heads % kv_heads == 0).
+    """
+    hq, sq, d = q.shape
+    hk, sk, _ = k.shape
+    assert hq % hk == 0
+    group = hq // hk
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    k = jnp.repeat(k, group, axis=0)
+    v = jnp.repeat(v, group, axis=0)
+    logits = jnp.einsum(
+        "hqd,hkd->hqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((sq, sk), dtype=bool), k=sk - sq)
+        logits = jnp.where(mask[None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("hqk,hkd->hqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, *, scale=None):
+    """One-token decode: q (heads, d), cache k/v (kv_heads, seq, d)."""
+    hq, d = q.shape
+    hk, s, _ = k.shape
+    group = hq // hk
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    k = jnp.repeat(k, group, axis=0)
+    v = jnp.repeat(v, group, axis=0)
+    logits = jnp.einsum("hd,hkd->hk", q.astype(jnp.float32), k.astype(jnp.float32))
+    p = jax.nn.softmax(logits * scale, axis=-1)
+    return jnp.einsum("hk,hkd->hd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def flash_decode_ref(q, k, v, length, *, scale=None):
+    """Batched single-token decode oracle. q (B,Hq,hd); k,v (B,S,Hkv,hd)."""
+    B, Hq, hd = q.shape
+    _, S, Hkv, _ = k.shape
+    group = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / (hd**0.5)
+    kr = jnp.repeat(k, group, axis=2)  # (B,S,Hq,hd)
+    vr = jnp.repeat(v, group, axis=2)
+    logits = jnp.einsum(
+        "bhd,bshd->bhs", q.astype(jnp.float32), kr.astype(jnp.float32)
+    ) * scale
+    mask = jnp.arange(S)[None, None, :] < length
+    logits = jnp.where(mask, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhs,bshd->bhd", p, vr.astype(jnp.float32))
+    return out.astype(q.dtype)

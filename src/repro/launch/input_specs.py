@@ -1,0 +1,62 @@
+"""ShapeDtypeStruct stand-ins for every model input — shardable, weak-type
+correct, zero allocation. The dry-run lowers against these."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import ShapeSpec
+from repro.models.layers import _dtype
+from repro.models.transformer import cache_init, init_params
+from repro.optim.adamw import adamw_init
+
+SDS = jax.ShapeDtypeStruct
+
+
+def batch_sds(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, SDS]:
+    """Inputs for a train/prefill step."""
+    B, S = shape.global_batch, shape.seq_len
+    out: Dict[str, SDS] = {}
+    if cfg.family == "audio":
+        out["frontend"] = SDS((B, S, cfg.frontend_dim), jnp.float32)
+        out["tokens"] = SDS((B, S), jnp.int32)
+    elif cfg.family == "vlm":
+        P = cfg.frontend_tokens
+        out["frontend"] = SDS((B, P, cfg.frontend_dim), jnp.float32)
+        out["tokens"] = SDS((B, S - P), jnp.int32)
+    else:
+        out["tokens"] = SDS((B, S), jnp.int32)
+    return out
+
+
+def decode_sds(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """Inputs for a serve (decode) step: 1 new token + caches of seq_len."""
+    B, S = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(lambda: cache_init(cfg, B, S))
+    out = {
+        "tokens": SDS((B, 1), jnp.int32),
+        "pos": SDS((), jnp.int32),
+        "cache": cache,
+    }
+    if cfg.family == "audio":
+        out["enc_out"] = SDS((B, S, cfg.d_model), _dtype(cfg.compute_dtype))
+    return out
+
+
+def params_sds(cfg: ModelConfig):
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def opt_sds(params):
+    return jax.eval_shape(adamw_init, params)
+
+
+def tree_bytes(tree) -> int:
+    return sum(
+        int(jnp.dtype(l.dtype).itemsize) * int(jnp.prod(jnp.array(l.shape)))
+        if l.shape else int(jnp.dtype(l.dtype).itemsize)
+        for l in jax.tree.leaves(tree)
+    )

@@ -1,0 +1,87 @@
+"""Tile Cholesky (PLASMA DPOTRF, right-looking) as a data-flow task graph.
+
+Task kinds / flop counts (tile size b):
+  potrf  b^3/3      trsm  b^3      syrk  b^3      gemm  2 b^3
+Total ~ n^3/3 for an n x n matrix — the standard Cholesky count the paper's
+GFLOPS plots use.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dag import Mode, TaskGraph
+
+from .tiles import make_tile_objects
+
+
+def _potrf(a_kk):
+    return (jnp.linalg.cholesky(a_kk),)
+
+
+def _trsm(l_kk, a_ik):
+    # A[i,k] <- A[i,k] * L[k,k]^{-T}
+    x = jax.scipy.linalg.solve_triangular(l_kk, a_ik.T, lower=True)
+    return (x.T,)
+
+
+def _syrk(a_ik, a_ii):
+    return (a_ii - a_ik @ a_ik.T,)
+
+
+def _gemm(a_ik, a_jk, a_ij):
+    return (a_ij - a_ik @ a_jk.T,)
+
+
+def cholesky_graph(
+    n_tiles: int, tile: int = 512, itemsize: int = 8, with_fns: bool = True
+) -> TaskGraph:
+    """Build the tile-Cholesky DAG for an (n_tiles*tile)^2 matrix."""
+    g = TaskGraph()
+    A = make_tile_objects("A", n_tiles, tile, itemsize)
+    b3 = float(tile) ** 3
+    fns = with_fns
+    for k in range(n_tiles):
+        g.add_task(
+            "potrf",
+            [(A[(k, k)], Mode.RW)],
+            flops=b3 / 3.0,
+            fn=_potrf if fns else None,
+            tag=("potrf", k),
+        )
+        for i in range(k + 1, n_tiles):
+            g.add_task(
+                "trsm",
+                [(A[(k, k)], Mode.R), (A[(i, k)], Mode.RW)],
+                flops=b3,
+                fn=_trsm if fns else None,
+                tag=("trsm", i, k),
+            )
+        for i in range(k + 1, n_tiles):
+            g.add_task(
+                "syrk",
+                [(A[(i, k)], Mode.R), (A[(i, i)], Mode.RW)],
+                flops=b3,
+                fn=_syrk if fns else None,
+                tag=("syrk", i, k),
+            )
+            for j in range(k + 1, i):
+                g.add_task(
+                    "gemm",
+                    [
+                        (A[(i, k)], Mode.R),
+                        (A[(j, k)], Mode.R),
+                        (A[(i, j)], Mode.RW),
+                    ],
+                    flops=2.0 * b3,
+                    fn=_gemm if fns else None,
+                    tag=("gemm", i, j, k),
+                )
+    return g
+
+
+def reference_flops(n: int) -> float:
+    return n**3 / 3.0

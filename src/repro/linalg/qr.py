@@ -1,0 +1,106 @@
+"""Tile QR (PLASMA DGEQRF, flat reduction tree) as a data-flow task graph.
+
+Task kinds / flop counts (tile size b):
+  geqrt  4/3 b^3   ormqr  2 b^3   tsqrt  10/3 b^3   tsmqr  4 b^3
+Leading-order total ~ 4 n^3 / 3 (tsmqr dominates), matching the tile-QR
+flop count used in the paper's GFLOPS plots.
+
+Execution note: the executable bodies store explicit Q factors in the T-tile
+slots (T[k,k]: b x b, T[i,k]: 2b x 2b) instead of LAPACK's compact-WY (V,T)
+pair — numerically identical, simpler in JAX. The *scheduler* still sees
+PLASMA's T-tile sizes (ib x b) so simulated transfer volumes stay faithful.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.dag import DataObject, Mode, TaskGraph
+
+from .tiles import make_tile_objects, tile_name
+
+
+def _geqrt(a_kk):
+    q, r = jnp.linalg.qr(a_kk, mode="complete")
+    return (r, q)  # writes: A[k,k] <- R, T[k,k] <- Q
+
+
+def _ormqr(q_kk, a_kj):
+    return (q_kk.T @ a_kj,)
+
+
+def _tsqrt(a_kk, a_ik):
+    b = a_kk.shape[0]
+    s = jnp.concatenate([a_kk, a_ik], axis=0)  # (2b, b)
+    q, r = jnp.linalg.qr(s, mode="complete")  # q: (2b,2b) r: (2b,b)
+    return (r[:b], jnp.zeros_like(a_ik), q)  # A[k,k]<-R, A[i,k]<-0, T[i,k]<-Q
+
+
+def _tsmqr(q_ik, a_kj, a_ij):
+    b = a_kj.shape[0]
+    s = jnp.concatenate([a_kj, a_ij], axis=0)
+    s = q_ik.T @ s
+    return (s[:b], s[b:])
+
+
+def qr_graph(
+    n_tiles: int,
+    tile: int = 512,
+    inner_block: int = 128,
+    itemsize: int = 8,
+    with_fns: bool = True,
+) -> TaskGraph:
+    g = TaskGraph()
+    A = make_tile_objects("A", n_tiles, tile, itemsize)
+    # T tiles: PLASMA stores ib x b blocks of the block reflectors
+    T = {
+        (i, k): DataObject(
+            name=tile_name("T", i, k),
+            size_bytes=inner_block * tile * itemsize,
+            meta=("T", i, k),
+        )
+        for i in range(n_tiles)
+        for k in range(n_tiles)
+    }
+    b3 = float(tile) ** 3
+    fns = with_fns
+    for k in range(n_tiles):
+        g.add_task(
+            "geqrt",
+            [(A[(k, k)], Mode.RW), (T[(k, k)], Mode.W)],
+            flops=4.0 * b3 / 3.0,
+            fn=_geqrt if fns else None,
+            tag=("geqrt", k),
+        )
+        for j in range(k + 1, n_tiles):
+            g.add_task(
+                "ormqr",
+                [(T[(k, k)], Mode.R), (A[(k, j)], Mode.RW)],
+                flops=2.0 * b3,
+                fn=_ormqr if fns else None,
+                tag=("ormqr", k, j),
+            )
+        for i in range(k + 1, n_tiles):
+            g.add_task(
+                "tsqrt",
+                [(A[(k, k)], Mode.RW), (A[(i, k)], Mode.RW), (T[(i, k)], Mode.W)],
+                flops=10.0 * b3 / 3.0,
+                fn=_tsqrt if fns else None,
+                tag=("tsqrt", i, k),
+            )
+            for j in range(k + 1, n_tiles):
+                g.add_task(
+                    "tsmqr",
+                    [
+                        (T[(i, k)], Mode.R),
+                        (A[(k, j)], Mode.RW),
+                        (A[(i, j)], Mode.RW),
+                    ],
+                    flops=4.0 * b3,
+                    fn=_tsmqr if fns else None,
+                    tag=("tsmqr", i, j, k),
+                )
+    return g
+
+
+def reference_flops(n: int) -> float:
+    return 4.0 * n**3 / 3.0

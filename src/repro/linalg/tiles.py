@@ -1,0 +1,72 @@
+"""Tiled-matrix helpers (PLASMA-style square tiles)."""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dag import DataObject
+
+
+def tile_name(label: str, i: int, j: int) -> str:
+    return f"{label}[{i},{j}]"
+
+
+def make_tile_objects(
+    label: str, n_tiles: int, tile: int, itemsize: int = 8
+) -> Dict[Tuple[int, int], DataObject]:
+    """DataObjects for an n_tiles x n_tiles tiled matrix."""
+    objs = {}
+    for i in range(n_tiles):
+        for j in range(n_tiles):
+            objs[(i, j)] = DataObject(
+                name=tile_name(label, i, j),
+                size_bytes=tile * tile * itemsize,
+                meta=(label, i, j),
+            )
+    return objs
+
+
+def split_tiles(a: jnp.ndarray, tile: int) -> Dict[str, jnp.ndarray]:
+    """Split a square matrix into named tiles A[i,j]."""
+    n = a.shape[0]
+    assert a.shape == (n, n) and n % tile == 0
+    nt = n // tile
+    out = {}
+    for i in range(nt):
+        for j in range(nt):
+            out[tile_name("A", i, j)] = a[
+                i * tile : (i + 1) * tile, j * tile : (j + 1) * tile
+            ]
+    return out
+
+
+def join_tiles(tiles: Dict[str, jnp.ndarray], nt: int, tile: int) -> jnp.ndarray:
+    rows = []
+    for i in range(nt):
+        rows.append(
+            jnp.concatenate([tiles[tile_name("A", i, j)] for j in range(nt)], axis=1)
+        )
+    return jnp.concatenate(rows, axis=0)
+
+
+def random_spd(n: int, seed: int = 0, dtype=jnp.float64) -> jnp.ndarray:
+    """Symmetric positive-definite test matrix."""
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((n, n))
+    spd = a @ a.T / n + np.eye(n) * n
+    return jnp.asarray(spd, dtype=dtype)
+
+
+def random_dd(n: int, seed: int = 0, dtype=jnp.float64) -> jnp.ndarray:
+    """Diagonally-dominant matrix (safe for no-pivot LU)."""
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((n, n))
+    a = a + np.eye(n) * (np.abs(a).sum(axis=1).max() + n)
+    return jnp.asarray(a, dtype=dtype)
+
+
+def random_dense(n: int, seed: int = 0, dtype=jnp.float64) -> jnp.ndarray:
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((n, n)), dtype=dtype)

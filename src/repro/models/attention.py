@@ -1,0 +1,173 @@
+"""GQA/MQA attention with KV cache, causal/bidirectional/cross variants.
+
+jnp einsum path is the default (lowerable on any backend, used by the
+dry-run); the Pallas flash kernel (kernels/flash_attention.py) is the
+TPU-executable hot path, validated against the same math in tests.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+from .rope import apply_rope
+
+
+def attn_init(key, d: int, n_heads: int, n_kv: int, hd: int, dtype) -> Dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(kq, (d, n_heads * hd), dtype),
+        "wk": dense_init(kk, (d, n_kv * hd), dtype),
+        "wv": dense_init(kv, (d, n_kv * hd), dtype),
+        "wo": dense_init(ko, (n_heads * hd, d), dtype),
+    }
+
+
+_CHUNK_Q = 1024
+
+
+def _repeat_kv(k, group: int):
+    """GQA: expand KV heads to match Q heads. A plain repeat keeps the Q-head
+    dim cleanly shardable over 'model' (reshaping H into (Hkv, group) breaks
+    SPMD propagation when Hkv < mesh model size — seen as involuntary
+    full-rematerialization in the dry run)."""
+    return jnp.repeat(k, group, axis=2) if group > 1 else k
+
+
+def _sdpa_block(q, k, v, *, causal: bool, q_offset, scale):
+    """q: (B,bq,H,hd); k,v: (B,Sk,H,hd) — exact softmax over full keys."""
+    logits = jnp.einsum(
+        "bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    if causal:
+        bq, sk = q.shape[1], k.shape[1]
+        qpos = q_offset + jnp.arange(bq)[:, None]
+        kpos = jnp.arange(sk)[None, :]
+        logits = jnp.where((kpos <= qpos)[None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def _sdpa(q, k, v, *, causal: bool, offset: int = 0):
+    """q: (B,Sq,H,hd); k,v: (B,Sk,Hkv,hd).
+
+    Long sequences scan over query chunks (flash-style O(Sq/chunk x Sk)
+    working set) — the jnp analogue of kernels/flash_attention.py; the
+    Pallas kernel is the TPU-executable twin of the same math.
+    """
+    B, Sq, H, hd = q.shape
+    _, Sk, Hkv, _ = k.shape
+    k = _repeat_kv(k, H // Hkv)
+    v = _repeat_kv(v, H // Hkv)
+    scale = 1.0 / (hd**0.5)
+    if Sq <= _CHUNK_Q:
+        return _sdpa_block(q, k, v, causal=causal, q_offset=offset, scale=scale)
+    nblk = Sq // _CHUNK_Q
+    assert Sq % _CHUNK_Q == 0, (Sq, _CHUNK_Q)
+
+    # dynamic_slice on the (unsharded) seq dim keeps batch/head shardings
+    # intact across chunks — reshaping/transposing the sharded tensor into a
+    # stacked scan input forces SPMD to reshard every iteration (§Perf log)
+    def one(acc, i):
+        qi = jax.lax.dynamic_slice_in_dim(q, i * _CHUNK_Q, _CHUNK_Q, axis=1)
+        o = _sdpa_block(
+            qi, k, v, causal=causal, q_offset=offset + i * _CHUNK_Q, scale=scale
+        )
+        acc = jax.lax.dynamic_update_slice_in_dim(acc, o, i * _CHUNK_Q, axis=1)
+        return acc, None
+
+    acc0 = jnp.zeros_like(q)
+    out, _ = jax.lax.scan(one, acc0, jnp.arange(nblk))
+    return out
+
+
+def attn_apply_kv(
+    params: Dict,
+    x: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    n_heads: int,
+    n_kv: int,
+    hd: int,
+) -> jnp.ndarray:
+    """Cross-attention against precomputed K/V (B,Sk,Hkv,hd) — the decode
+    fast path: K/V of the encoder memory are computed once per request, not
+    once per token (§Perf, seamless decode cell)."""
+    B, Sq, _ = x.shape
+    q = (x @ params["wq"]).reshape(B, Sq, n_heads, hd)
+    out = _sdpa(q, k, v, causal=False)
+    return out.reshape(B, Sq, n_heads * hd) @ params["wo"]
+
+
+def attn_apply(
+    params: Dict,
+    x: jnp.ndarray,
+    *,
+    n_heads: int,
+    n_kv: int,
+    hd: int,
+    rope_cos=None,
+    rope_sin=None,
+    rope_style: str = "full",
+    causal: bool = True,
+    cache: Optional[Dict] = None,
+    cache_pos: Optional[jnp.ndarray] = None,
+    kv_source: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """Self- or cross-attention.
+
+    cache: {"k","v"} of shape (B, S_cache, Hkv, hd). In decode mode
+    (x is (B,1,d)), the new K/V is written at ``cache_pos`` and attention
+    runs over the whole cache buffer with position masking.
+    ``kv_source``: encoder output for cross-attention (no cache update).
+    """
+    B, Sq, _ = x.shape
+    src = kv_source if kv_source is not None else x
+    q = (x @ params["wq"]).reshape(B, Sq, n_heads, hd)
+    k = (src @ params["wk"]).reshape(B, src.shape[1], n_kv, hd)
+    v = (src @ params["wv"]).reshape(B, src.shape[1], n_kv, hd)
+    if rope_cos is not None and kv_source is None:
+        # in decode mode the caller passes tables for the current position
+        q = apply_rope(q, rope_cos, rope_sin, rope_style)
+        k = apply_rope(k, rope_cos, rope_sin, rope_style)
+    new_cache = None
+    if cache is not None:
+        # decode: write the new K/V at cache_pos, attend over the buffer.
+        # Masked select, NOT dynamic_update_index: scattering at a traced
+        # index into a sequence-sharded cache makes SPMD gather the whole
+        # buffer (16 GB/step on chatglm decode — §Perf log); the select is
+        # elementwise and stays local on every shard.
+        assert Sq == 1, "cache path is single-token decode"
+        sel = (jnp.arange(cache["k"].shape[1]) == cache_pos)[None, :, None, None]
+        kbuf = jnp.where(sel, k.astype(cache["k"].dtype), cache["k"])
+        vbuf = jnp.where(sel, v.astype(cache["v"].dtype), cache["v"])
+        new_cache = {"k": kbuf, "v": vbuf}
+        Sk = kbuf.shape[1]
+        scale = 1.0 / (hd**0.5)
+        group = n_heads // n_kv
+        # decode uses the grouped-GQA einsum directly on the bf16 cache:
+        # repeat_kv here would materialize a group-x (16x for chatglm) f32
+        # copy of the whole cache (§Perf log); f32 only in the MXU
+        # accumulator via preferred_element_type
+        qg = q.reshape(B, Sq, n_kv, group, hd)
+        logits = jnp.einsum(
+            "bqhgd,bshd->bhgqs", qg, kbuf,
+            preferred_element_type=jnp.float32,
+        ) * scale
+        kpos = jnp.arange(Sk)[None, :]
+        qpos = cache_pos + jnp.arange(Sq)[:, None]
+        logits = jnp.where((kpos <= qpos)[None, None, None], logits, -1e30)
+        p = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum(
+            "bhgqs,bshd->bqhgd", p.astype(vbuf.dtype), vbuf,
+            preferred_element_type=jnp.float32,
+        )
+        out = out.reshape(B, Sq, n_heads, hd).astype(x.dtype)
+    else:
+        out = _sdpa(q, k, v, causal=causal and kv_source is None)
+    y = out.reshape(B, Sq, n_heads * hd) @ params["wo"]
+    return y, new_cache

@@ -1,0 +1,91 @@
+"""Shared layers: norms, MLPs, embeddings (pure-JAX param-dict style)."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+
+def _dtype(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16, "float16": jnp.float16}[name]
+
+
+def dense_init(key, shape, dtype, scale: float | None = None):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    if scale is None:
+        scale = 1.0 / (fan_in**0.5)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def rmsnorm_init(d: int, dtype) -> Dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    # variance reduced in f32, but x itself stays in its compute dtype: a
+    # full f32 copy of the residual stream would get fused into the TP
+    # all-reduces and double their wire bytes (§Perf log, iteration 3)
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * inv * params["scale"].astype(x.dtype)
+
+
+def layernorm_init(d: int, dtype) -> Dict:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = x32.mean(-1, keepdims=True)
+    var = ((x32 - mu) ** 2).mean(-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    mu = mu.astype(x.dtype)
+    return (x - mu) * inv * params["scale"].astype(x.dtype) + params["bias"].astype(x.dtype)
+
+
+def norm_init(kind: str, d: int, dtype):
+    return rmsnorm_init(d, dtype) if kind == "rmsnorm" else layernorm_init(d, dtype)
+
+
+def norm_apply(kind: str, params, x):
+    return rmsnorm(params, x) if kind == "rmsnorm" else layernorm(params, x)
+
+
+# ---------------------------------------------------------------------------
+def mlp_init(key, d: int, d_ff: int, act: str, dtype) -> Dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "w_up": dense_init(k1, (d, d_ff), dtype),
+        "w_down": dense_init(k2, (d_ff, d), dtype),
+    }
+    if act in ("silu", "geglu"):  # gated variants carry a gate projection
+        p["w_gate"] = dense_init(k3, (d, d_ff), dtype)
+    return p
+
+
+def mlp_apply(params, x, act: str):
+    up = x @ params["w_up"]
+    if act == "silu":
+        g = jax.nn.silu(x @ params["w_gate"])
+        h = g * up
+    elif act == "geglu":
+        g = jax.nn.gelu(x @ params["w_gate"], approximate=True)
+        h = g * up
+    else:
+        h = jax.nn.gelu(up, approximate=True)
+    return h @ params["w_down"]
+
+
+# ---------------------------------------------------------------------------
+def embed_init(key, vocab: int, d: int, dtype) -> Dict:
+    return {"table": dense_init(key, (vocab, d), dtype, scale=1.0)}
+
+
+def embed_apply(params, tokens):
+    return params["table"][tokens]
+
+
+def unembed_apply(params, x, tie_table=None):
+    w = tie_table if tie_table is not None else params["table"]
+    return x @ w.T.astype(x.dtype)

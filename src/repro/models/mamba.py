@@ -1,0 +1,110 @@
+"""Mamba (selective SSM) block — Jamba's sub-quadratic component.
+
+TPU adaptation: the CUDA selective-scan kernel becomes a ``jax.lax.scan``
+recurrence (decode/state-carrying exact form). The (B, S, d_inner, N)
+discretized tensors are never materialized: A_bar/B_bar are built per step
+inside the scan body, so the working set is the O(B * d_inner * N) state.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+from .recurrent import chunked_scan
+
+
+def mamba_init(key, d: int, *, expand: int, d_state: int, d_conv: int, dtype) -> Dict:
+    din = expand * d
+    dt_rank = max(1, d // 16)
+    ks = jax.random.split(key, 6)
+    return {
+        "w_in": dense_init(ks[0], (d, 2 * din), dtype),
+        "conv_w": dense_init(ks[1], (d_conv, din), dtype, scale=1.0 / d_conv),
+        "conv_b": jnp.zeros((din,), dtype),
+        "w_x": dense_init(ks[2], (din, dt_rank + 2 * d_state), dtype),
+        "w_dt": dense_init(ks[3], (dt_rank, din), dtype),
+        "dt_bias": jnp.zeros((din,), jnp.float32),
+        "a_log": jnp.log(
+            jnp.tile(jnp.arange(1, d_state + 1, dtype=jnp.float32), (din, 1))
+        ),
+        "d_skip": jnp.ones((din,), jnp.float32),
+        "w_out": dense_init(ks[4], (din, d), dtype),
+    }
+
+
+def _conv1d_causal(x, w, b):
+    """Depthwise causal conv. x: (B,S,din), w: (width,din)."""
+    width = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(width):  # width is 4 — unrolled taps
+        out = out + pad[:, i : i + x.shape[1]] * w[i]
+    return out + b
+
+
+def mamba_apply(
+    params: Dict,
+    x: jnp.ndarray,
+    *,
+    expand: int,
+    d_state: int,
+    d_conv: int,
+    state: Optional[Dict] = None,
+) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """x: (B,S,d). ``state`` = {"ssm": (B,din,N), "conv": (B,width-1,din)}
+    enables single-step decode; None runs the full sequence."""
+    B, S, d = x.shape
+    din = expand * d
+    dt_rank = max(1, d // 16)
+    xz = x @ params["w_in"]
+    xs, z = xz[..., :din], xz[..., din:]
+
+    if state is not None:
+        assert S == 1
+        conv_ctx = jnp.concatenate([state["conv"], xs], axis=1)  # (B,width,din)
+        new_conv = conv_ctx[:, 1:]
+        xc = (conv_ctx * params["conv_w"][None]).sum(axis=1, keepdims=True) + params["conv_b"]
+    else:
+        new_conv = None
+        xc = _conv1d_causal(xs, params["conv_w"], params["conv_b"])
+    xc = jax.nn.silu(xc)
+
+    proj = xc @ params["w_x"]  # (B,S,dt_rank+2N)
+    dt_r = proj[..., :dt_rank]
+    Bm = proj[..., dt_rank : dt_rank + d_state]
+    Cm = proj[..., dt_rank + d_state :]
+    dt = jax.nn.softplus(dt_r @ params["w_dt"] + params["dt_bias"])  # (B,S,din)
+    A = -jnp.exp(params["a_log"])  # (din, N)
+
+    def step(h, inp):
+        dt_t, b_t, c_t, x_t = inp  # (B,din) (B,N) (B,N) (B,din)
+        a_bar = jnp.exp(dt_t[..., None] * A[None])  # (B,din,N)
+        bx = (dt_t * x_t)[..., None] * b_t[:, None, :]  # (B,din,N)
+        h = a_bar * h + bx
+        y = (h * c_t[:, None, :]).sum(-1)  # (B,din)
+        return h, y
+
+    xs_f32 = xc.astype(jnp.float32)
+    seq = (
+        dt.astype(jnp.float32).swapaxes(0, 1),
+        Bm.astype(jnp.float32).swapaxes(0, 1),
+        Cm.astype(jnp.float32).swapaxes(0, 1),
+        xs_f32.swapaxes(0, 1),
+    )
+    h0 = state["ssm"] if state is not None else jnp.zeros((B, din, d_state), jnp.float32)
+    hT, ys = chunked_scan(step, h0, seq)
+    y = ys.swapaxes(0, 1) + xs_f32 * params["d_skip"]  # (B,S,din)
+    y = (y.astype(x.dtype) * jax.nn.silu(z)) @ params["w_out"]
+    new_state = {"ssm": hT, "conv": new_conv} if state is not None else None
+    return y, new_state
+
+
+def mamba_state_init(B: int, d: int, *, expand: int, d_state: int, d_conv: int, dtype) -> Dict:
+    din = expand * d
+    return {
+        "ssm": jnp.zeros((B, din, d_state), jnp.float32),
+        "conv": jnp.zeros((B, d_conv - 1, din), dtype),
+    }

@@ -1,0 +1,128 @@
+"""Multi-head Latent Attention (MiniCPM3 / DeepSeek-V2 style).
+
+Q goes through a low-rank bottleneck (q_lora_rank); K/V are compressed into
+a shared latent c_kv (kv_lora_rank) plus a small shared rotary key
+(qk_rope_dim). The decode cache stores only (c_kv, k_rope) — the memory win
+that makes MLA matter at 32k+ context.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, rmsnorm, rmsnorm_init
+from .rope import apply_rope
+
+
+def mla_init(key, d: int, n_heads: int, mla_cfg, dtype) -> Dict:
+    m = mla_cfg
+    ks = jax.random.split(key, 7)
+    qk_dim = m.qk_nope_dim + m.qk_rope_dim
+    return {
+        "w_dq": dense_init(ks[0], (d, m.q_lora_rank), dtype),
+        "q_norm": rmsnorm_init(m.q_lora_rank, dtype),
+        "w_uq": dense_init(ks[1], (m.q_lora_rank, n_heads * qk_dim), dtype),
+        "w_dkv": dense_init(ks[2], (d, m.kv_lora_rank), dtype),
+        "kv_norm": rmsnorm_init(m.kv_lora_rank, dtype),
+        "w_kr": dense_init(ks[3], (d, m.qk_rope_dim), dtype),
+        "w_uk": dense_init(ks[4], (m.kv_lora_rank, n_heads * m.qk_nope_dim), dtype),
+        "w_uv": dense_init(ks[5], (m.kv_lora_rank, n_heads * m.v_head_dim), dtype),
+        "wo": dense_init(ks[6], (n_heads * m.v_head_dim, d), dtype),
+    }
+
+
+def mla_apply(
+    params: Dict,
+    x: jnp.ndarray,
+    *,
+    n_heads: int,
+    mla_cfg,
+    rope_cos,
+    rope_sin,
+    cache: Optional[Dict] = None,
+    cache_pos=None,
+) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    m = mla_cfg
+    B, S, _ = x.shape
+    qk_dim = m.qk_nope_dim + m.qk_rope_dim
+
+    q_lat = rmsnorm(params["q_norm"], x @ params["w_dq"])
+    q = (q_lat @ params["w_uq"]).reshape(B, S, n_heads, qk_dim)
+    q_nope, q_rope = q[..., : m.qk_nope_dim], q[..., m.qk_nope_dim :]
+    q_rope = apply_rope(q_rope, rope_cos, rope_sin, "full")
+
+    c_kv = rmsnorm(params["kv_norm"], x @ params["w_dkv"])  # (B,S,r_kv)
+    k_rope = (x @ params["w_kr"]).reshape(B, S, 1, m.qk_rope_dim)
+    k_rope = apply_rope(k_rope, rope_cos, rope_sin, "full")
+
+    new_cache = None
+    if cache is not None:
+        assert S == 1
+        # masked select keeps the write local on sequence-sharded caches
+        # (see models/attention.py; §Perf log)
+        sel2 = (jnp.arange(cache["c_kv"].shape[1]) == cache_pos)[None, :, None]
+        c_buf = jnp.where(sel2, c_kv.astype(cache["c_kv"].dtype), cache["c_kv"])
+        kr_buf = jnp.where(
+            sel2, k_rope[:, :, 0].astype(cache["k_rope"].dtype), cache["k_rope"]
+        )
+        new_cache = {"c_kv": c_buf, "k_rope": kr_buf}
+        c_kv_all, k_rope_all = c_buf, kr_buf
+        Sk = c_buf.shape[1]
+    else:
+        c_kv_all, k_rope_all = c_kv, k_rope
+        Sk = S
+    if k_rope_all.ndim == 4:
+        k_rope_all = k_rope_all.reshape(B, Sk, m.qk_rope_dim)
+
+    # expand latents to per-head keys/values
+    k_nope = (c_kv_all @ params["w_uk"]).reshape(B, Sk, n_heads, m.qk_nope_dim)
+    v = (c_kv_all @ params["w_uv"]).reshape(B, Sk, n_heads, m.v_head_dim)
+
+    scale = 1.0 / (qk_dim**0.5)
+
+    def _block(qn, qr, q_offset):
+        """Exact attention for a query block against all Sk keys."""
+        bq = qn.shape[1]
+        logits = (
+            jnp.einsum("bqhd,bkhd->bhqk", qn, k_nope, preferred_element_type=jnp.float32)
+            + jnp.einsum("bqhd,bkd->bhqk", qr, k_rope_all, preferred_element_type=jnp.float32)
+        ) * scale
+        if cache is not None:
+            mask = jnp.arange(Sk)[None, :] <= (cache_pos + q_offset + jnp.arange(bq)[:, None])
+        else:
+            mask = jnp.arange(Sk)[None, :] <= (q_offset + jnp.arange(bq)[:, None])
+        logits = jnp.where(mask[None, None], logits, -1e30)
+        p = jax.nn.softmax(logits, axis=-1)
+        return jnp.einsum(
+            "bhqk,bkhd->bqhd", p.astype(v.dtype), v,
+            preferred_element_type=jnp.float32,
+        ).astype(x.dtype)
+
+    CHUNK = 1024
+    if S <= CHUNK:
+        out = _block(q_nope, q_rope, 0)
+    else:
+        # chunked prefill: the full (B,H,S,S) logits tensor at 32k context is
+        # terabytes (measured 131 GB/device of XLA temps — §Perf memory log);
+        # dynamic_slice on the unsharded seq dim keeps shardings intact
+        assert S % CHUNK == 0, (S, CHUNK)
+
+        def one(acc, i):
+            qn = jax.lax.dynamic_slice_in_dim(q_nope, i * CHUNK, CHUNK, axis=1)
+            qr = jax.lax.dynamic_slice_in_dim(q_rope, i * CHUNK, CHUNK, axis=1)
+            o = _block(qn, qr, i * CHUNK)
+            return jax.lax.dynamic_update_slice_in_dim(acc, o, i * CHUNK, axis=1), None
+
+        acc0 = jnp.zeros((B, S, n_heads, m.v_head_dim), x.dtype)
+        out, _ = jax.lax.scan(one, acc0, jnp.arange(S // CHUNK))
+    y = out.reshape(B, S, n_heads * m.v_head_dim) @ params["wo"]
+    return y, new_cache
+
+
+def mla_cache_init(B: int, S: int, mla_cfg, dtype) -> Dict:
+    return {
+        "c_kv": jnp.zeros((B, S, mla_cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((B, S, mla_cfg.qk_rope_dim), dtype),
+    }

@@ -1,0 +1,112 @@
+"""Mixture-of-Experts MLP: sort-based capacity dispatch (pjit-friendly).
+
+Top-k routing; assignments are sorted by expert, bucketed into a fixed
+per-expert capacity buffer (E, C, d) that XLA SPMD reshards onto the expert-
+sharded mesh axis (this resharding IS the all-to-all the roofline measures).
+Overflow tokens are dropped (capacity_factor controls the drop rate), the
+standard GShard/Switch discipline.
+
+The expert->device placement is a first-class input: ``expert_perm`` (from
+dist/sched_bridge.py, computed by DADA from routing statistics) permutes
+expert ids so co-activated experts land on the same device group, shrinking
+the all-to-all volume — the paper's affinity idea applied at LM scale.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+from .layers import dense_init
+
+
+def moe_init(key, d: int, moe_cfg, dtype) -> Dict:
+    E, ff = moe_cfg.n_experts, moe_cfg.d_ff
+    kr, k1, k2, k3 = jax.random.split(key, 4)
+    return {
+        "router": dense_init(kr, (d, E), jnp.float32),
+        "w_up": dense_init(k1, (E, d, ff), dtype),
+        "w_gate": dense_init(k2, (E, d, ff), dtype),
+        "w_down": dense_init(k3, (E, ff, d), dtype),
+    }
+
+
+def moe_apply(
+    params: Dict,
+    x: jnp.ndarray,
+    *,
+    moe_cfg,
+    expert_perm: Optional[jnp.ndarray] = None,
+    n_chunks: int = 1,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> (y, aux_loss).
+
+    ``n_chunks`` > 1 is the §Perf "chunk-local dispatch" optimization: the
+    argsort/scatter bucketing runs independently per data-shard-aligned
+    token chunk (no cross-device sort), so the only cross-device movement
+    left is the (chunks, E, C, d) -> expert-sharded reshard — the actual
+    all-to-all. Set n_chunks = number of data shards.
+    """
+    B, S, d = x.shape
+    E, K = moe_cfg.n_experts, moe_cfg.top_k
+    T = B * S
+    xt = x.reshape(T, d)
+
+    logits = (xt.astype(jnp.float32)) @ params["router"]  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, K)  # (T, K)
+    gates = gates / (gates.sum(-1, keepdims=True) + 1e-9)
+    if expert_perm is not None:
+        idx = expert_perm[idx]  # affinity-driven relabeling (DADA placement)
+
+    # load-balancing auxiliary loss (Switch-style)
+    me = probs.mean(axis=0)  # (E,)
+    ce = jnp.zeros((E,), jnp.float32).at[idx.reshape(-1)].add(1.0) / (T * K)
+    aux = moe_cfg.aux_loss_weight * E * jnp.sum(me * ce)
+
+    X = n_chunks if (n_chunks > 1 and T % n_chunks == 0) else 1
+    Tc = T // X
+    C = max(8, int((Tc * K / E) * moe_cfg.capacity_factor + 0.999))
+
+    xtc = xt.reshape(X, Tc, d)
+    flat_e = idx.reshape(X, Tc * K)
+    order = jnp.argsort(flat_e, axis=-1, stable=True)  # per-chunk local sort
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=-1)
+    counts = jnp.zeros((X, E), jnp.int32).at[
+        jnp.arange(X)[:, None], flat_e
+    ].add(1)
+    starts = jnp.cumsum(counts, axis=-1) - counts
+    rank = jnp.arange(Tc * K, dtype=jnp.int32)[None] - jnp.take_along_axis(
+        starts, sorted_e, axis=-1
+    )
+    tok = order // K
+    slot = jnp.where(rank < C, rank, C)  # overflow -> scratch slot C
+
+    chunk_ix = jnp.arange(X)[:, None]
+    buf = (
+        jnp.zeros((X, E, C + 1, d), x.dtype)
+        .at[chunk_ix, sorted_e, slot]
+        .set(xtc[chunk_ix, tok])
+    )
+    buf = buf[:, :, :C]  # (X, E, C, d) — reshard to expert axis = all-to-all
+
+    # ---- expert FFN (gated) ----------------------------------------------
+    up = jnp.einsum("xecd,edf->xecf", buf, params["w_up"])
+    gate = jax.nn.silu(jnp.einsum("xecd,edf->xecf", buf, params["w_gate"]))
+    y_exp = jnp.einsum("xecf,efd->xecd", gate * up, params["w_down"])
+
+    # ---- combine back ------------------------------------------------------
+    y_pad = jnp.concatenate(
+        [y_exp, jnp.zeros((X, E, 1, d), y_exp.dtype)], axis=2
+    )
+    y_sorted = y_pad[chunk_ix, sorted_e, slot]  # (X, Tc*K, d)
+    y_flat = (
+        jnp.zeros((X, Tc * K, d), y_exp.dtype)
+        .at[chunk_ix, order]
+        .set(y_sorted)
+    )
+    yk = y_flat.reshape(T, K, d)
+    y = (yk * gates[..., None].astype(yk.dtype)).sum(axis=1)
+    return y.reshape(B, S, d), aux

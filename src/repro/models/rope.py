@@ -1,0 +1,40 @@
+"""Rotary position embeddings: full (llama-style) and half/2d (chatglm,
+minicpm-style: only the first half of head_dim is rotated)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_table(positions, rot_dim: int, theta: float = 10000.0):
+    """cos/sin tables for `positions` (any shape) over `rot_dim` dims."""
+    inv = 1.0 / (theta ** (jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / rot_dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv  # (..., rot_dim/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def _rotate(x, cos, sin):
+    """x: (..., rot_dim) -> rotated (interleaved-pair convention)."""
+    x1 = x[..., 0::2]
+    x2 = x[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    out = jnp.stack([r1, r2], axis=-1)
+    return out.reshape(x.shape)
+
+
+def apply_rope(x, cos, sin, style: str = "full"):
+    """x: (B, S, H, hd); cos/sin: (S, rot/2) or (B, S, rot/2)."""
+    if style == "none":
+        return x
+    hd = x.shape[-1]
+    rot = hd if style == "full" else hd // 2
+    if cos.ndim == 2:  # (S, rot/2) -> broadcast over batch and heads
+        c = cos[None, :, None, :]
+        s = sin[None, :, None, :]
+    else:  # (B, S, rot/2)
+        c = cos[:, :, None, :]
+        s = sin[:, :, None, :]
+    xr = _rotate(x[..., :rot].astype(jnp.float32), c, s).astype(x.dtype)
+    if rot == hd:
+        return xr
+    return jnp.concatenate([xr, x[..., rot:]], axis=-1)

@@ -1,0 +1,373 @@
+"""Model assembly: composable blocks -> full architectures.
+
+Layer stacks are scanned over *periods* (one period = cfg.block_pattern,
+e.g. Jamba's 8-layer Mamba/attention interleave): params and caches carry a
+leading n_periods axis, which keeps HLO size O(period), not O(depth) — the
+property that makes 80-layer dry-runs compilable and is also the remat unit.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist import hints
+
+from . import attention as attn
+from . import mamba as mb
+from . import mla as mla_mod
+from . import moe as moe_mod
+from . import xlstm as xl
+from .layers import _dtype, dense_init, embed_apply, embed_init, norm_apply, norm_init
+from .rope import rope_table
+
+
+# ---------------------------------------------------------------------------
+# per-block init / apply
+def _has_mlp(kind: str) -> bool:
+    return kind in ("attn", "mamba")
+
+
+def _is_moe_position(cfg: ModelConfig, j: int) -> bool:
+    return (
+        cfg.moe is not None
+        and _has_mlp(cfg.block_pattern[j])
+        and (j % cfg.moe.every == cfg.moe.every - 1)
+    )
+
+
+def block_init(cfg: ModelConfig, kind: str, j: int, key) -> Dict:
+    dt = _dtype(cfg.param_dtype)
+    d = cfg.d_model
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"norm1": norm_init(cfg.norm, d, dt)}
+    if kind == "attn":
+        if cfg.mla is not None:
+            p["mla"] = mla_mod.mla_init(k1, d, cfg.n_heads, cfg.mla, dt)
+        else:
+            p["attn"] = attn.attn_init(k1, d, cfg.n_heads, cfg.n_kv_heads, cfg.hd, dt)
+    elif kind == "mamba":
+        p["mamba"] = mb.mamba_init(
+            k1, d, expand=cfg.mamba_expand, d_state=cfg.mamba_d_state,
+            d_conv=cfg.mamba_d_conv, dtype=dt,
+        )
+    elif kind == "mlstm":
+        p["cell"] = xl.mlstm_init(k1, d, cfg.n_heads, dt)
+    elif kind == "slstm":
+        p["cell"] = xl.slstm_init(k1, d, cfg.n_heads, dt)
+    else:
+        raise ValueError(kind)
+    if _has_mlp(kind):
+        p["norm2"] = norm_init(cfg.norm, d, dt)
+        if _is_moe_position(cfg, j):
+            p["moe"] = moe_mod.moe_init(k2, d, cfg.moe, dt)
+        else:
+            from .layers import mlp_init
+
+            p["mlp"] = mlp_init(k2, d, cfg.d_ff, cfg.act, dt)
+    return p
+
+
+def block_apply(
+    cfg: ModelConfig,
+    kind: str,
+    j: int,
+    params: Dict,
+    x,
+    *,
+    rope_cos,
+    rope_sin,
+    cache: Optional[Dict] = None,
+    cache_pos=None,
+    expert_perm=None,
+    moe_chunks: int = 1,
+) -> Tuple[jnp.ndarray, Optional[Dict], jnp.ndarray]:
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = norm_apply(cfg.norm, params["norm1"], x)
+    new_cache = None
+    if kind == "attn":
+        if cfg.mla is not None:
+            y, new_cache = mla_mod.mla_apply(
+                params["mla"], h, n_heads=cfg.n_heads, mla_cfg=cfg.mla,
+                rope_cos=rope_cos, rope_sin=rope_sin,
+                cache=cache, cache_pos=cache_pos,
+            )
+        else:
+            y, new_cache = attn.attn_apply(
+                params["attn"], h, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                hd=cfg.hd, rope_cos=rope_cos, rope_sin=rope_sin,
+                rope_style=cfg.rope_style, causal=True,
+                cache=cache, cache_pos=cache_pos,
+            )
+    elif kind == "mamba":
+        y, new_cache = mb.mamba_apply(
+            params["mamba"], h, expand=cfg.mamba_expand,
+            d_state=cfg.mamba_d_state, d_conv=cfg.mamba_d_conv, state=cache,
+        )
+    elif kind == "mlstm":
+        y, new_cache = xl.mlstm_apply(params["cell"], h, n_heads=cfg.n_heads, state=cache)
+    elif kind == "slstm":
+        y, new_cache = xl.slstm_apply(params["cell"], h, state=cache)
+    else:
+        raise ValueError(kind)
+    x = x + y
+    if _has_mlp(kind):
+        h = norm_apply(cfg.norm, params["norm2"], x)
+        if "moe" in params:
+            y, aux = moe_mod.moe_apply(
+                params["moe"], h, moe_cfg=cfg.moe, expert_perm=expert_perm,
+                n_chunks=moe_chunks,
+            )
+        else:
+            from .layers import mlp_apply
+
+            y = mlp_apply(params["mlp"], h, cfg.act)
+        x = x + y
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# cache init (per pattern position)
+def block_cache_init(cfg: ModelConfig, kind: str, B: int, S: int) -> Optional[Dict]:
+    dt = _dtype(cfg.compute_dtype)
+    if kind == "attn":
+        if cfg.mla is not None:
+            return mla_mod.mla_cache_init(B, S, cfg.mla, dt)
+        return {
+            "k": jnp.zeros((B, S, cfg.n_kv_heads, cfg.hd), dt),
+            "v": jnp.zeros((B, S, cfg.n_kv_heads, cfg.hd), dt),
+        }
+    if kind == "mamba":
+        return mb.mamba_state_init(
+            B, cfg.d_model, expand=cfg.mamba_expand,
+            d_state=cfg.mamba_d_state, d_conv=cfg.mamba_d_conv, dtype=dt,
+        )
+    if kind == "mlstm":
+        return xl.mlstm_state_init(B, cfg.d_model, cfg.n_heads)
+    if kind == "slstm":
+        return xl.slstm_state_init(B, cfg.d_model)
+    raise ValueError(kind)
+
+
+def cache_init(cfg: ModelConfig, B: int, S: int) -> Dict:
+    """Stacked cache pytree: {"p{j}": leaves with leading n_periods axis}."""
+    n_periods = cfg.n_layers // cfg.period
+    out = {}
+    for j, kind in enumerate(cfg.block_pattern):
+        c = block_cache_init(cfg, kind, B, S)
+        out[f"p{j}"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (n_periods,) + a.shape), c
+        )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# full-model init
+def init_params(cfg: ModelConfig, key) -> Dict:
+    dt = _dtype(cfg.param_dtype)
+    keys = jax.random.split(key, 8)
+    params: Dict[str, Any] = {
+        "embed": embed_init(keys[0], cfg.vocab, cfg.d_model, dt),
+        "final_norm": norm_init(cfg.norm, cfg.d_model, dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys[1], (cfg.d_model, cfg.vocab), dt)
+    n_periods = cfg.n_layers // cfg.period
+    blocks = {}
+    for j, kind in enumerate(cfg.block_pattern):
+        pkeys = jax.random.split(jax.random.fold_in(keys[2], j), n_periods)
+        blocks[f"p{j}"] = jax.vmap(lambda k, j=j, kind=kind: block_init(cfg, kind, j, k))(pkeys)
+    params["blocks"] = blocks
+    if cfg.enc_layers:
+        ekeys = jax.random.split(keys[3], cfg.enc_layers)
+        params["enc_blocks"] = jax.vmap(
+            lambda k: {
+                "norm1": norm_init(cfg.norm, cfg.d_model, dt),
+                "attn": attn.attn_init(
+                    jax.random.fold_in(k, 0), cfg.d_model, cfg.n_heads,
+                    cfg.n_kv_heads, cfg.hd, dt,
+                ),
+                "norm2": norm_init(cfg.norm, cfg.d_model, dt),
+                "mlp": __import__("repro.models.layers", fromlist=["mlp_init"]).mlp_init(
+                    jax.random.fold_in(k, 1), cfg.d_model, cfg.d_ff, cfg.act, dt
+                ),
+            }
+        )(ekeys)
+        params["enc_norm"] = norm_init(cfg.norm, cfg.d_model, dt)
+        # decoder cross-attention (one per decoder layer, scanned)
+        ckeys = jax.random.split(keys[4], cfg.n_layers // cfg.period)
+        params["cross"] = jax.vmap(
+            lambda k: {
+                "norm": norm_init(cfg.norm, cfg.d_model, dt),
+                "attn": attn.attn_init(k, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd, dt),
+            }
+        )(ckeys)
+    if cfg.frontend_dim and cfg.frontend_dim != cfg.d_model:
+        params["frontend_proj"] = dense_init(keys[5], (cfg.frontend_dim, cfg.d_model), dt)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+def _rope_tables(cfg: ModelConfig, positions):
+    if cfg.mla is not None:
+        rot = cfg.mla.qk_rope_dim
+    elif cfg.rope_style == "half":
+        rot = cfg.hd // 2
+    elif cfg.rope_style == "none":
+        return None, None
+    else:
+        rot = cfg.hd
+    return rope_table(positions, rot, cfg.rope_theta)
+
+
+
+def _cast_floats(tree, dtype):
+    """Cast floating params to the compute dtype (bf16 MXU policy)."""
+    return jax.tree.map(
+        lambda a: a.astype(dtype) if jnp.issubdtype(a.dtype, jnp.floating) else a,
+        tree,
+    )
+
+def encode(params: Dict, cfg: ModelConfig, enc_x: jnp.ndarray) -> jnp.ndarray:
+    """Bidirectional encoder over frontend embeddings (B, S_enc, d*)."""
+    params = _cast_floats(params, _dtype(cfg.compute_dtype))
+    if "frontend_proj" in params:
+        enc_x = enc_x.astype(_dtype(cfg.compute_dtype)) @ params["frontend_proj"]
+    enc_x = hints.constrain_batch(enc_x.astype(_dtype(cfg.compute_dtype)))
+    S = enc_x.shape[1]
+    cos, sin = _rope_tables(cfg, jnp.arange(S))
+
+    def body(x, lp):
+        h = norm_apply(cfg.norm, lp["norm1"], x)
+        y, _ = attn.attn_apply(
+            lp["attn"], h, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, hd=cfg.hd,
+            rope_cos=cos, rope_sin=sin, rope_style=cfg.rope_style, causal=False,
+        )
+        x = x + y
+        h = norm_apply(cfg.norm, lp["norm2"], x)
+        from .layers import mlp_apply
+
+        return x + mlp_apply(lp["mlp"], h, cfg.act), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, enc_x, params["enc_blocks"])
+    return norm_apply(cfg.norm, params["enc_norm"], x)
+
+
+def forward(
+    params: Dict,
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,
+    *,
+    extra_embeds: Optional[jnp.ndarray] = None,
+    enc_out: Optional[jnp.ndarray] = None,
+    cache: Optional[Dict] = None,
+    cache_pos=None,
+    expert_perm=None,
+    moe_chunks: int = 1,
+    remat: Optional[bool] = None,
+    last_logit_only: bool = False,
+    cross_cache: Optional[Dict] = None,
+) -> Tuple[jnp.ndarray, Optional[Dict], jnp.ndarray]:
+    """Decoder forward. Returns (logits, new_cache, aux_loss).
+
+    train/prefill: cache=None, tokens (B,S).
+    decode: cache pytree + cache_pos scalar; tokens (B,1).
+    ``extra_embeds``: (B,P,d_frontend) modality-stub embeddings, prepended.
+    ``enc_out``: encoder memory for cross-attention (encoder-decoder archs).
+    """
+    cdt = _dtype(cfg.compute_dtype)
+    params = _cast_floats(params, cdt)
+    if cfg.tie_embeddings:
+        # vocab-sharded table: one-hot contraction partitions cleanly (each
+        # vocab shard contributes a partial (B,S,d) sum); a gather on a
+        # vocab-sharded table hits SPMD's full-remat fallback instead
+        oh = jax.nn.one_hot(tokens, cfg.vocab, dtype=cdt)
+        x = oh @ params["embed"]["table"].astype(cdt)
+    else:
+        x = embed_apply(params["embed"], tokens).astype(cdt)
+    if cfg.name.startswith("gemma"):
+        x = x * (cfg.d_model**0.5)
+    if extra_embeds is not None:
+        pe = extra_embeds
+        if "frontend_proj" in params:
+            pe = pe @ params["frontend_proj"]
+        x = jnp.concatenate([pe.astype(cdt), x], axis=1)
+    # re-pin batch sharding: embedding gathers drop index sharding (dist/hints)
+    x = hints.constrain_batch(x)
+    B, S, _ = x.shape
+    if cache is None:
+        positions = jnp.arange(S)
+    else:
+        positions = jnp.asarray(cache_pos) + jnp.arange(S)
+    cos, sin = _rope_tables(cfg, positions)
+    use_remat = cfg.remat if remat is None else remat
+    have_cross = enc_out is not None or cross_cache is not None
+    have_cc = cross_cache is not None
+    have_cache = cache is not None
+
+    def body(x, xs):
+        bp, cp, pc, cc = xs
+        aux_total = jnp.zeros((), jnp.float32)
+        new_pc = {}
+        for j, kind in enumerate(cfg.block_pattern):
+            x, nc, aux = block_apply(
+                cfg, kind, j, bp[f"p{j}"], x,
+                rope_cos=cos, rope_sin=sin,
+                cache=pc[f"p{j}"] if have_cache else None,
+                cache_pos=cache_pos,
+                expert_perm=expert_perm,
+                moe_chunks=moe_chunks,
+            )
+            if have_cache:
+                new_pc[f"p{j}"] = nc
+            aux_total = aux_total + aux
+        if have_cross:
+            h = norm_apply(cfg.norm, cp["norm"], x)
+            if have_cc:
+                # decode fast path: cross-K/V precomputed once per request
+                y = attn.attn_apply_kv(
+                    cp["attn"], h, cc["k"], cc["v"],
+                    n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, hd=cfg.hd,
+                )
+            else:
+                y, _ = attn.attn_apply(
+                    cp["attn"], h, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                    hd=cfg.hd, kv_source=enc_out, causal=False,
+                )
+            x = x + y
+        return x, (aux_total, new_pc if have_cache else {})
+
+    if use_remat:
+        # save weight-matmul outputs (the post-all-reduce activations):
+        # recomputing them in the backward pass would re-run every TP
+        # collective a third time (§Perf log); elementwise/attention
+        # internals still rematerialize, keeping memory bounded
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    xs = (
+        params["blocks"],
+        params["cross"] if have_cross else {},
+        cache if have_cache else {},
+        cross_cache if have_cc else {},
+    )
+    x, (auxs, new_cache) = jax.lax.scan(body, x, xs)
+    aux = auxs.sum()
+    if not have_cache:
+        new_cache = None
+
+    x = norm_apply(cfg.norm, params["final_norm"], x)
+    if last_logit_only:
+        x = x[:, -1:]
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"]["table"].T.astype(x.dtype)
+    else:
+        logits = x @ params["lm_head"].astype(x.dtype)
+    return logits.astype(jnp.float32), new_cache, aux

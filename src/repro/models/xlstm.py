@@ -1,0 +1,156 @@
+"""xLSTM blocks: mLSTM (matrix memory, attention-like) and sLSTM (scalar
+memory, true recurrence) — per Beck et al. 2024 (arXiv:2405.04517).
+
+TPU adaptation: both cells run as ``jax.lax.scan`` recurrences with
+exponential-gating stabilizers (m state). The mLSTM's matrix state is
+(B, H, hd, hd); the chunk-parallel training form is an optimization the
+hillclimb log discusses — the scan form is the exact oracle.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+from .recurrent import chunked_scan
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+def mlstm_init(key, d: int, n_heads: int, dtype) -> Dict:
+    """mLSTM block: up-proj (2x), cell over one stream, gated by the other."""
+    din = 2 * d
+    hd = din // n_heads
+    ks = jax.random.split(key, 7)
+    return {
+        "w_up": dense_init(ks[0], (d, 2 * din), dtype),
+        "wq": dense_init(ks[1], (din, din), dtype),
+        "wk": dense_init(ks[2], (din, din), dtype),
+        "wv": dense_init(ks[3], (din, din), dtype),
+        "w_if": dense_init(ks[4], (din, 2 * n_heads), dtype),
+        "b_if": jnp.zeros((2 * n_heads,), jnp.float32),
+        "w_o": dense_init(ks[5], (din, din), dtype),
+        "w_down": dense_init(ks[6], (din, d), dtype),
+    }
+
+
+def mlstm_apply(
+    params: Dict,
+    x: jnp.ndarray,
+    *,
+    n_heads: int,
+    state: Optional[Dict] = None,
+) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    B, S, d = x.shape
+    din = 2 * d
+    hd = din // n_heads
+    up = x @ params["w_up"]
+    u, gate = up[..., :din], up[..., din:]
+
+    q = (u @ params["wq"]).reshape(B, S, n_heads, hd) / (hd**0.5)
+    k = (u @ params["wk"]).reshape(B, S, n_heads, hd) / (hd**0.5)
+    v = (u @ params["wv"]).reshape(B, S, n_heads, hd)
+    gf = (u @ params["w_if"]).astype(jnp.float32) + params["b_if"]
+    log_i = gf[..., :n_heads]  # (B,S,H) input gate (pre-exp)
+    log_f = jax.nn.log_sigmoid(gf[..., n_heads:])  # forget gate
+
+    def step(carry, inp):
+        C, n, m = carry  # (B,H,hd,hd) (B,H,hd) (B,H)
+        q_t, k_t, v_t, li_t, lf_t = inp
+        m_new = jnp.maximum(lf_t + m, li_t)
+        i_p = jnp.exp(li_t - m_new)[..., None]  # (B,H,1)
+        f_p = jnp.exp(lf_t + m - m_new)[..., None]
+        n = f_p * n + i_p * k_t
+        C = f_p[..., None] * C + (i_p * v_t)[..., None] * k_t[:, :, None, :]
+        num = jnp.einsum("bhvk,bhk->bhv", C, q_t)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q_t)), 1.0)
+        h = num / den[..., None]
+        return (C, n, m_new), h
+
+    if state is None:
+        C0 = jnp.zeros((B, n_heads, hd, hd), jnp.float32)
+        n0 = jnp.zeros((B, n_heads, hd), jnp.float32)
+        m0 = jnp.full((B, n_heads), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = state["C"], state["n"], state["m"]
+    seq = (
+        q.astype(jnp.float32).swapaxes(0, 1),
+        k.astype(jnp.float32).swapaxes(0, 1),
+        v.astype(jnp.float32).swapaxes(0, 1),
+        log_i.swapaxes(0, 1),
+        log_f.swapaxes(0, 1),
+    )
+    (CT, nT, mT), hs = chunked_scan(step, (C0, n0, m0), seq)
+    h = hs.swapaxes(0, 1).reshape(B, S, din).astype(x.dtype)
+    h = h @ params["w_o"]
+    y = (h * jax.nn.silu(gate)) @ params["w_down"]
+    new_state = {"C": CT, "n": nT, "m": mT} if state is not None else None
+    return y, new_state
+
+
+def mlstm_state_init(B: int, d: int, n_heads: int) -> Dict:
+    din = 2 * d
+    hd = din // n_heads
+    return {
+        "C": jnp.zeros((B, n_heads, hd, hd), jnp.float32),
+        "n": jnp.zeros((B, n_heads, hd), jnp.float32),
+        "m": jnp.full((B, n_heads), -1e30, jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+def slstm_init(key, d: int, n_heads: int, dtype) -> Dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gates": dense_init(ks[0], (d, 4 * d), dtype),  # z i f o
+        "r_gates": dense_init(ks[1], (d, 4 * d), dtype),  # recurrent
+        "b_gates": jnp.zeros((4 * d,), jnp.float32),
+        "w_out": dense_init(ks[2], (d, d), dtype),
+    }
+
+
+def slstm_apply(
+    params: Dict,
+    x: jnp.ndarray,
+    *,
+    state: Optional[Dict] = None,
+) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    B, S, d = x.shape
+    wx = (x @ params["w_gates"]).astype(jnp.float32)  # (B,S,4d)
+
+    def step(carry, wx_t):
+        c, n, h, m = carry  # all (B,d) except m (B,d)
+        g = wx_t + (h.astype(x.dtype) @ params["r_gates"]).astype(jnp.float32) + params["b_gates"]
+        z, i, f, o = jnp.split(g, 4, axis=-1)
+        z = jnp.tanh(z)
+        o = jax.nn.sigmoid(o)
+        log_f = jax.nn.log_sigmoid(f)
+        m_new = jnp.maximum(log_f + m, i)
+        i_p = jnp.exp(i - m_new)
+        f_p = jnp.exp(log_f + m - m_new)
+        c = f_p * c + i_p * z
+        n = f_p * n + i_p
+        h_new = o * c / jnp.maximum(n, 1.0)
+        return (c, n, h_new, m_new), h_new
+
+    if state is None:
+        zeros = jnp.zeros((B, d), jnp.float32)
+        carry0 = (zeros, zeros, zeros, jnp.full((B, d), -1e30, jnp.float32))
+    else:
+        carry0 = (state["c"], state["n"], state["h"], state["m"])
+    carryT, hs = chunked_scan(step, carry0, wx.swapaxes(0, 1))
+    y = hs.swapaxes(0, 1).astype(x.dtype) @ params["w_out"]
+    new_state = (
+        {"c": carryT[0], "n": carryT[1], "h": carryT[2], "m": carryT[3]}
+        if state is not None
+        else None
+    )
+    return y, new_state
+
+
+def slstm_state_init(B: int, d: int) -> Dict:
+    zeros = jnp.zeros((B, d), jnp.float32)
+    return {"c": zeros, "n": zeros, "h": zeros, "m": jnp.full((B, d), -1e30, jnp.float32)}

@@ -1,0 +1,59 @@
+"""Error-feedback gradient compression for the slow cross-pod axis.
+
+int8 stochastic-free linear quantization with per-leaf scale + local error
+feedback (residual carried to the next step). Applied as a
+``grad_transform`` hook in train/step.py: quantize -> (the cross-pod
+all-reduce moves int8, 4x fewer bytes) -> dequantize, residual kept locally.
+
+The compression itself is exact-arithmetic testable (tests/test_dist.py):
+compress->decompress error is bounded by the quantization step, and error
+feedback makes the *accumulated* bias vanish over steps.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_state_init(params) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_with_error_feedback(grads, ef_state):
+    """Returns (compressed-then-decompressed grads, new ef_state).
+
+    The decompressed value is what the cross-pod all-reduce would carry
+    (int8 wire format); the quantization error stays in ef_state and is
+    added back next step.
+    """
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, scale = quantize_int8(g32)
+        deq = dequantize_int8(q, scale)
+        return deq.astype(g.dtype), g32 - deq
+
+    flat_g, td = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(ef_state)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    new_g = jax.tree.unflatten(td, [o[0] for o in outs])
+    new_e = jax.tree.unflatten(td, [o[1] for o in outs])
+    return new_g, new_e
+
+
+def wire_bytes_saved(params) -> Tuple[int, int]:
+    """fp32 vs int8 bytes for one cross-pod gradient all-reduce."""
+    n = sum(int(jnp.prod(jnp.array(l.shape))) for l in jax.tree.leaves(params))
+    return 4 * n, 1 * n

@@ -1,0 +1,76 @@
+"""Serving: prefill and single-token decode steps with typed caches.
+
+decode_32k / long_500k lower ``serve_step`` — one new token against a cache
+of seq_len — exactly as the shape spec requires. Encoder-decoder archs carry
+a precomputed cross-KV cache (computed once from the encoder memory).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models.layers import _dtype
+from repro.models.transformer import cache_init, encode, forward
+
+
+def make_prefill_step(cfg: ModelConfig, moe_chunks: int = 1):
+    """Prefill returns last-position logits only: materializing (B, S, V)
+    fp32 logits at 32k context would be terabytes (e.g. gemma's 256k vocab);
+    serving only ever samples from the final position."""
+
+    def prefill_step(params, batch):
+        enc_out = None
+        extra = None
+        if cfg.family == "audio":
+            enc_out = encode(params, cfg, batch["frontend"])
+        elif cfg.family == "vlm":
+            extra = batch["frontend"]
+        logits, _, _ = forward(
+            params, cfg, batch["tokens"], extra_embeds=extra, enc_out=enc_out,
+            remat=False, last_logit_only=True, moe_chunks=moe_chunks,
+        )
+        return logits
+
+    return prefill_step
+
+
+def make_decode_cache(cfg: ModelConfig, B: int, S: int) -> Dict:
+    """Allocate the stacked cache pytree (zeros; dry-run uses eval_shape)."""
+    return cache_init(cfg, B, S)
+
+
+def make_cross_cache(params, cfg: ModelConfig, enc_out: jnp.ndarray) -> Dict:
+    """Precompute per-layer cross-attention K/V from encoder memory."""
+
+    def one_layer(cp):
+        B, S, _ = enc_out.shape
+        k = (enc_out @ cp["attn"]["wk"]).reshape(B, S, cfg.n_kv_heads, cfg.hd)
+        v = (enc_out @ cp["attn"]["wv"]).reshape(B, S, cfg.n_kv_heads, cfg.hd)
+        return {"k": k, "v": v}
+
+    return jax.vmap(one_layer)(params["cross"]) if "cross" in params else None
+
+
+def make_serve_step(cfg: ModelConfig, moe_chunks: int = 1):
+    """serve_step(params, cache, tokens, pos[, enc_out]) ->
+    (next_token, logits, new_cache).
+
+    Encoder-decoder archs pass the encoder memory ``enc_out``; the baseline
+    recomputes cross-K/V from it each step (precomputing them once via
+    make_cross_cache is an optimization discussed in EXPERIMENTS.md §Perf).
+    """
+
+    def serve_step(params, cache, tokens, pos, enc_out=None, cross_cache=None):
+        logits, new_cache, _ = forward(
+            params, cfg, tokens, cache=cache, cache_pos=pos,
+            enc_out=enc_out, remat=False, moe_chunks=moe_chunks,
+            cross_cache=cross_cache,
+        )
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, logits, new_cache
+
+    return serve_step

@@ -1,0 +1,168 @@
+"""Distribution-layer tests: sharding rules, DADA expert placement, layer
+partitioning, elastic re-planning, gradient compression, stragglers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs.registry import get_config
+from repro.dist.elastic import choose_mesh_shape, replan
+from repro.dist.sched_bridge import (
+    expected_a2a_fraction,
+    partition_layers,
+    plan_expert_placement,
+    stage_loads,
+)
+from repro.dist.straggler import StragglerPlanner
+from repro.optim.compression import (
+    compress_with_error_feedback,
+    ef_state_init,
+    quantize_int8,
+    dequantize_int8,
+)
+
+
+# ---------------------------------------------------------------------------
+# expert placement
+def test_expert_placement_balanced_capacity():
+    rng = np.random.default_rng(0)
+    mass = rng.pareto(1.5, size=64) * 1000
+    pl = plan_expert_placement(mass, 8)
+    counts = np.bincount(pl.assignment, minlength=8)
+    assert (counts == 8).all()  # exact capacity per group
+    # permutation is a bijection
+    assert sorted(pl.perm.tolist()) == list(range(64))
+    assert (pl.perm[pl.inv_perm] == np.arange(64)).all()
+
+
+def test_expert_placement_balances_load():
+    rng = np.random.default_rng(1)
+    mass = rng.pareto(1.0, size=32) * 100 + 1
+    pl = plan_expert_placement(mass, 4)
+    naive = np.array([mass[g::4].sum() for g in range(4)])  # round robin
+    assert pl.group_load.max() <= naive.max() * 1.05
+
+
+def test_expert_placement_affinity_minimizes_movement():
+    """Re-planning with mildly-changed load should keep most experts where
+    their weights already are (the paper's affinity criterion)."""
+    rng = np.random.default_rng(2)
+    mass = rng.uniform(10, 20, size=64)  # near-uniform load
+    first = plan_expert_placement(mass, 8)
+    mass2 = mass * rng.uniform(0.95, 1.05, size=64)
+    second = plan_expert_placement(
+        mass2, 8, prev_assignment=first.assignment, alpha=1.0
+    )
+    assert second.moved_experts <= 16  # most of 64 stay put
+    fresh = plan_expert_placement(mass2, 8, prev_assignment=None, alpha=0.0)
+    moved_fresh = int((fresh.assignment != first.assignment).sum())
+    assert second.moved_experts <= moved_fresh
+
+
+def test_a2a_fraction_drops_with_affinity_placement():
+    """Tokens co-located with their favourite experts avoid the all-to-all;
+    DADA placement from per-source routing mass should beat round-robin."""
+    rng = np.random.default_rng(3)
+    G, E = 4, 32
+    by_source = rng.pareto(1.0, size=(G, E)) * 10
+    # each source group heavily uses a random disjoint expert subset that is
+    # NOT aligned with round-robin order
+    perm = rng.permutation(E)
+    for g in range(G):
+        mine = perm[g * (E // G) : (g + 1) * (E // G)]
+        by_source[g, mine] *= 20
+    total_mass = by_source.sum(axis=0)
+    rr = np.arange(E) % G  # round robin
+    frac_rr = expected_a2a_fraction(by_source, rr)
+    # affinity-aware: residency prior = dominant source group per expert
+    dominant = by_source.argmax(axis=0)
+    pl = plan_expert_placement(total_mass, G, prev_assignment=dominant, alpha=1.0)
+    frac_dada = expected_a2a_fraction(by_source, pl.assignment)
+    assert frac_dada < frac_rr
+
+
+# ---------------------------------------------------------------------------
+# layer partitioning (dual approximation)
+def test_partition_layers_balanced():
+    costs = [1.0] * 16
+    starts = partition_layers(costs, 4)
+    assert starts == [0, 4, 8, 12]
+    loads = stage_loads(costs, starts)
+    assert max(loads) == 4.0
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(0.1, 10.0), min_size=4, max_size=40), st.integers(2, 6))
+def test_partition_layers_dual_approx_bound(costs, k):
+    starts = partition_layers(costs, k)
+    loads = stage_loads(costs, starts)
+    # classic bound for chains-on-chains dual approximation
+    opt_lb = max(max(costs), sum(costs) / k)
+    assert max(loads) <= 2.0 * opt_lb + 1e-9
+    assert len(starts) == k
+    assert starts[0] == 0 and all(a <= b for a, b in zip(starts, starts[1:]))
+
+
+# ---------------------------------------------------------------------------
+# elastic
+def test_choose_mesh_shape():
+    assert choose_mesh_shape(512) == (32, 16)
+    assert choose_mesh_shape(256) == (16, 16)
+    assert choose_mesh_shape(300) == (16, 16)  # degraded pod
+    assert choose_mesh_shape(17) == (1, 16)
+
+
+def test_replan_after_failure_keeps_surviving_experts():
+    mass = np.ones(64)
+    plan0 = replan(256, n_experts=64, routing_mass=mass)
+    assert plan0.mesh_shape == (16, 16)
+    # lose 128 devices -> (8, 16): same 16 groups, placement may persist
+    plan1 = replan(
+        128, n_experts=64, routing_mass=mass,
+        prev_assignment=plan0.placement.assignment,
+    )
+    assert plan1.mesh_shape == (8, 16)
+    moved = int((plan1.placement.assignment != plan0.placement.assignment).sum())
+    assert moved <= 32  # affinity keeps the majority in place
+
+
+# ---------------------------------------------------------------------------
+# compression
+def test_quantize_roundtrip_bounded_error():
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(1000), jnp.float32)
+    q, s = quantize_int8(x)
+    err = jnp.abs(dequantize_int8(q, s) - x).max()
+    assert float(err) <= float(s) * 0.5 + 1e-6
+
+
+def test_error_feedback_removes_bias():
+    """Accumulated compressed gradients converge to accumulated true
+    gradients (error feedback's defining property)."""
+    rng = np.random.default_rng(1)
+    g_true = jnp.asarray(rng.standard_normal((64,)), jnp.float32) * 1e-3
+    ef = ef_state_init({"w": g_true})["w"]
+    acc_c, acc_t = jnp.zeros(64), jnp.zeros(64)
+    state = {"w": ef}
+    for _ in range(50):
+        comp, state = compress_with_error_feedback({"w": g_true}, state)
+        acc_c = acc_c + comp["w"]
+        acc_t = acc_t + g_true
+    rel = float(jnp.linalg.norm(acc_c - acc_t) / jnp.linalg.norm(acc_t))
+    assert rel < 0.05
+
+
+# ---------------------------------------------------------------------------
+# stragglers
+def test_straggler_planner_shifts_work():
+    p = StragglerPlanner(n_shards=4, total_microbatches=32)
+    plan = p.plan()
+    assert plan.sum() == 32 and (plan == 8).all()
+    # shard 3 is 4x slower
+    times = np.array([1.0, 1.0, 1.0, 4.0]) * plan
+    p.observe(times, plan)
+    plan2 = p.plan()
+    assert plan2.sum() == 32
+    assert plan2[3] < 8  # slow shard sheds work
+    assert p.expected_makespan(plan2) < p.expected_makespan(plan) * 0.95

@@ -1,0 +1,32 @@
+"""End-to-end dry-run test: the real 512-device lower+compile path, run in a
+subprocess (the XLA device-count flag must be set before jax initializes)."""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+@pytest.mark.parametrize("mesh", ["single", "multi"])
+def test_dryrun_cell_compiles(tmp_path, mesh):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    env["REPRO_RESULTS_DIR"] = str(tmp_path)
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "xlstm-1.3b", "--shape", "decode_32k",
+         "--mesh", mesh, "--force"],
+        env=env, capture_output=True, text=True, timeout=600,
+    )
+    assert proc.returncode == 0, proc.stdout[-2000:] + proc.stderr[-2000:]
+    pod = "pod1" if mesh == "single" else "pod2"
+    rec = json.loads((tmp_path / f"xlstm-1.3b__decode_32k__{pod}.json").read_text())
+    assert rec["status"] == "ok"
+    assert rec["n_devices"] == (256 if mesh == "single" else 512)
+    assert rec["hlo_flops_raw"] > 0
+    assert rec["collective_bytes_per_device"]["total"] >= 0
+    assert "memory" in rec and rec["memory"]

@@ -1,0 +1,126 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ref import (
+    flash_attention_ref,
+    gemm_update_ref,
+    matmul_ref,
+)
+from repro.kernels.tile_gemm import gemm_update, matmul
+
+RNG = np.random.default_rng(0)
+
+
+def _arr(shape, dtype):
+    return jnp.asarray(RNG.standard_normal(shape), dtype)
+
+
+TOL = {jnp.float32: 2e-4, jnp.bfloat16: 5e-2}
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "m,n,k", [(128, 128, 128), (256, 128, 384), (384, 256, 128), (64, 64, 64)]
+)
+def test_gemm_update_shapes_dtypes(m, n, k, dtype):
+    c = _arr((m, n), dtype)
+    a = _arr((m, k), dtype)
+    b = _arr((k, n), dtype)
+    out = gemm_update(c, a, b, interpret=True)
+    ref = gemm_update_ref(c, a, b)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        atol=TOL[dtype] * k ** 0.5, rtol=TOL[dtype],
+    )
+
+
+@pytest.mark.parametrize("alpha", [-1.0, 1.0, 0.5])
+@pytest.mark.parametrize("trans_b", [False, True])
+def test_gemm_update_variants(alpha, trans_b):
+    m, n, k = 256, 128, 128
+    c = _arr((m, n), jnp.float32)
+    a = _arr((m, k), jnp.float32)
+    b = _arr((n, k) if trans_b else (k, n), jnp.float32)
+    out = gemm_update(c, a, b, alpha=alpha, trans_b=trans_b, interpret=True)
+    ref = gemm_update_ref(c, a, b, alpha=alpha, trans_b=trans_b)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-3)
+
+
+def test_matmul():
+    a = _arr((256, 384), jnp.float32)
+    b = _arr((384, 128), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(matmul(a, b, interpret=True)),
+        np.asarray(matmul_ref(a, b)),
+        atol=2e-3,
+    )
+
+
+def test_gemm_rejects_non_tiling_shapes():
+    c = _arr((100, 100), jnp.float32)
+    a = _arr((100, 100), jnp.float32)
+    with pytest.raises(AssertionError):
+        gemm_update(c, a, a, bm=64, bn=64, bk=64, interpret=True)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize(
+    "hq,hk,sq,sk,d",
+    [
+        (4, 4, 128, 128, 128),   # MHA
+        (4, 2, 128, 128, 128),   # GQA 2:1
+        (8, 1, 128, 256, 128),   # MQA, decode-style sk > sq
+        (4, 2, 128, 128, 256),   # gemma-style head_dim 256
+    ],
+)
+def test_flash_attention_sweep(hq, hk, sq, sk, d, causal, dtype):
+    q = _arr((hq, sq, d), dtype)
+    k = _arr((hk, sk, d), dtype)
+    v = _arr((hk, sk, d), dtype)
+    out = flash_attention(q, k, v, causal=causal, bq=64, bk=64, interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32),
+        np.asarray(ref, np.float32),
+        atol=(3e-2 if dtype == jnp.bfloat16 else 2e-5),
+        rtol=(3e-2 if dtype == jnp.bfloat16 else 2e-5),
+    )
+
+
+def test_flash_attention_matches_on_long_context():
+    q = _arr((2, 256, 128), jnp.float32)
+    k = _arr((2, 1024, 128), jnp.float32)
+    v = _arr((2, 1024, 128), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=5e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "hq,hk,s,d,length",
+    [
+        (8, 2, 512, 128, 512),   # GQA 4:1, full cache
+        (4, 1, 1024, 128, 700),  # MQA, partially-filled cache
+        (16, 16, 256, 128, 256), # MHA
+    ],
+)
+def test_flash_decode_sweep(hq, hk, s, d, length, dtype):
+    from repro.kernels.flash_decode import flash_decode
+    from repro.kernels.ref import flash_decode_ref
+
+    B = 2
+    q = _arr((B, hq, d), dtype)
+    k = _arr((B, s, hk, d), dtype)
+    v = _arr((B, s, hk, d), dtype)
+    out = flash_decode(q, k, v, length, bk=256, interpret=True)
+    ref = flash_decode_ref(q, k, v, length)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        atol=(3e-2 if dtype == jnp.bfloat16 else 1e-5),
+        rtol=(3e-2 if dtype == jnp.bfloat16 else 1e-5),
+    )

@@ -1,0 +1,85 @@
+"""Tiled linear algebra: numerics vs dense references + schedule replays."""
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.paper_machine import paper_machine
+from repro.core import make_strategy, run_simulation
+from repro.linalg import tiles as T
+from repro.linalg.cholesky import cholesky_graph
+from repro.linalg.execute import execute_graph, execute_schedule
+from repro.linalg.lu import lu_graph
+from repro.linalg.qr import qr_graph
+
+N, TILE = 256, 64
+NT = N // TILE
+
+
+def _rel_err(x, y):
+    return float(jnp.abs(x - y).max() / (jnp.abs(y).max() + 1e-30))
+
+
+def test_cholesky_numerics():
+    a = T.random_spd(N, seed=0, dtype=jnp.float32)
+    store = execute_graph(cholesky_graph(NT, TILE), T.split_tiles(a, TILE))
+    L = jnp.tril(T.join_tiles(store, NT, TILE))
+    assert _rel_err(L @ L.T, a) < 1e-5
+    # matches jnp.linalg.cholesky
+    assert _rel_err(L, jnp.linalg.cholesky(a)) < 1e-4
+
+
+def test_lu_numerics():
+    a = T.random_dd(N, seed=1, dtype=jnp.float32)
+    store = execute_graph(lu_graph(NT, TILE), T.split_tiles(a, TILE))
+    M = T.join_tiles(store, NT, TILE)
+    L = jnp.tril(M, -1) + jnp.eye(N)
+    U = jnp.triu(M)
+    assert _rel_err(L @ U, a) < 1e-5
+
+
+def test_qr_numerics():
+    a = T.random_dense(N, seed=2, dtype=jnp.float32)
+    store = execute_graph(qr_graph(NT, TILE), T.split_tiles(a, TILE))
+    R = jnp.triu(T.join_tiles(store, NT, TILE))
+    assert _rel_err(R.T @ R, a.T @ a) < 1e-4
+
+
+@pytest.mark.parametrize("strat_name,kw", [
+    ("heft", {}),
+    ("ws", {}),
+    ("dada", {"alpha": 0.5}),
+    ("dada", {"alpha": 1.0, "use_cp": True}),
+])
+@pytest.mark.parametrize("maker,matgen", [
+    (cholesky_graph, T.random_spd),
+    (lu_graph, T.random_dd),
+    (qr_graph, T.random_dense),
+])
+def test_every_strategy_schedule_is_a_valid_linearization(strat_name, kw, maker, matgen):
+    """Replaying any simulated schedule gives the same numerics as program
+    order — i.e. schedules are valid linearizations of the data-flow DAG."""
+    a = matgen(N, seed=3, dtype=jnp.float32)
+    ref_store = execute_graph(maker(NT, TILE), T.split_tiles(a, TILE))
+    res = run_simulation(
+        maker(NT, TILE), paper_machine(2), make_strategy(strat_name, **kw), seed=7
+    )
+    store = execute_schedule(maker(NT, TILE), T.split_tiles(a, TILE), res)
+    ref = T.join_tiles(ref_store, NT, TILE)
+    got = T.join_tiles(store, NT, TILE)
+    assert _rel_err(got, ref) < 1e-5
+
+
+def test_graph_flop_totals_match_reference_counts():
+    from repro.linalg import cholesky, lu, qr
+
+    n, tile = 2048, 256
+    nt = n // tile
+    # leading-order agreement (within 20% for modest tile counts)
+    assert cholesky.cholesky_graph(nt, tile).total_flops() == pytest.approx(
+        cholesky.reference_flops(n), rel=0.2
+    )
+    assert lu.lu_graph(nt, tile).total_flops() == pytest.approx(
+        lu.reference_flops(n), rel=0.2
+    )
+    assert qr.qr_graph(nt, tile).total_flops() == pytest.approx(
+        qr.reference_flops(n), rel=0.35
+    )

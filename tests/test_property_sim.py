@@ -1,0 +1,108 @@
+"""Hypothesis property tests over random machines x random task graphs:
+the simulator's invariants hold for ANY strategy/topology combination."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    DADA,
+    DataObject,
+    Mode,
+    ResourceClass,
+    TaskGraph,
+    make_machine,
+    make_strategy,
+    run_simulation,
+)
+
+
+def _random_graph(rng: np.random.Generator, n_tasks: int, n_data: int) -> TaskGraph:
+    g = TaskGraph()
+    datas = [DataObject(f"d{i}", int(rng.integers(1, 10_000))) for i in range(n_data)]
+    for _ in range(n_tasks):
+        k = int(rng.integers(1, min(4, n_data + 1)))
+        picks = rng.choice(n_data, size=k, replace=False)
+        accesses = []
+        for i, di in enumerate(picks):
+            mode = Mode.RW if i == 0 else (Mode.R if rng.random() < 0.7 else Mode.W)
+            accesses.append((datas[di], mode))
+        g.add_task("gemm", accesses, flops=float(rng.uniform(1e8, 1e10)))
+    return g
+
+
+def _random_machine(rng: np.random.Generator):
+    m = int(rng.integers(1, 6))
+    k = int(rng.integers(0, 5))
+    cpu = ResourceClass("cpu", {}, default_rate=float(rng.uniform(5e9, 2e10)))
+    gpu = ResourceClass("gpu", {}, default_rate=float(rng.uniform(5e10, 5e11)))
+    return make_machine(
+        n_cpus=m + k, n_gpus=k, cpu_class=cpu, gpu_class=gpu,
+        pcie_bandwidth=float(rng.uniform(1e9, 2e10)), gpu_pins_cpu=True,
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from(["heft", "ws", "dual"]))
+def test_invariants_hold_on_random_instances(seed, strat_name):
+    rng = np.random.default_rng(seed)
+    g = _random_graph(rng, n_tasks=int(rng.integers(3, 40)), n_data=int(rng.integers(2, 10)))
+    machine = _random_machine(rng)
+    strat = make_strategy(strat_name) if strat_name != "dada" else DADA(alpha=0.5)
+    res = run_simulation(g, machine, strat, seed=seed, noise=0.0)
+    # 1. every task exactly once
+    assert sorted(iv.tid for iv in res.intervals) == list(range(len(g)))
+    # 2. precedence respected
+    end = {iv.tid: iv.end for iv in res.intervals}
+    start = {iv.tid: iv.start for iv in res.intervals}
+    for t in g.tasks:
+        for p in g.pred[t.tid]:
+            assert end[p] <= start[t.tid] + 1e-9
+    # 3. no worker double-booked
+    per = {}
+    for iv in res.intervals:
+        per.setdefault(iv.rid, []).append((iv.start, iv.end))
+    for ivs in per.values():
+        ivs.sort()
+        for (s1, e1), (s2, e2) in zip(ivs, ivs[1:]):
+            assert e1 <= s2 + 1e-9
+    # 4. transfers only when accelerators exist
+    if not machine.gpus:
+        assert res.total_bytes == 0
+    # 5. makespan bounded below by best-case critical path
+    classes = machine.classes()
+    lb = g.critical_path_length(
+        lambda t: min(c.exec_time(t.kind, t.flops) for c in classes)
+    )
+    assert res.makespan >= lb * (1 - 1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000), st.floats(0.0, 1.0))
+def test_dada_handles_any_machine(seed, alpha):
+    rng = np.random.default_rng(seed)
+    g = _random_graph(rng, 20, 6)
+    machine = _random_machine(rng)
+    res = run_simulation(g, machine, DADA(alpha=alpha), seed=seed)
+    assert len(res.intervals) == len(g)
+    assert res.makespan > 0
+
+
+def test_history_model_calibrates():
+    """§2.3: the runtime corrects wrong initial predictions — after a run
+    the history model's prediction matches observed (noisy) reality."""
+    from repro.core import HistoryPerfModel, Simulator
+    from repro.configs.paper_machine import paper_machine
+    from repro.linalg.cholesky import cholesky_graph
+
+    g = cholesky_graph(8, 512, with_fns=False)
+    machine = paper_machine(4)
+    strat = make_strategy("heft")
+    sim = Simulator(g, machine, strat, seed=0, noise=0.1)
+    sim.run()
+    gpu_cls = machine.gpus[0].cls
+    gemm = next(t for t in g.tasks if t.kind == "gemm")
+    pred = sim.model.predict(gemm, gpu_cls)
+    true = gpu_cls.exec_time("gemm", gemm.flops)
+    assert abs(pred - true) / true < 0.1  # converged within noise level
+    assert sim.model.n_observations() == len(g)

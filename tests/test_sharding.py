@@ -1,0 +1,134 @@
+"""Sharding-rule unit tests (pure functions over a 512-device abstract mesh
+are not needed — a tiny mesh with the same axis names exercises the rules)."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.registry import get_config
+from repro.configs.shapes import SHAPES
+from repro.dist.sharding import batch_specs, cache_specs, opt_specs, param_specs
+from repro.launch.input_specs import batch_sds, decode_sds, params_sds
+from repro.launch.mesh import make_smoke_mesh
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    # single real device, but axis names/sizes drive the rules; use shape
+    # (1,1) so every divisibility test passes trivially? No — we want the
+    # production sizes. Use an abstract mesh built from the device repeated?
+    # jax requires real devices; instead we monkeypatch sizes via a fake.
+    return make_smoke_mesh(1, 1)
+
+
+class FakeMesh:
+    """Duck-typed mesh exposing .shape/.axis_names for the spec rules."""
+
+    def __init__(self, **axes):
+        self.shape = dict(axes)
+        self.axis_names = tuple(axes)
+
+
+PROD = FakeMesh(data=16, model=16)
+PROD2 = FakeMesh(pod=2, data=16, model=16)
+
+
+def _leaf(tree, *path):
+    node = tree
+    for p in path:
+        node = node[p]
+    return node
+
+
+def test_param_specs_granite():
+    cfg = get_config("granite-8b")
+    p = params_sds(cfg)
+    specs = param_specs(cfg, p, PROD)
+    # embedding: d over model (gather-friendly), vocab whole
+    assert _leaf(specs, "embed", "table") == P(None, "model")
+    # lm_head: vocab over model, d FSDP over data
+    assert _leaf(specs, "lm_head") == P("data", "model")
+    # attention wq (stacked): leading period dim unsharded
+    wq = _leaf(specs, "blocks", "p0", "attn", "wq")
+    assert wq[0] is None and "model" in wq
+
+
+def test_param_specs_tied_vocab_sharded():
+    cfg = get_config("gemma-7b")  # tied embeddings, vocab 256000 % 16 == 0
+    specs = param_specs(cfg, params_sds(cfg), PROD)
+    assert _leaf(specs, "embed", "table") == P("model", None)
+
+
+def test_param_specs_indivisible_vocab_replicated():
+    cfg = get_config("minicpm3-4b")  # vocab 73448 % 16 != 0
+    specs = param_specs(cfg, params_sds(cfg), PROD)
+    spec = _leaf(specs, "lm_head")
+    assert spec[1] is None  # vocab dim cannot shard
+
+
+def test_moe_expert_dim_sharded_when_divisible():
+    cfg = get_config("kimi-k2-1t-a32b")  # 384 experts % 16 == 0
+    specs = param_specs(cfg, params_sds(cfg), PROD)
+    w_up = _leaf(specs, "blocks", "p0", "moe", "w_up")
+    assert w_up[1] == "model"  # EP on the expert dim
+
+
+def test_moe_fallback_tp_when_experts_indivisible():
+    cfg = get_config("grok-1-314b")  # 8 experts, not divisible by 16
+    specs = param_specs(cfg, params_sds(cfg), PROD)
+    w_up = _leaf(specs, "blocks", "p0", "moe", "w_up")
+    assert w_up[1] != "model"  # expert dim not sharded
+    assert "model" in tuple(w_up)  # but some dim is (TP inside experts)
+
+
+def test_fsdp_off_drops_data_axis():
+    cfg = get_config("granite-8b")
+    specs = param_specs(cfg, params_sds(cfg), PROD, fsdp=False)
+    flat = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    for s in flat:
+        assert "data" not in [a for a in s if isinstance(a, str)], s
+
+
+def test_batch_specs_train_and_long_context():
+    cfg = get_config("granite-8b")
+    b = batch_sds(cfg, SHAPES["train_4k"])
+    specs = batch_specs(cfg, PROD2, b)
+    assert specs["tokens"] == P(("pod", "data"))
+    # long_500k: batch=1 -> sequence dim takes the batch axes
+    cfg2 = get_config("jamba-v0.1-52b")
+    b2 = {"tokens": jax.ShapeDtypeStruct((1, 524288), jnp.int32)}
+    specs2 = batch_specs(cfg2, PROD2, b2)
+    assert specs2["tokens"] == P(None, ("pod", "data"))
+
+
+def test_cache_specs_gqa_sequence_sharding():
+    cfg = get_config("chatglm3-6b")  # kv=2 < 16 -> S over model
+    d = decode_sds(cfg, SHAPES["decode_32k"])
+    specs = cache_specs(cfg, PROD, d["cache"])
+    k = _leaf(specs, "p0", "k")  # (periods, B, S, kv, hd)
+    assert k[1] == ("data",) or k[1] == "data"
+    assert k[2] == "model"  # sequence-sharded KV
+
+    cfg2 = get_config("gemma-7b")  # kv=16 -> heads shard
+    d2 = decode_sds(cfg2, SHAPES["decode_32k"])
+    specs2 = cache_specs(cfg2, PROD, d2["cache"])
+    k2 = _leaf(specs2, "p0", "k")
+    assert k2[3] == "model"
+
+
+def test_opt_specs_inherit():
+    cfg = get_config("granite-8b")
+    ps = param_specs(cfg, params_sds(cfg), PROD)
+    os_ = opt_specs(ps)
+    assert _leaf(os_["m"], "lm_head") == _leaf(ps, "lm_head")
+    assert os_["step"] == P()
+
+
+def test_ep_pods_spans_pod_axis():
+    cfg = get_config("kimi-k2-1t-a32b")  # 384 % (2*16) == 0
+    specs = param_specs(cfg, params_sds(cfg), PROD2, ep_pods=True)
+    w_up = _leaf(specs, "blocks", "p0", "moe", "w_up")
+    assert w_up[1] == ("pod", "model")
+    # without the flag: model only
+    specs = param_specs(cfg, params_sds(cfg), PROD2)
+    assert _leaf(specs, "blocks", "p0", "moe", "w_up")[1] == "model"

@@ -1,0 +1,132 @@
+"""Simulator invariants: completeness, precedence, transfers, determinism."""
+import pytest
+
+from repro.configs.paper_machine import paper_machine
+from repro.core import (
+    DataObject,
+    Mode,
+    TaskGraph,
+    make_strategy,
+    run_simulation,
+)
+from repro.linalg.cholesky import cholesky_graph
+
+STRATS = ["heft", "ws", "dual"]
+
+
+def _chol(nt=6, tile=256):
+    return cholesky_graph(nt, tile, with_fns=False)
+
+
+@pytest.mark.parametrize("strat", STRATS + ["dada"])
+def test_all_tasks_run_exactly_once(strat):
+    g = _chol()
+    res = run_simulation(g, paper_machine(3), strat, seed=0)
+    tids = [iv.tid for iv in res.intervals]
+    assert sorted(tids) == list(range(len(g)))
+
+
+@pytest.mark.parametrize("strat", STRATS + ["dada"])
+def test_precedence_respected(strat):
+    g = _chol()
+    res = run_simulation(g, paper_machine(3), strat, seed=0)
+    end = {iv.tid: iv.end for iv in res.intervals}
+    start = {iv.tid: iv.start for iv in res.intervals}
+    for t in g.tasks:
+        for p in g.pred[t.tid]:
+            assert end[p] <= start[t.tid] + 1e-9
+
+
+@pytest.mark.parametrize("strat", STRATS)
+def test_workers_not_double_booked(strat):
+    g = _chol()
+    res = run_simulation(g, paper_machine(2), strat, seed=1)
+    per_worker = {}
+    for iv in res.intervals:
+        per_worker.setdefault(iv.rid, []).append((iv.start, iv.end))
+    for rid, ivs in per_worker.items():
+        ivs.sort()
+        for (s1, e1), (s2, e2) in zip(ivs, ivs[1:]):
+            assert e1 <= s2 + 1e-9, f"worker {rid} overlaps"
+
+
+def test_makespan_at_least_critical_path():
+    g = _chol()
+    m = paper_machine(4)
+    # lower bound: every task at its best-class rate, zero transfer
+    classes = m.classes()
+    lb = g.critical_path_length(
+        lambda t: min(c.exec_time(t.kind, t.flops) for c in classes)
+    )
+    for strat in STRATS:
+        res = run_simulation(g, m, strat, seed=0, noise=0.0)
+        assert res.makespan >= lb * (1 - 1e-9)
+
+
+def test_cpu_only_machine_no_transfers():
+    g = _chol()
+    res = run_simulation(g, paper_machine(0), "heft", seed=0)
+    assert res.total_bytes == 0
+    assert res.n_transfers == 0
+
+
+def test_gpu_runs_imply_transfers():
+    g = _chol()
+    res = run_simulation(g, paper_machine(4), "heft", seed=0)
+    assert res.total_bytes > 0
+
+
+def test_determinism():
+    g1 = _chol()
+    g2 = _chol()
+    m = paper_machine(3)
+    r1 = run_simulation(g1, m, make_strategy("dada", alpha=0.7), seed=42)
+    r2 = run_simulation(g2, m, make_strategy("dada", alpha=0.7), seed=42)
+    assert r1.makespan == r2.makespan
+    assert r1.total_bytes == r2.total_bytes
+    assert [iv.tid for iv in r1.intervals] == [iv.tid for iv in r2.intervals]
+
+
+def test_steals_only_in_ws():
+    g = _chol()
+    m = paper_machine(3)
+    assert run_simulation(g, m, "heft", seed=0).n_steals == 0
+    assert run_simulation(g, m, "dual", seed=0).n_steals == 0
+    assert run_simulation(g, m, "ws", seed=0).n_steals > 0
+
+
+def test_busy_time_conservation():
+    """Sum of interval lengths equals per-worker busy accounting."""
+    g = _chol()
+    res = run_simulation(g, paper_machine(2), "heft", seed=0)
+    per = {}
+    for iv in res.intervals:
+        per[iv.rid] = per.get(iv.rid, 0.0) + (iv.end - iv.start)
+    for rid, b in res.busy.items():
+        assert abs(per.get(rid, 0.0) - b) < 1e-6
+
+
+def test_write_invalidation_forces_retransfer():
+    """d written on GPU0 then read on GPU1 must move (2-hop via host)."""
+    g = TaskGraph()
+    d = DataObject("d", 1000)
+    e = DataObject("e", 1000)
+    g.add_task("gemm", [(d, Mode.RW)], flops=1e9)
+    g.add_task("gemm", [(d, Mode.R), (e, Mode.RW)], flops=1e9)
+
+    class Pin:
+        # force task0 -> gpu A, task1 -> gpu B
+        name = "pin"
+        allow_steal = False
+        owner_lifo = False
+
+        def init(self, sim):
+            self.gpus = [r.rid for r in sim.machine.gpus]
+
+        def place(self, sim, ready, src):
+            for t in ready:
+                sim.push(t, self.gpus[t.tid % 2])
+
+    res = run_simulation(g, paper_machine(2), Pin(), seed=0)
+    # initial H2D of d (+e) plus D2H+H2D for d after the write
+    assert res.total_bytes >= 3 * 1000

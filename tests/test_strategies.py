@@ -1,0 +1,142 @@
+"""Strategy-level invariants: HEFT ordering, DADA dual-approximation bound,
+affinity behavior, and brute-force optimality comparisons on tiny instances."""
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    DADA,
+    DataObject,
+    HEFT,
+    Mode,
+    ResourceClass,
+    Simulator,
+    TaskGraph,
+    make_machine,
+    run_simulation,
+)
+
+CPU = ResourceClass("cpu", {}, default_rate=1e9)
+GPU = ResourceClass("gpu", {}, default_rate=10e9)
+
+
+def _machine(m=2, k=2):
+    return make_machine(
+        n_cpus=m + k, n_gpus=k, cpu_class=CPU, gpu_class=GPU, gpu_pins_cpu=True
+    )
+
+
+def _independent(flops_list):
+    g = TaskGraph()
+    for i, f in enumerate(flops_list):
+        g.add_task("gemm", [(DataObject(f"d{i}", 0), Mode.RW)], flops=f)
+    return g
+
+
+def _opt_makespan(flops_list, m, k):
+    """Brute force: minimal makespan over all assignments (independent
+    tasks, per-resource sum of exec times)."""
+    best = float("inf")
+    n_res = m + k
+    times = [
+        [
+            (CPU if r < m else GPU).exec_time("gemm", f)
+            for r in range(n_res)
+        ]
+        for f in flops_list
+    ]
+    for assign in itertools.product(range(n_res), repeat=len(flops_list)):
+        loads = [0.0] * n_res
+        for t, r in enumerate(assign):
+            loads[r] += times[t][r]
+        best = min(best, max(loads))
+    return best
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.lists(st.floats(1e8, 5e10), min_size=1, max_size=6),
+    st.floats(0.0, 1.0),
+)
+def test_dada_dual_approximation_bound(flops_list, alpha):
+    """Property (paper §3.2): the schedule kept by DADA fits within
+    (2+alpha) * lambda of the accepted guess, and the resulting makespan is
+    within (2+alpha)*(1+eps) of the true optimum on independent tasks."""
+    m, k = 2, 2
+    g = _independent(flops_list)
+    machine = _machine(m, k)
+    strat = DADA(alpha=alpha)
+    sim = Simulator(g, machine, strat, seed=0, noise=0.0)
+    res = sim.run()
+    lam = strat.last_lambda
+    bound = (2.0 + alpha) * lam
+    assert max(strat.last_loads.values()) <= bound + 1e-9
+    opt = _opt_makespan(flops_list, m, k)
+    # binary search precision eps_rel=0.01 on lambda
+    assert res.makespan <= (2.0 + alpha) * opt * 1.02 + 1e-9
+    assert res.makespan >= opt * (1 - 1e-9)
+
+
+def test_heft_matches_optimal_single_task():
+    g = _independent([1e10])
+    res = run_simulation(g, _machine(2, 2), "heft", seed=0, noise=0.0)
+    assert res.makespan == pytest.approx(GPU.exec_time("gemm", 1e10), rel=1e-6)
+
+
+def test_heft_prefers_gpu_for_high_speedup():
+    g = _independent([1e10, 1e10])
+    res = run_simulation(g, _machine(2, 2), "heft", seed=0, noise=0.0)
+    rids = {iv.rid for iv in res.intervals}
+    machine = _machine(2, 2)
+    gpu_ids = {r.rid for r in machine.gpus}
+    assert rids <= gpu_ids  # both big tasks land on (distinct) GPUs
+    assert len(rids) == 2
+
+
+def test_heft_near_optimal_small_instances():
+    rng = np.random.default_rng(0)
+    for _ in range(5):
+        fl = list(rng.uniform(1e9, 2e10, size=5))
+        g = _independent(fl)
+        res = run_simulation(g, _machine(2, 2), "heft", seed=0, noise=0.0)
+        opt = _opt_makespan(fl, 2, 2)
+        assert res.makespan <= 2.0 * opt + 1e-9  # list-scheduling bound
+
+
+def test_dada_alpha_zero_is_pure_dual():
+    from repro.core.dada import DualApprox
+
+    d = DualApprox()
+    assert d.alpha == 0.0
+    assert d.name == "dual"
+
+
+def test_dada_affinity_attracts_task_to_resident_gpu():
+    """A task writing data resident on GPU g should be placed on g by the
+    affinity phase when alpha is high."""
+    g = TaskGraph()
+    d = DataObject("d", 10**8)
+    e = DataObject("e", 10**8)
+    g.add_task("gemm", [(d, Mode.RW)], flops=1e9)  # runs somewhere, writes d
+    g.add_task("gemm", [(d, Mode.RW), (e, Mode.R)], flops=1e9)  # affinity to d
+    machine = _machine(2, 2)
+    strat = DADA(alpha=1.0)
+    sim = Simulator(g, machine, strat, seed=0, noise=0.0)
+    res = sim.run()
+    by_tid = {iv.tid: iv.rid for iv in res.intervals}
+    r0 = machine.by_id(by_tid[0])
+    r1 = machine.by_id(by_tid[1])
+    if r0.is_accelerator:  # affinity only counts accelerator residency
+        assert by_tid[1] == by_tid[0]
+        # and the second task must not re-transfer d
+        assert res.total_bytes <= d.size_bytes + e.size_bytes
+
+
+def test_invalid_alpha_rejected():
+    with pytest.raises(ValueError):
+        DADA(alpha=1.5)
+    with pytest.raises(ValueError):
+        DADA(alpha=-0.1)
