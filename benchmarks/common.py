@@ -9,16 +9,22 @@ Environment knobs:
   REPRO_BENCH_RUNS   repetitions per configuration (default 30, paper-level)
   REPRO_BENCH_GPUS   comma list of GPU counts       (default 1..8)
   REPRO_BENCH_FAST   =1 shrinks to 3 runs x {2,4,8} GPUs for smoke use
+  REPRO_BENCH_JOBS   process-pool width for the seeded repetitions
+                     (default: CPU count; 1 forces the serial path)
+
+Factories are ``functools.partial`` over module-level callables (not
+lambdas) so ``run_many`` can ship them to its process pool.
 """
 from __future__ import annotations
 
 import csv
 import os
+from functools import partial
 from pathlib import Path
 from typing import Callable, Dict, List
 
 from repro.configs.paper_machine import paper_machine
-from repro.core import DADA, Summary, make_strategy, run_many
+from repro.core import DADA, Summary, default_jobs, get_pool, make_strategy, run_many
 from repro.linalg.cholesky import cholesky_graph
 from repro.linalg.lu import lu_graph
 from repro.linalg.qr import qr_graph
@@ -29,9 +35,9 @@ NT = MATRIX // TILE
 RESULTS_DIR = Path(__file__).resolve().parent / "results"
 
 GRAPHS: Dict[str, Callable] = {
-    "cholesky": lambda: cholesky_graph(NT, TILE, with_fns=False),
-    "lu": lambda: lu_graph(NT, TILE, with_fns=False),
-    "qr": lambda: qr_graph(NT, TILE, with_fns=False),
+    "cholesky": partial(cholesky_graph, NT, TILE, with_fns=False),
+    "lu": partial(lu_graph, NT, TILE, with_fns=False),
+    "qr": partial(qr_graph, NT, TILE, with_fns=False),
 }
 
 
@@ -44,12 +50,17 @@ def bench_settings():
 
 
 STRATEGIES: Dict[str, Callable] = {
-    "heft": lambda: make_strategy("heft"),
-    "ws": lambda: make_strategy("ws"),
-    "dada(0)": lambda: DADA(alpha=0.0),
-    "dada(a)": lambda: DADA(alpha=0.5),
-    "dada(a)+cp": lambda: DADA(alpha=0.5, use_cp=True),
+    "heft": partial(make_strategy, "heft"),
+    "ws": partial(make_strategy, "ws"),
+    "dada(0)": partial(DADA, alpha=0.0),
+    "dada(a)": partial(DADA, alpha=0.5),
+    "dada(a)+cp": partial(DADA, alpha=0.5, use_cp=True),
 }
+
+
+def _sweep_config(graph_factory, machine, sfac, n_runs: int) -> Summary:
+    """One (strategy × machine) configuration, run serially (pool worker)."""
+    return run_many(graph_factory, machine, sfac, n_runs=n_runs, n_jobs=1)
 
 
 def sweep(
@@ -59,37 +70,78 @@ def sweep(
     n_runs: int,
     gpu_counts: List[int],
 ) -> List[dict]:
-    """Run strategies x gpu-counts; persist CSV; return row dicts."""
+    """Run strategies x gpu-counts; persist CSV; return row dicts.
+
+    Configurations fan out over the shared process pool (one pool task per
+    strategy × GPU-count, each running its seeded repetitions serially —
+    coarser tasks than per-seed fan-out, so 2 workers stay busy end to
+    end). Each configuration is independently seeded, so results are
+    bit-identical to the serial loop and are gathered in sweep order.
+
+    An empty sweep (no strategies or no GPU counts, e.g. an empty
+    ``REPRO_BENCH_GPUS``) returns ``[]`` with a warning instead of
+    crashing on the CSV header row.
+    """
     rows = []
+    if not strategies or not gpu_counts:
+        print(
+            f"  {fig} {kernel}: empty sweep "
+            f"({len(strategies)} strategies x {len(gpu_counts)} gpu counts) — skipping",
+            flush=True,
+        )
+        return rows
     RESULTS_DIR.mkdir(parents=True, exist_ok=True)
     out_path = RESULTS_DIR / f"{fig}.csv"
     graph_factory = GRAPHS[kernel]
-    for n_gpus in gpu_counts:
-        machine = paper_machine(n_gpus)
-        for label, sfac in strategies.items():
-            s: Summary = run_many(
-                graph_factory, machine, sfac, n_runs=n_runs
-            )
-            row = dict(
-                fig=fig,
-                kernel=kernel,
-                strategy=label,
-                n_gpus=n_gpus,
-                n_runs=s.n,
-                gflops=round(s.gflops_mean, 2),
-                gflops_ci95=round(s.gflops_ci95, 2),
-                gbytes=round(s.gbytes_mean, 4),
-                gbytes_ci95=round(s.gbytes_ci95, 4),
-                makespan_s=round(s.makespan_mean, 5),
-                steals=round(s.steals_mean, 1),
-            )
-            rows.append(row)
-            print(
-                f"  {fig} {kernel} gpus={n_gpus} {label:12s} "
-                f"{row['gflops']:8.1f} GF (±{row['gflops_ci95']}) "
-                f"{row['gbytes']:7.3f} GB (±{row['gbytes_ci95']})",
-                flush=True,
-            )
+
+    configs = [
+        (n_gpus, label, sfac)
+        for n_gpus in gpu_counts
+        for label, sfac in strategies.items()
+    ]
+    summaries: List[Summary]
+    n_jobs = default_jobs(len(configs))
+    futs = None
+    if n_jobs > 1 and len(configs) > 1:
+        try:
+            import pickle
+
+            pickle.dumps([sfac for _, _, sfac in configs] + [graph_factory])
+            pool = get_pool(n_jobs)
+            futs = [
+                pool.submit(
+                    _sweep_config, graph_factory, paper_machine(n_gpus), sfac, n_runs
+                )
+                for n_gpus, label, sfac in configs
+            ]
+        except Exception:
+            futs = None  # non-picklable factories: run serially below
+
+    for k, (n_gpus, label, sfac) in enumerate(configs):
+        if futs is not None:
+            s = futs[k].result()
+        else:
+            s = _sweep_config(graph_factory, paper_machine(n_gpus), sfac, n_runs)
+        row = dict(
+            fig=fig,
+            kernel=kernel,
+            strategy=label,
+            n_gpus=n_gpus,
+            n_runs=s.n,
+            gflops=round(s.gflops_mean, 2),
+            gflops_ci95=round(s.gflops_ci95, 2),
+            gbytes=round(s.gbytes_mean, 4),
+            gbytes_ci95=round(s.gbytes_ci95, 4),
+            makespan_s=round(s.makespan_mean, 5),
+            steals=round(s.steals_mean, 1),
+        )
+        rows.append(row)
+        print(
+            f"  {fig} {kernel} gpus={n_gpus} {label:12s} "
+            f"{row['gflops']:8.1f} GF (±{row['gflops_ci95']}) "
+            f"{row['gbytes']:7.3f} GB (±{row['gbytes_ci95']})",
+            flush=True,
+        )
     with out_path.open("w", newline="") as f:
         w = csv.DictWriter(f, fieldnames=list(rows[0].keys()))
         w.writeheader()

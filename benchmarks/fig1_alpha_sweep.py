@@ -3,6 +3,8 @@
 alpha values, with and without communication prediction."""
 from __future__ import annotations
 
+from functools import partial
+
 from repro.core import DADA
 
 from .common import bench_settings, emit_csv_lines, sweep
@@ -14,9 +16,9 @@ def main() -> list:
     runs, gpus = bench_settings()
     strategies = {}
     for a in ALPHAS:
-        strategies[f"dada({a:g})"] = lambda a=a: DADA(alpha=a)
+        strategies[f"dada({a:g})"] = partial(DADA, alpha=a)
     for a in ALPHAS:
-        strategies[f"dada({a:g})+cp"] = lambda a=a: DADA(alpha=a, use_cp=True)
+        strategies[f"dada({a:g})+cp"] = partial(DADA, alpha=a, use_cp=True)
     rows = sweep("fig1_alpha_sweep", "cholesky", strategies, runs, gpus)
     emit_csv_lines(rows)
     return rows

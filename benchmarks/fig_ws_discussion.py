@@ -7,6 +7,8 @@ benchmark quantifies both halves across matrix sizes.
 """
 from __future__ import annotations
 
+from functools import partial
+
 from repro.configs.paper_machine import paper_machine
 from repro.core import DADA, make_strategy, run_many
 from repro.linalg.cholesky import cholesky_graph
@@ -21,12 +23,12 @@ def main() -> list:
     for n in (2048, 4096, 8192, 16384):
         nt = n // 512
         for label, fac in [
-            ("ws", lambda: make_strategy("ws")),
-            ("heft", lambda: make_strategy("heft")),
-            ("dada(a)+cp", lambda: DADA(alpha=0.5, use_cp=True)),
+            ("ws", partial(make_strategy, "ws")),
+            ("heft", partial(make_strategy, "heft")),
+            ("dada(a)+cp", partial(DADA, alpha=0.5, use_cp=True)),
         ]:
             s = run_many(
-                lambda nt=nt: cholesky_graph(nt, 512, with_fns=False),
+                partial(cholesky_graph, nt, 512, with_fns=False),
                 machine, fac, n_runs=max(3, runs // 3),
             )
             rows.append(dict(

@@ -1,0 +1,89 @@
+"""Scheduler-overhead microbenchmark: events/sec of the scheduling core.
+
+The paper's sweeps are bottlenecked by the scheduler's own per-decision
+cost, not by the simulated workload (cf. Amaris et al., arXiv:1711.06433 on
+keeping dual-approximation decisions cheap). This benchmark isolates that
+cost: for each strategy it runs seeded simulations of the paper-shaped
+kernels and reports wall-clock, simulator events/sec and tasks/sec —
+the scheduler-throughput numbers the array-native core is optimized for.
+
+Runnable directly (``python benchmarks/sched_overhead.py``) or via
+``python -m benchmarks.sched_overhead``. Knobs: REPRO_BENCH_GPUS (first
+entry is used, default 8) and REPRO_BENCH_RUNS (default 3).
+
+Output follows the ``name,us_per_call,derived`` contract.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+from pathlib import Path
+
+if __package__ in (None, ""):
+    _repo = Path(__file__).resolve().parents[1]
+    for p in (str(_repo), str(_repo / "src")):
+        if p not in sys.path:
+            sys.path.insert(0, p)
+
+from repro.configs.paper_machine import paper_machine
+from repro.core import Simulator, make_strategy
+from repro.core.dada import DADA
+
+from benchmarks.common import GRAPHS
+
+
+def strategies():
+    return {
+        "heft": lambda: make_strategy("heft"),
+        "ws": lambda: make_strategy("ws"),
+        "dada(0)": lambda: DADA(alpha=0.0),
+        "dada(a)": lambda: DADA(alpha=0.5),
+        "dada(a)+cp": lambda: DADA(alpha=0.5, use_cp=True),
+    }
+
+
+def main() -> list:
+    gpus_env = os.environ.get("REPRO_BENCH_GPUS", "8")
+    n_gpus = int(gpus_env.split(",")[0] or 8)
+    n_runs = int(os.environ.get("REPRO_BENCH_RUNS", "3"))
+    machine = paper_machine(n_gpus)
+
+    print("name,us_per_call,derived")
+    rows = []
+    for kernel, gfac in GRAPHS.items():
+        for label, sfac in strategies().items():
+            # graph construction excluded: we are measuring the scheduler
+            graphs = [gfac() for _ in range(n_runs)]
+            events = tasks = 0
+            t0 = time.perf_counter()
+            for i, g in enumerate(graphs):
+                sim = Simulator(g, machine, sfac(), seed=1234 + i)
+                res = sim.run()
+                events += res.n_events
+                tasks += len(g)
+            dt = time.perf_counter() - t0
+            ev_s = events / dt if dt > 0 else 0.0
+            t_s = tasks / dt if dt > 0 else 0.0
+            us = dt / n_runs * 1e6
+            row = dict(
+                kernel=kernel, strategy=label, n_gpus=n_gpus, runs=n_runs,
+                wall_s=round(dt, 4), events=events,
+                events_per_s=round(ev_s, 1), tasks_per_s=round(t_s, 1),
+            )
+            rows.append(row)
+            print(
+                f"sched_overhead/{kernel}/{label}/gpus{n_gpus},{us:.1f},"
+                f"events_per_s={row['events_per_s']};tasks_per_s={row['tasks_per_s']}"
+            )
+    total_ev = sum(r["events"] for r in rows)
+    total_s = sum(r["wall_s"] for r in rows)
+    print(
+        f"sched_overhead/total,{total_s * 1e6:.1f},"
+        f"events_per_s={total_ev / total_s:.1f}" if total_s > 0 else "n/a"
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -4,10 +4,17 @@ Exports the task-graph model, machine/performance models, the XKaapi-like
 simulator, and the scheduling strategies (HEFT, DADA, dual approximation,
 work stealing).
 """
-from .affinity import AFFINITY_FUNCTIONS
-from .api import Summary, make_strategy, run_many, run_simulation
+from .affinity import AFFINITY_FUNCTIONS, AFFINITY_MATRIX_FUNCTIONS
+from .api import (
+    Summary,
+    default_jobs,
+    get_pool,
+    make_strategy,
+    run_many,
+    run_simulation,
+)
 from .dada import DADA, DualApprox
-from .dag import Access, DataObject, Mode, Task, TaskGraph
+from .dag import Access, DataObject, GraphArrays, Mode, Task, TaskGraph
 from .heft import HEFT
 from .machine import (
     HOST_MEM,
@@ -17,14 +24,16 @@ from .machine import (
     ResourceClass,
     make_machine,
 )
-from .perfmodel import HistoryPerfModel, Residency, TransferModel
+from .perfmodel import ClassPredictor, HistoryPerfModel, Residency, TransferModel
 from .simulator import SimResult, Simulator, Strategy
 from .worksteal import WorkSteal
 
 __all__ = [
-    "AFFINITY_FUNCTIONS", "Access", "DADA", "DataObject", "DualApprox",
+    "AFFINITY_FUNCTIONS", "AFFINITY_MATRIX_FUNCTIONS", "Access", "ClassPredictor",
+    "DADA", "DataObject", "DualApprox", "GraphArrays",
     "HEFT", "HOST_MEM", "HistoryPerfModel", "LinkModel", "MachineModel",
     "Mode", "Residency", "Resource", "ResourceClass", "SimResult",
     "Simulator", "Strategy", "Summary", "Task", "TaskGraph", "TransferModel",
-    "WorkSteal", "make_machine", "make_strategy", "run_many", "run_simulation",
+    "WorkSteal", "default_jobs", "get_pool", "make_machine", "make_strategy",
+    "run_many", "run_simulation",
 ]

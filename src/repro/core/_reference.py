@@ -1,0 +1,279 @@
+"""Scalar reference implementations of the scheduling core.
+
+These are the pre-vectorization HEFT / DADA strategies and the set-based
+Residency, kept verbatim (modulo renames) as the ground truth for the
+bit-for-bit equivalence suite (``tests/test_equivalence.py``,
+``tests/test_residency_property.py``). They are *not* exported from
+``repro.core``; production code uses the array-native versions.
+
+Do not "improve" this file: its value is that it computes placements with
+the exact same floating-point operation order the original per-task loops
+used, so any divergence in the vectorized core is a real regression.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+from .affinity import AFFINITY_FUNCTIONS, AffinityFn
+from .dag import Task
+from .simulator import Simulator, Strategy
+
+_TINY = 1e-12
+
+
+class SetResidency:
+    """Set-based residency tracker (the original implementation)."""
+
+    def __init__(self) -> None:
+        self._where: Dict[str, set] = {}
+
+    def is_resident(self, name: str, mem: int) -> bool:
+        return mem in self._where.get(name, set())
+
+    def locations(self, name: str) -> set:
+        return set(self._where.get(name, set()))
+
+    def has_any(self, name: str) -> bool:
+        return bool(self._where.get(name))
+
+    def transfer_hops(self, name: str, dst_mem: int) -> int:
+        from .machine import HOST_MEM
+
+        locs = self._where.get(name, set())
+        if not locs or dst_mem in locs:
+            return 0
+        if dst_mem == HOST_MEM or HOST_MEM in locs:
+            return 1
+        return 2
+
+    def add_copy(self, name: str, mem: int) -> None:
+        self._where.setdefault(name, set()).add(mem)
+
+    def write(self, name: str, mem: int) -> None:
+        self._where[name] = {mem}
+
+    def initialize(self, names, mem: int) -> None:
+        for n in names:
+            self.write(n, mem)
+
+    def bytes_resident(self, mem: int, sizes: Dict[str, int]) -> int:
+        return sum(sz for n, sz in sizes.items() if self.is_resident(n, mem))
+
+
+class ReferenceHEFT(Strategy):
+    """Per-task-loop HEFT (paper §3.1), original implementation."""
+
+    name = "heft"
+    allow_steal = False
+    owner_lifo = False
+
+    def place(self, sim: Simulator, ready: List[Task], src: Optional[int]) -> None:
+        machine = sim.machine
+        cpus = machine.cpus
+        gpus = machine.gpus
+        cpu_cls = cpus[0].cls if cpus else gpus[0].cls
+        gpu_cls = gpus[0].cls if gpus else cpu_cls
+
+        # --- task prioritizing: decreasing speedup -----------------------
+        scored = []
+        for t in ready:
+            p_cpu = sim.model.predict(t, cpu_cls)
+            p_gpu = sim.model.predict(t, gpu_cls)
+            s = p_cpu / p_gpu if p_gpu > 0 else 1.0
+            scored.append((-s, t.tid, t))
+        scored.sort()
+
+        # --- worker selection: earliest finish time ----------------------
+        for _, _, t in scored:
+            best_eft = float("inf")
+            best_rid = machine.resources[0].rid
+            for r in machine.resources:
+                start = max(sim.now, sim.load_ts[r.rid])
+                xfer = sim.transfer_model.task_input_transfer_time(
+                    t, r, sim.residency
+                )
+                eft = start + xfer + sim.model.predict(t, r.cls)
+                if eft < best_eft - 1e-15:
+                    best_eft = eft
+                    best_rid = r.rid
+            sim.load_ts[best_rid] = best_eft
+            sim.push(t, best_rid)
+
+
+class ReferenceDADA(Strategy):
+    """Per-task-loop DADA (paper §3.2, Algorithm 2), original implementation."""
+
+    allow_steal = False
+    owner_lifo = False
+
+    def __init__(
+        self,
+        alpha: float = 0.5,
+        use_cp: bool = False,
+        affinity: str = "accel_write",
+        eps_rel: float = 0.01,
+        max_iters: int = 30,
+        area_bound: bool = False,
+    ) -> None:
+        if not 0.0 <= alpha <= 1.0:
+            raise ValueError("alpha must be within [0, 1]")
+        self.alpha = alpha
+        self.use_cp = use_cp
+        self.affinity_fn: AffinityFn = AFFINITY_FUNCTIONS[affinity]
+        self.eps_rel = eps_rel
+        self.max_iters = max_iters
+        self.area_bound = area_bound
+        cp = "+cp" if use_cp else ""
+        self.name = f"dada({alpha:g}){cp}"
+
+    # ------------------------------------------------------------------
+    def place(self, sim: Simulator, ready: List[Task], src: Optional[int]) -> None:
+        machine = sim.machine
+        resources = machine.resources
+        cpus = machine.cpus
+        gpus = machine.gpus
+        cpu_cls = cpus[0].cls if cpus else gpus[0].cls
+        gpu_cls = gpus[0].cls if gpus else cpu_cls
+
+        p_cpu = {t.tid: sim.model.predict(t, cpu_cls) for t in ready}
+        p_gpu = {t.tid: sim.model.predict(t, gpu_cls) for t in ready}
+
+        xfer_cache: Dict[Tuple[int, int], float] = {}
+
+        def xfer(t: Task, rid: int) -> float:
+            if not self.use_cp:
+                return 0.0
+            key = (t.tid, rid)
+            if key not in xfer_cache:
+                xfer_cache[key] = sim.transfer_model.task_input_transfer_time(
+                    t, machine.by_id(rid), sim.residency
+                )
+            return xfer_cache[key]
+
+        def cost(t: Task, rid: int) -> float:
+            r = machine.by_id(rid)
+            p = p_cpu[t.tid] if not r.is_accelerator else p_gpu[t.tid]
+            return p + xfer(t, rid)
+
+        offsets = {
+            r.rid: max(0.0, sim.load_ts[r.rid] - sim.now) for r in resources
+        }
+
+        # affinity preferences (resource of max score, per task)
+        pref: Dict[int, Tuple[float, int]] = {}
+        if self.alpha > 0.0:
+            for t in ready:
+                best_score, best_rid = 0.0, -1
+                for r in resources:
+                    s = self.affinity_fn(t, r, sim.residency)
+                    if s > best_score + _TINY:
+                        best_score, best_rid = s, r.rid
+                if best_rid >= 0:
+                    pref[t.tid] = (best_score, best_rid)
+
+        # ------------------------------------------------------------------
+        def try_build(lam: float) -> Optional[Tuple[Dict[int, int], Dict[int, float]]]:
+            if self.area_bound:
+                area = sum(min(p_cpu[t.tid], p_gpu[t.tid]) for t in ready)
+                capacity = lam * len(resources) - sum(offsets.values())
+                if area > capacity + _TINY:
+                    return None  # certificate: no λ-schedule exists
+            loads = dict(offsets)
+            assign: Dict[int, int] = {}
+
+            # ---- local affinity phase (line 5-7) -------------------------
+            if self.alpha > 0.0:
+                by_score = sorted(
+                    ((sc, tid, rid) for tid, (sc, rid) in pref.items()),
+                    key=lambda x: (-x[0], x[1]),
+                )
+                for sc, tid, rid in by_score:
+                    if loads[rid] <= self.alpha * lam + _TINY:
+                        t = sim.graph.tasks[tid]
+                        assign[tid] = rid
+                        loads[rid] += cost(t, rid)
+
+            # ---- global balance phase (line 8-9) -------------------------
+            rem = [t for t in ready if t.tid not in assign]
+            for t in rem:  # reject if a task is larger than λ everywhere
+                big_cpu = (not cpus) or p_cpu[t.tid] > lam
+                big_gpu = (not gpus) or p_gpu[t.tid] > lam
+                if big_cpu and big_gpu:
+                    return None
+
+            def eft_assign(t: Task, pool) -> None:
+                best_rid = min(
+                    pool, key=lambda r: (loads[r.rid] + cost(t, r.rid), r.rid)
+                ).rid
+                assign[t.tid] = best_rid
+                loads[best_rid] += cost(t, best_rid)
+
+            flex: List[Task] = []
+            for t in rem:
+                if cpus and gpus:
+                    if p_cpu[t.tid] > lam:
+                        eft_assign(t, gpus)  # dedicated to GPUs
+                    elif p_gpu[t.tid] > lam:
+                        eft_assign(t, cpus)  # dedicated to CPUs
+                    else:
+                        flex.append(t)
+                else:
+                    eft_assign(t, cpus or gpus)
+
+            # flexible tasks: largest speedup first, to GPUs up to
+            # overreaching λ, the rest to CPUs (earliest finish time)
+            flex.sort(
+                key=lambda t: (-(p_cpu[t.tid] / max(p_gpu[t.tid], _TINY)), t.tid)
+            )
+            for t in flex:
+                g = min(gpus, key=lambda r: (loads[r.rid], r.rid)) if gpus else None
+                if g is not None and loads[g.rid] <= lam + _TINY:
+                    assign[t.tid] = g.rid
+                    loads[g.rid] += cost(t, g.rid)
+                else:
+                    eft_assign(t, cpus or gpus)
+
+            # ---- acceptance test (line 10) -------------------------------
+            bound = (2.0 + self.alpha) * lam
+            if all(l <= bound + _TINY for l in loads.values()):
+                return assign, loads
+            return None
+
+        # ------------------------------------------------------------------
+        # binary search on λ (classical dual-approximation driver)
+        max_off = max(offsets.values(), default=0.0)
+        worst_xfer = 0.0
+        if self.use_cp:
+            for t in ready:
+                worst_xfer += max(xfer(t, r.rid) for r in resources)
+        upper = (
+            sum(max(p_cpu[t.tid], p_gpu[t.tid]) for t in ready)
+            + max_off
+            + worst_xfer
+            + _TINY
+        )
+        lower = 0.0
+        kept: Optional[Tuple[Dict[int, int], Dict[int, float]]] = None
+        it = 0
+        while upper - lower > self.eps_rel * upper and it < self.max_iters:
+            lam = (upper + lower) / 2.0
+            built = try_build(lam)
+            if built is not None:
+                upper = lam
+                kept = built
+            else:
+                lower = lam
+            it += 1
+        if kept is None:
+            kept = try_build(upper)
+            assert kept is not None, "λ=upper must always be feasible"
+
+        assign, loads = kept
+        # expose the accepted guess for tests / introspection
+        self.last_lambda = upper
+        self.last_loads = dict(loads)
+        for t in ready:
+            rid = assign[t.tid]
+            sim.push(t, rid)
+        for rid, load in loads.items():
+            sim.load_ts[rid] = sim.now + load

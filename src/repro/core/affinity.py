@@ -7,13 +7,19 @@ resource R has a high score and is prone to be scheduled on R."
 """
 from __future__ import annotations
 
-from typing import Callable, Dict
+from typing import Callable, Dict, List, Sequence
 
-from .dag import Task
+import numpy as np
+
+from .dag import GraphArrays, Task
 from .machine import Resource
 from .perfmodel import Residency
 
 AffinityFn = Callable[[Task, Resource, Residency], float]
+# matrix form: (arrays, ready tids, resources, residency) -> (tasks × resources)
+AffinityMatrixFn = Callable[
+    [GraphArrays, np.ndarray, Sequence[Resource], Residency], np.ndarray
+]
 
 
 def score_write_resident(task: Task, resource: Resource, residency: Residency) -> float:
@@ -80,3 +86,205 @@ AFFINITY_FUNCTIONS: Dict[str, AffinityFn] = {
     "accel_write": score_accel_write,
     "accel_all": score_accel_all,
 }
+
+
+# ---------------------------------------------------------------------------
+# Vectorized (tasks × resources) score matrices over the CSR incidence.
+#
+# Each matrix function reproduces its scalar counterpart entry-by-entry:
+# scores are sums of exact byte counts (integers held in float64, well below
+# 2^53), so the batched sums are bit-equal to the scalar loops regardless
+# of accumulation order.
+
+def _segment_sum(values: np.ndarray, indptr: np.ndarray, n: int) -> np.ndarray:
+    """Sum ``values`` per CSR segment (empty segments yield 0)."""
+    col = np.add.reduceat(np.append(values, 0.0), indptr[:-1])[:n]
+    empty = indptr[:-1] == indptr[1:]
+    if empty.any():
+        col = np.where(empty, 0.0, col)
+    return col
+
+
+def _resident_weighted(
+    arr: GraphArrays,
+    tids: np.ndarray,
+    resources: Sequence[Resource],
+    residency: Residency,
+    indptr_full: np.ndarray,
+    ids_full: np.ndarray,
+    weights_full: np.ndarray,
+    accel_only: bool,
+) -> np.ndarray:
+    indptr, ids, weights = arr.gather_csr(tids, indptr_full, ids_full, weights_full)
+    n = len(tids)
+    out = np.zeros((n, len(resources)), dtype=np.float64)
+    if len(ids) == 0:
+        return out
+    masks = residency.mask_of_ids(ids)
+    for j, r in enumerate(resources):
+        if accel_only and not r.is_accelerator:
+            continue
+        bit = 1 << (r.mem + 1)
+        resident = (masks & bit) != 0
+        out[:, j] = _segment_sum(np.where(resident, weights, 0.0), indptr, n)
+    return out
+
+
+def score_write_resident_matrix(
+    arr: GraphArrays,
+    tids: np.ndarray,
+    resources: Sequence[Resource],
+    residency: Residency,
+) -> np.ndarray:
+    return _resident_weighted(
+        arr, tids, resources, residency,
+        arr.write_indptr, arr.write_ids, arr.write_sizes, accel_only=False,
+    )
+
+
+def score_accel_write_matrix(
+    arr: GraphArrays,
+    tids: np.ndarray,
+    resources: Sequence[Resource],
+    residency: Residency,
+) -> np.ndarray:
+    return _resident_weighted(
+        arr, tids, resources, residency,
+        arr.write_indptr, arr.write_ids, arr.write_sizes, accel_only=True,
+    )
+
+
+def _all_resident_weights(arr: GraphArrays) -> np.ndarray:
+    """Per-access weight for the all_resident score: first occurrence of a
+    name within a task counts (2x for writes), duplicates count 0."""
+    w = arr.cache.get("all_resident_weights")
+    if w is None:
+        w = np.where(
+            arr.acc_first, np.where(arr.acc_writes, 2.0, 1.0), 0.0
+        ) * arr.acc_sizes
+        arr.cache["all_resident_weights"] = w
+    return w
+
+
+def score_all_resident_matrix(
+    arr: GraphArrays,
+    tids: np.ndarray,
+    resources: Sequence[Resource],
+    residency: Residency,
+) -> np.ndarray:
+    return _resident_weighted(
+        arr, tids, resources, residency,
+        arr.acc_indptr, arr.acc_ids, _all_resident_weights(arr), accel_only=False,
+    )
+
+
+def score_accel_all_matrix(
+    arr: GraphArrays,
+    tids: np.ndarray,
+    resources: Sequence[Resource],
+    residency: Residency,
+) -> np.ndarray:
+    return _resident_weighted(
+        arr, tids, resources, residency,
+        arr.acc_indptr, arr.acc_ids, _all_resident_weights(arr), accel_only=True,
+    )
+
+
+def score_missing_bytes_matrix(
+    arr: GraphArrays,
+    tids: np.ndarray,
+    resources: Sequence[Resource],
+    residency: Residency,
+) -> np.ndarray:
+    indptr, ids, sizes = arr.gather_csr(
+        tids, arr.read_indptr, arr.read_ids, arr.read_sizes
+    )
+    n = len(tids)
+    out = np.zeros((n, len(resources)), dtype=np.float64)
+    if len(ids) == 0:
+        return out
+    masks = residency.mask_of_ids(ids)
+    on_host = (masks & 1) != 0
+    nowhere = masks == 0
+    from .machine import HOST_MEM
+
+    for j, r in enumerate(resources):
+        bit = 1 << (r.mem + 1)
+        resident = (masks & bit) != 0
+        if r.mem == HOST_MEM:
+            hops = np.where(resident | nowhere, 0.0, 1.0)
+        else:
+            hops = np.where(resident | nowhere, 0.0, np.where(on_host, 1.0, 2.0))
+        missing = np.where(resident, 0.0, sizes * hops)
+        out[:, j] = -_segment_sum(missing, indptr, n)
+    return out
+
+
+AFFINITY_MATRIX_FUNCTIONS: Dict[str, AffinityMatrixFn] = {
+    "write_resident": score_write_resident_matrix,
+    "all_resident": score_all_resident_matrix,
+    "missing_bytes": score_missing_bytes_matrix,
+    "accel_write": score_accel_write_matrix,
+    "accel_all": score_accel_all_matrix,
+}
+
+
+def affinity_rows(
+    name: str,
+    arr: GraphArrays,
+    tids: Sequence[int],
+    tasks: Sequence[Task],
+    resources: Sequence[Resource],
+    residency: Residency,
+) -> List[List[float]]:
+    """(tasks × resources) affinity scores as list rows.
+
+    Wide activations use the batched matrix functions; narrow ones (the
+    common case) take a scalar path: the two write-resident scores walk
+    the prebuilt per-task write lists with bitmask tests, any other score
+    falls back to the registered scalar function. All paths produce the
+    same exact byte-count floats.
+    """
+    n = len(tids)
+    matrix_fn = AFFINITY_MATRIX_FUNCTIONS.get(name)
+    if matrix_fn is not None and n >= 32:
+        return matrix_fn(
+            arr, np.asarray(tids, dtype=np.int64), resources, residency
+        ).tolist()
+    if name in ("accel_write", "write_resident"):
+        accel_only = name == "accel_write"
+        masks = residency._mask
+        # 0 is not a valid memory bit, so it doubles as the skip sentinel
+        # for non-accelerator columns
+        res_bits = [
+            0 if (accel_only and not r.is_accelerator) else 1 << (r.mem + 1)
+            for r in resources
+        ]
+        active = [(j, bit) for j, bit in enumerate(res_bits) if bit]
+        union = 0
+        for _, bit in active:
+            union |= bit
+        zero_row = [0.0] * len(resources)
+        out = []
+        for tid in tids:
+            writes = [(masks.get(nm, 0), sz) for _, nm, sz in arr.task_writes[tid]]
+            any_mask = 0
+            for m, _ in writes:
+                any_mask |= m
+            if not any_mask & union:
+                # nothing this task writes is resident on a scored memory:
+                # the row is all zeros (shared; rows are read-only)
+                out.append(zero_row)
+                continue
+            row = zero_row.copy()
+            for j, bit in active:
+                total = 0
+                for m, sz in writes:
+                    if m & bit:
+                        total += sz
+                if total:
+                    row[j] = float(total)
+            out.append(row)
+        return out
+    fn = AFFINITY_FUNCTIONS[name]
+    return [[fn(t, r, residency) for r in resources] for t in tasks]

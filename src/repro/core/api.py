@@ -2,8 +2,11 @@
 from __future__ import annotations
 
 import math
+import os
+import pickle
+import threading
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -67,6 +70,117 @@ class Summary:
         )
 
 
+# ---------------------------------------------------------------------------
+# parallel seeded runs
+
+
+_GRAPH_CACHE: Dict[tuple, TaskGraph] = {}
+
+
+def _cached_graph(factory) -> TaskGraph:
+    """Memoize graphs built by ``functools.partial`` factories.
+
+    A sweep runs many (strategy × machine) configurations over the *same*
+    kernel graph; within one (worker) process the graph and its
+    structure-of-arrays view are built once per distinct factory signature
+    instead of once per configuration. Non-partial factories (closures,
+    lambdas) are not memoized.
+    """
+    try:
+        key = (factory.func, factory.args, tuple(sorted(factory.keywords.items())))
+        hash(key)
+    except (AttributeError, TypeError):
+        return factory()
+    g = _GRAPH_CACHE.get(key)
+    if g is None:
+        if len(_GRAPH_CACHE) >= 16:
+            _GRAPH_CACHE.clear()
+        _GRAPH_CACHE[key] = g = factory()
+    return g
+
+
+def _run_chunk(
+    graph_factory, machine, strategy_factory, seeds: Sequence[int], noise: float
+) -> List[Tuple[float, float, float, float, str]]:
+    """A chunk of seeded simulations, reduced to summary metrics.
+
+    The task graph is immutable during simulation (all mutable state —
+    residency, queues, history model — lives in the Simulator), so one
+    graph and its structure-of-arrays view are shared across the chunk's
+    seeds (and memoized across chunks with the same partial-factory
+    signature); per-run results are identical to building a fresh graph
+    per seed.
+    """
+    graph = _cached_graph(graph_factory)
+    out = []
+    for seed in seeds:
+        strat = strategy_factory()
+        res = run_simulation(graph, machine, strat, seed=seed, noise=noise)
+        out.append(
+            (res.gflops, res.gbytes, res.makespan, float(res.n_steals), strat.name)
+        )
+    return out
+
+
+def default_jobs(n_runs: int) -> int:
+    """Worker count for run_many: REPRO_BENCH_JOBS, else min(cpus, runs)."""
+    env = os.environ.get("REPRO_BENCH_JOBS", "")
+    if env:
+        try:
+            return max(1, int(env))
+        except ValueError:
+            print(
+                f"warning: REPRO_BENCH_JOBS={env!r} is not an integer; "
+                "using the CPU count",
+                flush=True,
+            )
+    return max(1, min(os.cpu_count() or 1, n_runs))
+
+
+_POOL = None
+_POOL_JOBS = 0
+_POOL_LOCK = threading.Lock()
+
+
+def get_pool(n_jobs: Optional[int] = None):
+    """Public handle on the shared simulation process pool.
+
+    Creating it early — before spawning any threads that will submit to
+    it — also sidesteps the fork-after-threads hazard (forking workers
+    while sibling threads hold allocator/stdio locks can deadlock the
+    children on some platforms).
+    """
+    if n_jobs is None:
+        n_jobs = default_jobs(os.cpu_count() or 1)
+    return _get_pool(n_jobs)
+
+
+def _get_pool(n_jobs: int):
+    """Lazily build (and reuse) one process pool; fork context when available
+    so repeated run_many calls don't pay per-call interpreter startup.
+
+    Thread-safe: concurrent sweeps share the same executor. The pool is
+    sized once, at first use, from REPRO_BENCH_JOBS (or the CPU count) —
+    it is never resized or shut down afterwards, because cancelling would
+    kill in-flight futures belonging to other threads."""
+    global _POOL, _POOL_JOBS
+    with _POOL_LOCK:
+        if _POOL is not None:
+            return _POOL
+        import concurrent.futures as cf
+        import multiprocessing as mp
+
+        ctx = None
+        if "fork" in mp.get_all_start_methods():
+            ctx = mp.get_context("fork")
+        # stable width independent of any one call's n_jobs, so the first
+        # caller doesn't pin concurrent sweeps to an undersized pool
+        workers = max(n_jobs, default_jobs(os.cpu_count() or 1))
+        _POOL = cf.ProcessPoolExecutor(max_workers=workers, mp_context=ctx)
+        _POOL_JOBS = workers
+        return _POOL
+
+
 def run_many(
     graph_factory,
     machine: MachineModel,
@@ -74,26 +188,52 @@ def run_many(
     n_runs: int = 30,
     noise: float = 0.03,
     base_seed: int = 1234,
+    n_jobs: Optional[int] = None,
 ) -> Summary:
     """Run ``n_runs`` seeded simulations and summarize (mean, 95% CI).
 
     ``graph_factory`` and ``strategy_factory`` are callables so each run gets
     fresh graph/strategy state (the history model calibrates within a run).
+
+    Runs fan out over a process pool (``n_jobs`` workers; default from
+    ``REPRO_BENCH_JOBS`` or the CPU count). Each run is independently
+    seeded, so the summary is bit-identical to the serial path regardless
+    of worker count; results are gathered in seed order. Falls back to the
+    serial loop when ``n_jobs == 1``, when the factories are not picklable
+    (e.g. test-local closures), or when the pool cannot be created.
     """
-    gf: List[float] = []
-    gb: List[float] = []
-    mk: List[float] = []
-    st: List[float] = []
-    name = ""
-    for i in range(n_runs):
-        graph = graph_factory()
-        strat = strategy_factory()
-        name = strat.name
-        res = run_simulation(graph, machine, strat, seed=base_seed + i, noise=noise)
-        gf.append(res.gflops)
-        gb.append(res.gbytes)
-        mk.append(res.makespan)
-        st.append(res.n_steals)
+    if n_jobs is None:
+        n_jobs = default_jobs(n_runs)
+    seeds = [base_seed + i for i in range(n_runs)]
+
+    futs = None
+    if n_jobs > 1 and n_runs > 1:
+        # contiguous seed chunks, one per worker; gathered in order, so the
+        # summary is bit-identical to the serial path
+        n_chunks = min(n_jobs, n_runs)
+        bounds = [round(i * n_runs / n_chunks) for i in range(n_chunks + 1)]
+        chunks = [seeds[a:b] for a, b in zip(bounds, bounds[1:]) if b > a]
+        try:
+            pickle.dumps((graph_factory, machine, strategy_factory))
+            pool = _get_pool(n_jobs)
+            futs = [
+                pool.submit(_run_chunk, graph_factory, machine, strategy_factory, c, noise)
+                for c in chunks
+            ]
+        except Exception:
+            futs = None  # non-picklable factories or pool failure: go serial
+    if futs is not None:
+        # gathered outside the guard: a simulation error in a worker is a
+        # real failure and must propagate, not trigger a serial re-run
+        rows = [r for f in futs for r in f.result()]
+    else:
+        rows = _run_chunk(graph_factory, machine, strategy_factory, seeds, noise)
+
+    gf = [r[0] for r in rows]
+    gb = [r[1] for r in rows]
+    mk = [r[2] for r in rows]
+    st = [r[3] for r in rows]
+    name = rows[-1][4] if rows else ""
 
     def ci95(xs: Sequence[float]) -> float:
         if len(xs) < 2:

@@ -14,16 +14,28 @@ Binary search on a makespan guess ``λ``; for each guess:
 ``α = 0`` disables the affinity phase: DADA(0) is the plain dual
 approximation. ``use_cp=True`` (the paper's "+CP") adds communication
 prediction (asymptotic-bandwidth model) to every load/finish-time estimate.
+
+Array-native: everything λ-independent is batched once per activation —
+per-class duration vectors from the cached vector predictor, the
+(ready × resources) transfer matrix from the CSR read incidence +
+residency bitmasks, the affinity score matrix, the speedup sort keys and
+the full cost matrix ``C = p + xfer``. Each λ-probe of ``try_build`` then
+runs over plain float rows with no model calls at all, which is what makes
+the ~30-probe binary search cheap. Decisions (including tie-breaks) are
+bit-identical to ``repro.core._reference.ReferenceDADA``.
 """
 from __future__ import annotations
 
 from typing import Dict, List, Optional, Tuple
 
-from .affinity import AFFINITY_FUNCTIONS, AffinityFn
+import numpy as np
+
+from .affinity import AFFINITY_FUNCTIONS, AffinityFn, affinity_rows
 from .dag import Task
 from .simulator import Simulator, Strategy
 
 _TINY = 1e-12
+_WIDE = 32  # ready-set size from which the batched numpy path wins
 
 
 class DADA(Strategy):
@@ -49,6 +61,7 @@ class DADA(Strategy):
             raise ValueError("alpha must be within [0, 1]")
         self.alpha = alpha
         self.use_cp = use_cp
+        self.affinity_name = affinity
         self.affinity_fn: AffinityFn = AFFINITY_FUNCTIONS[affinity]
         self.eps_rel = eps_rel
         self.max_iters = max_iters
@@ -64,126 +77,219 @@ class DADA(Strategy):
         gpus = machine.gpus
         cpu_cls = cpus[0].cls if cpus else gpus[0].cls
         gpu_cls = gpus[0].cls if gpus else cpu_cls
+        n_res = len(resources)
+        n = len(ready)
+        tids = [t.tid for t in ready]
 
-        p_cpu = {t.tid: sim.model.predict(t, cpu_cls) for t in ready}
-        p_gpu = {t.tid: sim.model.predict(t, gpu_cls) for t in ready}
+        # --- λ-independent precomputation (batched for wide activations,
+        # --- scalar over the same arrays for narrow ones) ----------------
+        if n >= _WIDE:
+            tids_arr = np.asarray(tids, dtype=np.int64)
+            p_cpu = sim.predictor(cpu_cls).times(tids_arr).tolist()
+            p_gpu = sim.predictor(gpu_cls).times(tids_arr).tolist()
+        else:
+            p_cpu = sim.predictor(cpu_cls).times_list(tids)
+            p_gpu = sim.predictor(gpu_cls).times_list(tids)
 
-        xfer_cache: Dict[Tuple[int, int], float] = {}
+        if self.use_cp:
+            X = sim.transfer_model.task_input_transfer_rows(
+                sim.arrays, tids, [r.mem for r in resources], sim.residency
+            )
+        else:
+            X = None
 
-        def xfer(t: Task, rid: int) -> float:
-            if not self.use_cp:
-                return 0.0
-            key = (t.tid, rid)
-            if key not in xfer_cache:
-                xfer_cache[key] = sim.transfer_model.task_input_transfer_time(
-                    t, machine.by_id(rid), sim.residency
-                )
-            return xfer_cache[key]
+        # cost matrix C[i][rid] = duration-on-class + predicted transfer
+        gpu_pos = [j for j, r in enumerate(resources) if r.is_accelerator]
+        if X is None:
+            C_rows = []
+            for pc, pg in zip(p_cpu, p_gpu):
+                row = [pc] * n_res
+                for j in gpu_pos:
+                    row[j] = pg
+                C_rows.append(row)
+        else:
+            C_rows = []
+            for pc, pg, xrow in zip(p_cpu, p_gpu, X):
+                row = [pc + x for x in xrow]
+                for j in gpu_pos:
+                    row[j] = pg + xrow[j]
+                C_rows.append(row)
+        offsets = [
+            lt - sim.now if lt - sim.now > 0.0 else 0.0
+            for lt in (sim.load_ts[r.rid] for r in resources)
+        ]
 
-        def cost(t: Task, rid: int) -> float:
-            r = machine.by_id(rid)
-            p = p_cpu[t.tid] if not r.is_accelerator else p_gpu[t.tid]
-            return p + xfer(t, rid)
-
-        offsets = {
-            r.rid: max(0.0, sim.load_ts[r.rid] - sim.now) for r in resources
-        }
-
-        # affinity preferences (resource of max score, per task)
-        pref: Dict[int, Tuple[float, int]] = {}
+        # affinity preferences per task, with the placement cost prefetched
+        pref: List[Tuple[float, int, int, float]] = []  # (score, tid, rid, cost)
         if self.alpha > 0.0:
-            for t in ready:
+            S_rows = affinity_rows(
+                self.affinity_name, sim.arrays, tids, ready, resources,
+                sim.residency,
+            )
+            for i, row in enumerate(S_rows):
+                if not any(row):
+                    continue  # all-zero (or C-level falsy) row: no preference
                 best_score, best_rid = 0.0, -1
-                for r in resources:
-                    s = self.affinity_fn(t, r, sim.residency)
+                for rid in range(n_res):
+                    s = row[rid]
                     if s > best_score + _TINY:
-                        best_score, best_rid = s, r.rid
+                        best_score, best_rid = s, rid
                 if best_rid >= 0:
-                    pref[t.tid] = (best_score, best_rid)
+                    pref.append((best_score, tids[i], best_rid, C_rows[i][best_rid]))
+        by_score = sorted(pref, key=lambda x: (-x[0], x[1]))
+
+        # speedup sort keys for the flexible phase (λ-independent)
+        skey = [-(pc / max(pg, _TINY)) for pc, pg in zip(p_cpu, p_gpu)]
+
+        cpu_rids = [r.rid for r in cpus]
+        gpu_rids = [r.rid for r in gpus]
+        any_rids = cpu_rids or gpu_rids
+        have_both = bool(cpus and gpus)
+        no_cpus = not cpus
+        no_gpus = not gpus
+
+        if self.area_bound:
+            area = sum(min(pc, pg) for pc, pg in zip(p_cpu, p_gpu))
+            off_total = sum(offsets)
+
+        all_idx = list(range(n))
+        # global flex order (λ-independent): per-probe flex sets are subsets
+        # of ready, so filtering this order equals sorting each subset
+        flex_order = sorted(all_idx, key=lambda i: (skey[i], tids[i]))
+        alpha = self.alpha
+        two_alpha = 2.0 + alpha
+        area_bound = self.area_bound
+        max_off = max(offsets, default=0.0)
 
         # ------------------------------------------------------------------
-        def try_build(lam: float) -> Optional[Tuple[Dict[int, int], Dict[int, float]]]:
-            if self.area_bound:
-                area = sum(min(p_cpu[t.tid], p_gpu[t.tid]) for t in ready)
-                capacity = lam * len(resources) - sum(offsets.values())
+        def try_build(lam: float) -> Optional[Tuple[Dict[int, int], List[float]]]:
+            # try_build is pure (touches only its locals), so the acceptance
+            # test `all(load <= (2+α)λ)` is folded into every load update:
+            # loads only grow, hence the first overflow already decides the
+            # probe — same verdict as building fully, minus the wasted work.
+            cap = two_alpha * lam + _TINY
+            if max_off > cap:
+                return None
+            if area_bound:
+                capacity = lam * n_res - off_total
                 if area > capacity + _TINY:
                     return None  # certificate: no λ-schedule exists
-            loads = dict(offsets)
+            loads = offsets.copy()
             assign: Dict[int, int] = {}
 
             # ---- local affinity phase (line 5-7) -------------------------
-            if self.alpha > 0.0:
-                by_score = sorted(
-                    ((sc, tid, rid) for tid, (sc, rid) in pref.items()),
-                    key=lambda x: (-x[0], x[1]),
-                )
-                for sc, tid, rid in by_score:
-                    if loads[rid] <= self.alpha * lam + _TINY:
-                        t = sim.graph.tasks[tid]
+            if by_score:
+                budget = alpha * lam + _TINY
+                for sc, tid, rid, c in by_score:
+                    if loads[rid] <= budget:
                         assign[tid] = rid
-                        loads[rid] += cost(t, rid)
+                        v = loads[rid] + c
+                        if v > cap:
+                            return None
+                        loads[rid] = v
 
             # ---- global balance phase (line 8-9) -------------------------
-            rem = [t for t in ready if t.tid not in assign]
-            for t in rem:  # reject if a task is larger than λ everywhere
-                big_cpu = (not cpus) or p_cpu[t.tid] > lam
-                big_gpu = (not gpus) or p_gpu[t.tid] > lam
+            if assign:
+                rem = [i for i in all_idx if tids[i] not in assign]
+            else:
+                rem = all_idx
+            for i in rem:  # reject if a task is larger than λ everywhere
+                big_cpu = no_cpus or p_cpu[i] > lam
+                big_gpu = no_gpus or p_gpu[i] > lam
                 if big_cpu and big_gpu:
                     return None
 
-            def eft_assign(t: Task, pool) -> None:
-                best_rid = min(
-                    pool, key=lambda r: (loads[r.rid] + cost(t, r.rid), r.rid)
-                ).rid
-                assign[t.tid] = best_rid
-                loads[best_rid] += cost(t, best_rid)
-
-            flex: List[Task] = []
-            for t in rem:
-                if cpus and gpus:
-                    if p_cpu[t.tid] > lam:
-                        eft_assign(t, gpus)  # dedicated to GPUs
-                    elif p_gpu[t.tid] > lam:
-                        eft_assign(t, cpus)  # dedicated to CPUs
+            flex = None
+            if have_both:
+                flex = bytearray(n)
+                for i in rem:
+                    if p_cpu[i] > lam:
+                        pool_rids = gpu_rids  # dedicated to GPUs
+                    elif p_gpu[i] > lam:
+                        pool_rids = cpu_rids  # dedicated to CPUs
                     else:
-                        flex.append(t)
-                else:
-                    eft_assign(t, cpus or gpus)
+                        flex[i] = 1
+                        continue
+                    # earliest finish time; first minimum wins (== min by
+                    # (finish, rid): pool rids are ascending)
+                    crow = C_rows[i]
+                    best_v = float("inf")
+                    best_rid = pool_rids[0]
+                    for rid in pool_rids:
+                        v = loads[rid] + crow[rid]
+                        if v < best_v:
+                            best_v = v
+                            best_rid = rid
+                    if best_v > cap:
+                        return None
+                    assign[tids[i]] = best_rid
+                    loads[best_rid] = best_v
+            else:
+                for i in rem:
+                    crow = C_rows[i]
+                    best_v = float("inf")
+                    best_rid = any_rids[0]
+                    for rid in any_rids:
+                        v = loads[rid] + crow[rid]
+                        if v < best_v:
+                            best_v = v
+                            best_rid = rid
+                    if best_v > cap:
+                        return None
+                    assign[tids[i]] = best_rid
+                    loads[best_rid] = best_v
 
             # flexible tasks: largest speedup first, to GPUs up to
             # overreaching λ, the rest to CPUs (earliest finish time)
-            flex.sort(
-                key=lambda t: (-(p_cpu[t.tid] / max(p_gpu[t.tid], _TINY)), t.tid)
-            )
-            for t in flex:
-                g = min(gpus, key=lambda r: (loads[r.rid], r.rid)) if gpus else None
-                if g is not None and loads[g.rid] <= lam + _TINY:
-                    assign[t.tid] = g.rid
-                    loads[g.rid] += cost(t, g.rid)
-                else:
-                    eft_assign(t, cpus or gpus)
+            if flex is not None:
+                gpu_budget = lam + _TINY
+                for i in flex_order:
+                    if not flex[i]:
+                        continue
+                    if gpu_rids:
+                        g = gpu_rids[0]
+                        gl = loads[g]
+                        for rid in gpu_rids[1:]:
+                            if loads[rid] < gl:
+                                gl = loads[rid]
+                                g = rid
+                        if gl <= gpu_budget:
+                            v = gl + C_rows[i][g]
+                            if v > cap:
+                                return None
+                            assign[tids[i]] = g
+                            loads[g] = v
+                            continue
+                    crow = C_rows[i]
+                    best_v = float("inf")
+                    best_rid = any_rids[0]
+                    for rid in any_rids:
+                        v = loads[rid] + crow[rid]
+                        if v < best_v:
+                            best_v = v
+                            best_rid = rid
+                    if best_v > cap:
+                        return None
+                    assign[tids[i]] = best_rid
+                    loads[best_rid] = best_v
 
-            # ---- acceptance test (line 10) -------------------------------
-            bound = (2.0 + self.alpha) * lam
-            if all(l <= bound + _TINY for l in loads.values()):
-                return assign, loads
-            return None
+            # acceptance (line 10) already enforced incrementally above
+            return assign, loads
 
         # ------------------------------------------------------------------
         # binary search on λ (classical dual-approximation driver)
-        max_off = max(offsets.values(), default=0.0)
         worst_xfer = 0.0
-        if self.use_cp:
-            for t in ready:
-                worst_xfer += max(xfer(t, r.rid) for r in resources)
+        if X is not None:
+            for xrow in X:
+                worst_xfer += max(xrow)
         upper = (
-            sum(max(p_cpu[t.tid], p_gpu[t.tid]) for t in ready)
+            sum(max(pc, pg) for pc, pg in zip(p_cpu, p_gpu))
             + max_off
             + worst_xfer
             + _TINY
         )
         lower = 0.0
-        kept: Optional[Tuple[Dict[int, int], Dict[int, float]]] = None
+        kept: Optional[Tuple[Dict[int, int], List[float]]] = None
         it = 0
         while upper - lower > self.eps_rel * upper and it < self.max_iters:
             lam = (upper + lower) / 2.0
@@ -201,12 +307,12 @@ class DADA(Strategy):
         assign, loads = kept
         # expose the accepted guess for tests / introspection
         self.last_lambda = upper
-        self.last_loads = dict(loads)
+        self.last_loads = {r.rid: loads[j] for j, r in enumerate(resources)}
         for t in ready:
             rid = assign[t.tid]
             sim.push(t, rid)
-        for rid, load in loads.items():
-            sim.load_ts[rid] = sim.now + load
+        for j, r in enumerate(resources):
+            sim.load_ts[r.rid] = sim.now + loads[j]
 
 
 class DualApprox(DADA):

@@ -88,15 +88,18 @@ class MachineModel:
                 if r.link is not None:
                     groups.setdefault(r.link, []).append(r.rid)
             self.link_groups = groups
+        # cached partitions (resources never change after construction)
+        self._cpus = [r for r in self.resources if not r.is_accelerator]
+        self._gpus = [r for r in self.resources if r.is_accelerator]
 
     # ------------------------------------------------------------------
     @property
     def cpus(self) -> List[Resource]:
-        return [r for r in self.resources if not r.is_accelerator]
+        return self._cpus
 
     @property
     def gpus(self) -> List[Resource]:
-        return [r for r in self.resources if r.is_accelerator]
+        return self._gpus
 
     def by_id(self, rid: int) -> Resource:
         return self.resources[rid]

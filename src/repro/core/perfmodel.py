@@ -6,14 +6,35 @@ observes real durations and corrects erroneous predictions online (StarPU
 does the same). Here the *observed* durations come from the simulator's
 ground-truth rates (with seeded noise), so the model genuinely calibrates
 at runtime instead of being an oracle.
+
+This module is array-native: ``Residency`` stores one bitmask per data
+object (bit ``mem+1`` set ⇔ a valid copy lives in memory space ``mem``; the
+host, ``HOST_MEM = -1``, is bit 0) and maintains an incremental
+resident-bytes vector, so ``is_resident`` / ``transfer_hops`` are O(1) bit
+tests and whole (tasks × resources) transfer/affinity matrices come out of
+a handful of numpy ops over the CSR incidence of a
+:class:`~repro.core.dag.GraphArrays`. The scalar reference implementations
+live in ``repro.core._reference``.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, Optional, Tuple
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
-from .dag import Task
-from .machine import MachineModel, Resource, ResourceClass
+import numpy as np
+
+from .dag import GraphArrays, Task
+from .machine import HOST_MEM, MachineModel, Resource, ResourceClass
+
+# Residency masks live in int64 arrays: bit 0 is the host, bit (mem+1) is
+# device memory ``mem``; 62 device memories fit before the sign bit.
+_MAX_MEM = 61
+
+
+def _mem_bit(mem: int) -> int:
+    if not -1 <= mem <= _MAX_MEM:
+        raise ValueError(f"memory id {mem} outside supported range [-1, {_MAX_MEM}]")
+    return 1 << (mem + 1)
 
 
 @dataclass
@@ -23,9 +44,13 @@ class HistoryPerfModel:
     Before any observation the model falls back to a static estimate
     ``flops / class_rate`` — the same bootstrap StarPU/XKaapi use before
     calibration kicks in.
+
+    ``version`` increments on every ``observe`` so vectorized consumers
+    (:class:`ClassPredictor`) know when their per-kind cache is stale.
     """
 
     _stats: Dict[Tuple[str, str], Tuple[int, float]] = field(default_factory=dict)
+    version: int = 0
 
     def predict(self, task: Task, cls: ResourceClass) -> float:
         key = (task.kind, cls.name)
@@ -40,9 +65,86 @@ class HistoryPerfModel:
         n += 1
         mean += (duration - mean) / n
         self._stats[key] = (n, mean)
+        self.version += 1
 
     def n_observations(self) -> int:
         return sum(n for n, _ in self._stats.values())
+
+    def kind_table(
+        self, cls: ResourceClass, kinds: Sequence[str]
+    ) -> Tuple[List[float], List[bool]]:
+        """(means, observed) per kind for resource class ``cls`` (plain
+        lists: rebuilt on every observation, so no numpy allocation)."""
+        means = []
+        observed = []
+        stats = self._stats
+        name = cls.name
+        for kind in kinds:
+            st = stats.get((kind, name))
+            if st is not None and st[0] > 0:
+                means.append(st[1])
+                observed.append(True)
+            else:
+                means.append(0.0)
+                observed.append(False)
+        return means, observed
+
+
+class ClassPredictor:
+    """Cached vectorized ``HistoryPerfModel.predict`` for one resource class.
+
+    The static fallback ``flops / rate`` is a per-task constant, computed
+    once per graph; the per-kind observed means are rebuilt lazily whenever
+    the model's version moves (each rebuild is a loop over the handful of
+    task kinds, not over tasks). ``times(tids)`` then reproduces
+    ``predict`` elementwise: the observed running mean where one exists,
+    the static estimate otherwise — the identical IEEE operations, just
+    batched.
+    """
+
+    def __init__(self, model: HistoryPerfModel, cls: ResourceClass, arr: GraphArrays):
+        self.model = model
+        self.cls = cls
+        self.arr = arr
+        rates = np.array([cls.rate(k) for k in arr.kinds], dtype=np.float64)
+        # exec_time: flops / rate, with the 1e-7 bookkeeping floor
+        static = arr.flops / rates[arr.kind_codes]
+        self.static_times = np.where(arr.flops <= 0.0, 1e-7, static)
+        self.static_list = self.static_times.tolist()
+        self._codes_list = arr.kind_codes.tolist()
+        self._version = -1
+        self._means_list: List[float] = []
+        self._observed_list: List[bool] = []
+
+    def _refresh(self) -> None:
+        if self._version != self.model.version:
+            self._means_list, self._observed_list = self.model.kind_table(
+                self.cls, self.arr.kinds
+            )
+            self._version = self.model.version
+
+    def times(self, tids: np.ndarray) -> np.ndarray:
+        """Predicted durations for tasks ``tids`` (bit-equal to ``predict``)."""
+        self._refresh()
+        codes = self.arr.kind_codes[tids]
+        means = np.asarray(self._means_list, dtype=np.float64)
+        observed = np.asarray(self._observed_list, dtype=bool)
+        return np.where(
+            observed[codes], means[codes], self.static_times[tids]
+        )
+
+    def times_list(self, tids: Sequence[int]) -> List[float]:
+        """Scalar fast path of :meth:`times` for narrow activations."""
+        self._refresh()
+        codes = self._codes_list
+        means = self._means_list
+        observed = self._observed_list
+        static = self.static_list
+        out = []
+        for tid in tids:
+            c = codes[tid]
+            out.append(means[c] if observed[c] else static[tid])
+        return out
 
 
 @dataclass
@@ -56,6 +158,10 @@ class TransferModel:
 
     bandwidth: float
     latency: float = 1e-5
+
+    def __post_init__(self) -> None:
+        # memoized unique-memory decompositions, keyed by the mems tuple
+        self._mem_plans: Dict[tuple, tuple] = {}
 
     def time(self, nbytes: int) -> float:
         if nbytes <= 0:
@@ -76,47 +182,276 @@ class TransferModel:
                 total += hops * self.time(d.size_bytes)
         return total
 
+    # ------------------------------------------------------------------
+    def task_input_transfer_rows(
+        self,
+        arr: GraphArrays,
+        tids: Sequence[int],
+        mems: Sequence[int],
+        residency: "Residency",
+    ) -> List[List[float]]:
+        """(len(tids) × len(mems)) predicted input-transfer times, as rows.
+
+        Same values as :meth:`task_input_transfer_matrix`; narrow
+        activations (the common case — ``activate`` usually wakes 1-3
+        tasks) take a scalar path over the per-task read lists and the
+        residency bitmasks, wide ones take the batched numpy path. Both
+        compute ``hops * (latency + size/bandwidth)`` summed in access
+        order, so every entry is bit-equal to the scalar reference.
+        """
+        # resources sharing a memory space (all CPUs see host memory) share
+        # a column: compute per unique memory, then expand
+        mem_key = tuple(mems)
+        cached = self._mem_plans.get(mem_key)
+        if cached is None:
+            uniq: List[int] = []
+            col_of: List[int] = []
+            seen: Dict[int, int] = {}
+            for mem in mems:
+                j = seen.get(mem)
+                if j is None:
+                    j = seen[mem] = len(uniq)
+                    uniq.append(mem)
+                col_of.append(j)
+            cached = (uniq, col_of, len(uniq) == len(mems))
+            self._mem_plans[mem_key] = cached
+        uniq, col_of, full = cached
+
+        n = len(tids)
+        if n >= 32:
+            arr_tids = np.asarray(tids, dtype=np.int64)
+            rows = self.task_input_transfer_matrix(
+                arr, arr_tids, uniq, residency
+            ).tolist()
+        else:
+            masks = residency._mask
+            # per-task (read name, per-hop time) pairs are graph-static:
+            # precompute once per (model, graph) and only refresh the
+            # residency masks per activation
+            key = ("read_times", self.latency, self.bandwidth)
+            prep = arr.cache.get(key)
+            if prep is None:
+                latency = self.latency
+                bandwidth = self.bandwidth
+                prep = [
+                    [
+                        (name, 0.0 if size <= 0 else latency + size / bandwidth)
+                        for _, name, size in reads
+                    ]
+                    for reads in arr.task_reads
+                ]
+                arr.cache[key] = prep
+            rows = []
+            for tid in tids:
+                reads = [(masks.get(name, 0), t) for name, t in prep[tid]]
+                row = []
+                for mem in uniq:
+                    bit = 1 << (mem + 1)
+                    total = 0.0
+                    for m, t in reads:
+                        if m & bit or m == 0:
+                            continue
+                        if mem == HOST_MEM or m & 1:
+                            total += t
+                        else:
+                            total += 2 * t
+                    row.append(total)
+                rows.append(row)
+        if full:
+            return rows
+        return [[row[j] for j in col_of] for row in rows]
+
+    def task_input_transfer_matrix(
+        self,
+        arr: GraphArrays,
+        tids: np.ndarray,
+        mems: Sequence[int],
+        residency: "Residency",
+    ) -> np.ndarray:
+        """(len(tids) × len(mems)) predicted input-transfer times.
+
+        Column ``j`` is ``task_input_transfer_time`` against memory space
+        ``mems[j]``, computed from the read-CSR slice and the residency
+        bitmasks. Per-read contributions are summed in access order, so
+        each entry is bit-equal to the scalar loop.
+        """
+        indptr, ids, sizes = arr.gather_csr(
+            tids, arr.read_indptr, arr.read_ids, arr.read_sizes
+        )
+        n, m = len(tids), len(mems)
+        if len(ids) == 0:
+            return np.zeros((n, m), dtype=np.float64)
+        masks = residency.mask_of_ids(ids)
+        # per-read transfer time (latency + size/bw; 0 for empty reads)
+        per_read = np.where(sizes <= 0, 0.0, self.latency + sizes / self.bandwidth)
+        on_host = (masks & 1) != 0
+        nowhere = masks == 0
+        out = np.empty((n, m), dtype=np.float64)
+        # reduceat quirks: an empty segment yields the element at its start
+        # (fixed up below), and a start index == len(contrib) is invalid
+        # (avoided by the appended 0.0, which also absorbs harmlessly into
+        # the sum of the final non-empty segment).
+        empty_seg = indptr[:-1] == indptr[1:]
+        fix_empty = bool(empty_seg.any())
+        for j, mem in enumerate(mems):
+            bit = _mem_bit(mem)
+            resident = (masks & bit) != 0
+            if mem == HOST_MEM:
+                hops = np.where(resident | nowhere, 0.0, 1.0)
+            else:
+                hops = np.where(
+                    resident | nowhere, 0.0, np.where(on_host, 1.0, 2.0)
+                )
+            contrib = hops * per_read
+            col = np.add.reduceat(np.append(contrib, 0.0), indptr[:-1])[:n]
+            if fix_empty:
+                col = np.where(empty_seg, 0.0, col)
+            out[:, j] = col
+        return out
+
 
 class Residency:
     """Tracks which memory spaces hold a *valid* copy of each data object.
 
     Writes invalidate all other copies (MSI-like, matching a runtime that
     manages coherent transfers).
+
+    Storage is one int bitmask per data object. Standalone instances keep a
+    name-keyed dict; :meth:`attach` binds the tracker to a
+    :class:`GraphArrays` id space, adding a dense ``int64`` mask array
+    (``mask_arr``) for vectorized consumers and an incrementally maintained
+    per-memory resident-bytes vector, so ``bytes_resident`` is O(1) instead
+    of a sweep over every data object.
     """
 
     def __init__(self) -> None:
-        self._where: Dict[str, set] = {}
+        self._mask: Dict[str, int] = {}
+        # attached-mode state (set by attach())
+        self._name_to_id: Optional[Dict[str, int]] = None
+        self.mask_list: Optional[List[int]] = None
+        self._sizes: Optional[List[int]] = None
+        self._resident_bytes: List[int] = [0] * (_MAX_MEM + 2)
 
+    # ------------------------------------------------------------------
+    def attach(self, arr: GraphArrays) -> None:
+        """Bind to a graph's data-id space (enables the array fast paths)."""
+        self._name_to_id = arr.name_to_id
+        self.mask_list = [0] * len(arr.data_names)
+        self._sizes = arr.data_sizes.tolist()
+        self._resident_bytes = [0] * (_MAX_MEM + 2)
+        for name, did in arr.name_to_id.items():
+            m = self._mask.get(name)
+            if m:
+                self.mask_list[did] = m
+                for mem in self._decode(m):
+                    self._resident_bytes[mem + 1] += self._sizes[did]
+
+    @staticmethod
+    def _decode(mask: int) -> List[int]:
+        mems = []
+        mem = -1
+        while mask:
+            if mask & 1:
+                mems.append(mem)
+            mask >>= 1
+            mem += 1
+        return mems
+
+    def _set_mask(self, name: str, new: int) -> None:
+        old = self._mask.get(name, 0)
+        if old == new:
+            return
+        self._mask[name] = new
+        if self._name_to_id is not None:
+            did = self._name_to_id.get(name)
+            if did is not None:
+                self.mask_list[did] = new
+                size = self._sizes[did]
+                rb = self._resident_bytes
+                changed = old ^ new
+                while changed:
+                    low = changed & -changed
+                    idx = low.bit_length() - 1  # == mem + 1
+                    if new & low:
+                        rb[idx] += size
+                    else:
+                        rb[idx] -= size
+                    changed ^= low
+
+    # ------------------------------------------------------------------
     def is_resident(self, name: str, mem: int) -> bool:
-        return mem in self._where.get(name, set())
+        if not -1 <= mem <= _MAX_MEM:
+            raise ValueError(f"memory id {mem} outside supported range")
+        return bool(self._mask.get(name, 0) & (1 << (mem + 1)))
+
+    def mask(self, name: str) -> int:
+        return self._mask.get(name, 0)
+
+    def mask_of_ids(self, ids: np.ndarray) -> np.ndarray:
+        """Bitmask vector for data ids (attached mode only)."""
+        ml = self.mask_list
+        return np.fromiter(map(ml.__getitem__, ids), dtype=np.int64, count=len(ids))
 
     def locations(self, name: str) -> set:
-        return set(self._where.get(name, set()))
+        return set(self._decode(self._mask.get(name, 0)))
 
     def has_any(self, name: str) -> bool:
-        return bool(self._where.get(name))
+        return self._mask.get(name, 0) != 0
 
     def transfer_hops(self, name: str, dst_mem: int) -> int:
         """1 hop if a copy is on host or dst is host; 2 hops for GPU->GPU
         (device -> host -> device, the paper-era PCIe path)."""
-        from .machine import HOST_MEM
-
-        locs = self._where.get(name, set())
-        if not locs or dst_mem in locs:
+        m = self._mask.get(name, 0)
+        if m == 0 or m & _mem_bit(dst_mem):
             return 0
-        if dst_mem == HOST_MEM or HOST_MEM in locs:
+        if dst_mem == HOST_MEM or m & 1:
             return 1
         return 2
 
     def add_copy(self, name: str, mem: int) -> None:
-        self._where.setdefault(name, set()).add(mem)
+        if not -1 <= mem <= _MAX_MEM:
+            raise ValueError(f"memory id {mem} outside supported range")
+        self._set_mask(name, self._mask.get(name, 0) | (1 << (mem + 1)))
 
     def write(self, name: str, mem: int) -> None:
-        self._where[name] = {mem}
+        if not -1 <= mem <= _MAX_MEM:
+            raise ValueError(f"memory id {mem} outside supported range")
+        self._set_mask(name, 1 << (mem + 1))
 
-    def initialize(self, names, mem: int) -> None:
+    def write_id(self, did: int, name: str, new_mask: int) -> None:
+        """Attached-mode fast write: caller supplies the data id and the
+        (validated) single-bit mask. Semantically ``write(name, mem)``."""
+        ml = self.mask_list
+        old = ml[did]
+        if old == new_mask:
+            return
+        self._mask[name] = new_mask
+        ml[did] = new_mask
+        size = self._sizes[did]
+        rb = self._resident_bytes
+        changed = old ^ new_mask
+        while changed:
+            low = changed & -changed
+            idx = low.bit_length() - 1  # == mem + 1
+            if new_mask & low:
+                rb[idx] += size
+            else:
+                rb[idx] -= size
+            changed ^= low
+
+    def initialize(self, names: Iterable[str], mem: int) -> None:
         for n in names:
             self.write(n, mem)
 
-    def bytes_resident(self, mem: int, sizes: Dict[str, int]) -> int:
-        return sum(sz for n, sz in sizes.items() if self.is_resident(n, mem))
+    def bytes_resident(self, mem: int, sizes: Optional[Dict[str, int]] = None) -> int:
+        """Bytes with a valid copy in ``mem``.
+
+        With an explicit ``sizes`` dict this sums exactly those names (the
+        original contract); attached instances answer the no-argument form
+        from the incremental per-memory vector in O(1).
+        """
+        if sizes is not None:
+            return sum(sz for n, sz in sizes.items() if self.is_resident(n, mem))
+        if self._name_to_id is None:
+            raise ValueError("bytes_resident() without sizes requires attach()")
+        return self._resident_bytes[mem + 1]

@@ -13,6 +13,13 @@ Reproduces the paper's execution flow (§2.1-2.2):
     performance model, which therefore calibrates online (§2.3).
 
 Determinism: all randomness flows through one seeded numpy Generator.
+
+Hot paths run against the graph's structure-of-arrays view
+(``TaskGraph.arrays()``): per-task read/write lists are prebuilt instead of
+re-deriving tuples from ``Task.accesses``, residency tests are bitmask
+ops, in-flight transfers are indexed per data name (write invalidation is
+O(copies) instead of O(all in-flight keys)), and strategies get cached
+per-class vectorized predictions via :meth:`Simulator.predictor`.
 """
 from __future__ import annotations
 
@@ -23,12 +30,12 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .dag import Task, TaskGraph
-from .machine import HOST_MEM, MachineModel, Resource
-from .perfmodel import HistoryPerfModel, Residency, TransferModel
+from .dag import GraphArrays, Task, TaskGraph
+from .machine import HOST_MEM, MachineModel, ResourceClass
+from .perfmodel import ClassPredictor, HistoryPerfModel, Residency, TransferModel
 
 
-@dataclass
+@dataclass(slots=True)
 class ScheduledInterval:
     tid: int
     rid: int
@@ -46,6 +53,7 @@ class SimResult:
     intervals: List[ScheduledInterval]
     strategy: str
     total_flops: float
+    n_events: int = 0
 
     @property
     def gflops(self) -> float:
@@ -96,17 +104,32 @@ class Simulator:
         transfer_model: Optional[TransferModel] = None,
     ) -> None:
         self.graph = graph
+        self.arrays: GraphArrays = graph.arrays()
         self.machine = machine
         self.strategy = strategy
         self.rng = np.random.default_rng(seed)
         self.noise = noise
+        # One multiplicative noise factor per task (each task executes
+        # exactly once), drawn as a single batched normal at startup.
+        # NOTE: this consumes the seeded stream in tid order rather than
+        # execution order (the pre-vectorization simulator drew per task at
+        # start time), so seeded results differ numerically from pre-PR-1
+        # runs — a deliberate trade recorded in CHANGES.md. Equivalence
+        # guarantees are against repro.core._reference under THIS stream.
+        if noise > 0 and len(graph) > 0:
+            self._noise_mult = np.exp(
+                self.rng.normal(0.0, noise, size=len(graph))
+            ).tolist()
+        else:
+            self._noise_mult = None
         self.model = HistoryPerfModel()
         self.transfer_model = transfer_model or TransferModel(
             bandwidth=machine.link.bandwidth, latency=machine.link.latency
         )
         self.residency = Residency()
+        self.residency.attach(self.arrays)
         # all application data starts in host memory (paper setup)
-        self.residency.initialize(graph.data_objects().keys(), HOST_MEM)
+        self.residency.initialize(self.arrays.data_names, HOST_MEM)
 
         self.now = 0.0
         self._events: List[Tuple[float, int, str, Any]] = []
@@ -114,22 +137,55 @@ class Simulator:
         self.workers = [_Worker(r.rid) for r in machine.resources]
         # shared predicted-completion time-stamps (paper §2.3)
         self.load_ts = [0.0] * len(self.workers)
-        self._n_unfinished_preds = {
-            t.tid: len(graph.pred[t.tid]) for t in graph.tasks
-        }
+        self._n_unfinished_preds = [
+            len(graph.pred[t.tid]) for t in graph.tasks
+        ]
+        self._succ = [graph.succ[t.tid] for t in graph.tasks]
         self._done = [False] * len(graph)
         self._start_times: Dict[int, float] = {}
-        # transfers: (name, dst_mem) -> completion time (in flight)
-        self._inflight: Dict[Tuple[str, int], float] = {}
+        # in-flight transfers indexed per data name: name -> {dst_mem: done_t}
+        self._inflight: Dict[str, Dict[int, float]] = {}
         self._link_free: Dict[int, float] = {}
         self._waiting: Dict[Tuple[str, int], List[int]] = {}  # -> worker rids
+        # accelerator memory -> link group (first resource on that memory)
+        self._mem_link: Dict[int, Optional[int]] = {}
+        for r in machine.resources:
+            if r.is_accelerator:
+                self._mem_link.setdefault(r.mem, r.link)
+        # inlined link timing (hot path); only valid for a plain LinkModel
+        from .machine import LinkModel as _LM
+
+        self._plain_link = type(machine.link) is _LM
+        self._link_lat = machine.link.latency
+        self._link_bw = machine.link.bandwidth
+        # per-rid memory space / resource class (avoids by_id() in hot paths)
+        self._mem_of = [r.mem for r in machine.resources]
+        self._bit_of = [1 << (r.mem + 1) for r in machine.resources]
+        self._steal_on = strategy.allow_steal
+        self._lifo = strategy.owner_lifo
+        # per-resource-class vectorized predictors (lazy)
+        self._predictors: Dict[str, ClassPredictor] = {}
+        # per-rid ground-truth static durations (flops/rate, 1e-7 floor)
+        self._rid_static = [
+            self.predictor(r.cls).static_list for r in machine.resources
+        ]
         # metrics
         self.total_bytes = 0
         self.n_transfers = 0
         self.n_steals = 0
+        self.n_events = 0
         self.busy = {r.rid: 0.0 for r in machine.resources}
         self.intervals: List[ScheduledInterval] = []
         self._n_done = 0
+
+    # ------------------------------------------------------------------
+    def predictor(self, cls: ResourceClass) -> ClassPredictor:
+        """Cached vectorized HistoryPerfModel.predict for ``cls``."""
+        p = self._predictors.get(cls.name)
+        if p is None:
+            p = ClassPredictor(self.model, cls, self.arrays)
+            self._predictors[cls.name] = p
+        return p
 
     # ------------------------------------------------------------------
     # event plumbing
@@ -140,15 +196,15 @@ class Simulator:
     # ------------------------------------------------------------------
     # transfers
     def _gpu_link_group(self, mem: int) -> Optional[int]:
-        for r in self.machine.resources:
-            if r.mem == mem and r.is_accelerator:
-                return r.link
-        return None
+        return self._mem_link.get(mem)
 
     def _one_hop(self, nbytes: int, group: Optional[int], t: float) -> float:
         """Serialize the transfer on its link group (FIFO = shared bandwidth)."""
         start = max(t, self._link_free.get(group, 0.0)) if group is not None else t
-        dur = self.machine.link.time(nbytes)
+        if self._plain_link:
+            dur = 0.0 if nbytes <= 0 else self._link_lat + nbytes / self._link_bw
+        else:
+            dur = self.machine.link.time(nbytes)
         done = start + dur
         if group is not None:
             self._link_free[group] = done
@@ -161,39 +217,52 @@ class Simulator:
 
         Returns the completion time, or None if already resident.
         """
-        if self.residency.is_resident(name, dst_mem):
-            return None
-        key = (name, dst_mem)
-        if key in self._inflight:
-            return self._inflight[key]
-        locs = self.residency.locations(name)
-        if not locs:
+        mask = self.residency._mask.get(name, 0)
+        if mask & (1 << (dst_mem + 1)):
+            return None  # already resident
+        flights = self._inflight.get(name)
+        if flights is not None:
+            done = flights.get(dst_mem)
+            if done is not None:
+                return done
+        if mask == 0:
             raise RuntimeError(f"no valid copy of {name} anywhere")
         t = self.now
-        if HOST_MEM in locs and dst_mem != HOST_MEM:
-            done = self._one_hop(size, self._gpu_link_group(dst_mem), t)
+        mem_link = self._mem_link
+        if (mask & 1) and dst_mem != HOST_MEM:
+            # a host copy exists: single host->device hop
+            done = self._one_hop(size, mem_link.get(dst_mem), t)
         elif dst_mem == HOST_MEM:
-            src = next(iter(sorted(locs)))
-            done = self._one_hop(size, self._gpu_link_group(src), t)
+            src = (mask & -mask).bit_length() - 2  # lowest-numbered location
+            done = self._one_hop(size, mem_link.get(src), t)
         else:
             # GPU -> host -> GPU (two hops, paper-era PCIe path)
-            src = next(iter(sorted(locs)))
-            host_key = (name, HOST_MEM)
-            if host_key in self._inflight:
-                mid = self._inflight[host_key]
+            src = (mask & -mask).bit_length() - 2
+            if flights is not None and HOST_MEM in flights:
+                mid = flights[HOST_MEM]
             else:
-                mid = self._one_hop(size, self._gpu_link_group(src), t)
-                self._inflight[host_key] = mid
+                mid = self._one_hop(size, mem_link.get(src), t)
+                if flights is None:
+                    flights = self._inflight[name] = {}
+                flights[HOST_MEM] = mid
                 self._post(mid, "xfer", (name, HOST_MEM))
-            done = self._one_hop(size, self._gpu_link_group(dst_mem), mid)
-        self._inflight[key] = done
+            done = self._one_hop(size, mem_link.get(dst_mem), mid)
+        if flights is None:
+            flights = self._inflight[name] = {}
+        flights[dst_mem] = done
         self._post(done, "xfer", (name, dst_mem))
         return done
 
     def _prefetch(self, task: Task, rid: int) -> None:
-        mem = self.machine.by_id(rid).mem
-        for d in task.reads:
-            self.request_transfer(d.name, d.size_bytes, mem)
+        mem = self._mem_of[rid]
+        bit = self._bit_of[rid]
+        mask_list = self.residency.mask_list
+        inflight = self._inflight
+        for did, name, size in self.arrays.task_reads[task.tid]:
+            if not mask_list[did] & bit:
+                fl = inflight.get(name)
+                if fl is None or mem not in fl:
+                    self.request_transfer(name, size, mem)
 
     # ------------------------------------------------------------------
     # queue operations (pop / push / steal)
@@ -225,70 +294,81 @@ class Simulator:
         return True
 
     # ------------------------------------------------------------------
-    def _true_duration(self, task: Task, res: Resource) -> float:
-        base = res.cls.exec_time(task.kind, task.flops)
-        if self.noise > 0:
-            base *= float(np.exp(self.rng.normal(0.0, self.noise)))
-        return base
-
     def _try_start(self, w: _Worker) -> None:
         if w.running is not None or not w.queue:
             return
-        res = self.machine.by_id(w.rid)
-        task = w.queue[0] if not self.strategy.owner_lifo else w.queue[-1]
+        rid = w.rid
+        task = w.queue[-1] if self._lifo else w.queue[0]
         # make sure inputs are (going to be) resident
+        mem = self._mem_of[rid]
+        bit = self._bit_of[rid]
+        mask_list = self.residency.mask_list
+        inflight = self._inflight
         missing = 0
-        for d in task.reads:
-            if not self.residency.is_resident(d.name, res.mem):
-                self.request_transfer(d.name, d.size_bytes, res.mem)
-                key = (d.name, res.mem)
-                self._waiting.setdefault(key, []).append(w.rid)
+        for did, name, size in self.arrays.task_reads[task.tid]:
+            if not mask_list[did] & bit:
+                fl = inflight.get(name)
+                if fl is None or mem not in fl:
+                    self.request_transfer(name, size, mem)
+                self._waiting.setdefault((name, mem), []).append(rid)
                 missing += 1
         if missing:
             w.blocked_on = missing
             return
         # pop + execute
-        if self.strategy.owner_lifo:
+        if self._lifo:
             w.queue.pop()
         else:
             w.queue.popleft()
         w.blocked_on = 0
-        dur = self._true_duration(task, res)
+        tid = task.tid
+        # ground-truth duration: per-rid static flops/rate (the predictor's
+        # cached vector, identical to cls.exec_time incl. the 1e-7 floor)
+        # times the task's seeded noise factor
+        dur = self._rid_static[rid][tid]
+        if self._noise_mult is not None:
+            dur *= self._noise_mult[tid]
         w.running = task
         w.run_start = self.now
-        self._post(self.now + dur, "done", (w.rid, task.tid, dur))
+        self._seq += 1
+        heapq.heappush(self._events, (self.now + dur, self._seq, "done", (rid, tid, dur)))
 
     # ------------------------------------------------------------------
     def _complete(self, rid: int, tid: int, dur: float) -> None:
         w = self.workers[rid]
-        res = self.machine.by_id(rid)
+        res = self.machine.resources[rid]
         task = self.graph.tasks[tid]
-        assert w.running is task
         w.running = None
         self._done[tid] = True
         self._n_done += 1
         self.busy[rid] += dur
         self.intervals.append(ScheduledInterval(tid, rid, w.run_start, self.now))
         self.model.observe(task, res.cls, dur)
-        for d in task.writes:
-            self.residency.write(d.name, res.mem)
-            # invalidate any stale dedup entries for this data
-            for key in [k for k in self._inflight if k[0] == d.name]:
-                del self._inflight[key]
+        bit = self._bit_of[rid]
+        write_id = self.residency.write_id
+        inflight_pop = self._inflight.pop
+        for did, name, size in self.arrays.task_writes[tid]:
+            write_id(did, name, bit)
+            # invalidate any stale dedup entries for this data (O(1): the
+            # in-flight table is indexed per data name)
+            inflight_pop(name, None)
         # load time-stamp correction (§2.3: runtime corrects predictions)
         if not w.queue:
             self.load_ts[rid] = self.now
 
         newly_ready: List[Task] = []
-        for s in self.graph.succ[tid]:
-            self._n_unfinished_preds[s] -= 1
-            if self._n_unfinished_preds[s] == 0:
-                newly_ready.append(self.graph.tasks[s])
+        preds = self._n_unfinished_preds
+        tasks = self.graph.tasks
+        for s in self._succ[tid]:
+            preds[s] -= 1
+            if preds[s] == 0:
+                newly_ready.append(tasks[s])
         if newly_ready:
             # the *activate* operation — where scheduling decisions happen
             self.strategy.place(self, newly_ready, rid)
         self._try_start(w)
-        self._steal_round()
+        if self._steal_on:
+            self._steal_round()
 
     def _steal_round(self) -> None:
         if not self.strategy.allow_steal:
@@ -309,23 +389,44 @@ class Simulator:
         if roots:
             self.strategy.place(self, roots, None)
         self._steal_round()
-        while self._events:
-            t, _, kind, payload = heapq.heappop(self._events)
+        events = self._events
+        heappop = heapq.heappop
+        inflight = self._inflight
+        add_copy = self.residency.add_copy
+        waiting = self._waiting
+        workers = self.workers
+        steal_on = self.strategy.allow_steal
+        n_events = 0
+        while events:
+            t, _, kind, payload = heappop(events)
             self.now = t
-            if kind == "done":
+            n_events += 1
+            if kind == "xfer":
+                name, mem = payload
+                flights = inflight.get(name)
+                if flights is not None:
+                    flights.pop(mem, None)
+                    if not flights:
+                        del inflight[name]
+                # NOTE (pre-existing modeling artifact, preserved for
+                # equivalence): a transfer that was in flight when its data
+                # was overwritten still lands as a "valid" copy here — the
+                # simulated runtime does not cancel stale transfers.
+                add_copy(name, mem)
+                waiters = waiting.pop((name, mem), None)
+                if waiters:
+                    for rid in waiters:
+                        w = workers[rid]
+                        if w.blocked_on > 0:
+                            w.blocked_on -= 1
+                            if w.blocked_on == 0:
+                                self._try_start(w)
+                if steal_on:
+                    self._steal_round()
+            else:  # "done"
                 rid, tid, dur = payload
                 self._complete(rid, tid, dur)
-            elif kind == "xfer":
-                name, mem = payload
-                self._inflight.pop((name, mem), None)
-                self.residency.add_copy(name, mem)
-                for rid in self._waiting.pop((name, mem), []):
-                    w = self.workers[rid]
-                    if w.blocked_on > 0:
-                        w.blocked_on -= 1
-                        if w.blocked_on == 0:
-                            self._try_start(w)
-                self._steal_round()
+        self.n_events = n_events
         if self._n_done != len(self.graph):
             missing = [t.tid for t in self.graph.tasks if not self._done[t.tid]]
             raise RuntimeError(
@@ -340,4 +441,5 @@ class Simulator:
             intervals=self.intervals,
             strategy=self.strategy.name,
             total_flops=self.graph.total_flops(),
+            n_events=self.n_events,
         )

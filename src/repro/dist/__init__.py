@@ -1,0 +1,11 @@
+"""Distribution layer (minimal surface).
+
+Only the ``hints`` module is implemented so far: it carries the
+batch-sharding constraint helpers the model code calls unconditionally.
+The remaining submodules named by the roadmap (``sharding``, ``elastic``,
+``sched_bridge``, ``straggler``) land in later PRs; importers should treat
+them as optional (tests gate on ``pytest.importorskip``).
+"""
+from . import hints
+
+__all__ = ["hints"]

@@ -10,19 +10,24 @@ from __future__ import annotations
 from functools import partial
 from typing import Optional
 
-import jax
-import jax.numpy as jnp
-
 from repro.core.dag import Mode, TaskGraph
 
 from .tiles import make_tile_objects
 
+# jax is imported inside the tile kernels: the scheduler-only path
+# (with_fns=False, used by every benchmark sweep) never pays the ~0.8s
+# jax import.
+
 
 def _potrf(a_kk):
+    import jax.numpy as jnp
+
     return (jnp.linalg.cholesky(a_kk),)
 
 
 def _trsm(l_kk, a_ik):
+    import jax
+
     # A[i,k] <- A[i,k] * L[k,k]^{-T}
     x = jax.scipy.linalg.solve_triangular(l_kk, a_ik.T, lower=True)
     return (x.T,)

@@ -12,9 +12,6 @@ matrices used by the tests. The simulator costs remain the PLASMA ones.
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-
 from repro.core.dag import Mode, TaskGraph
 
 from .tiles import make_tile_objects
@@ -22,6 +19,8 @@ from .tiles import make_tile_objects
 
 def _getrf(a_kk):
     """No-pivot in-tile LU: returns packed L\\U (unit lower not stored)."""
+    import jax
+    import jax.numpy as jnp
 
     def body(k, a):
         col = a[:, k] / a[k, k]
@@ -38,17 +37,23 @@ def _getrf(a_kk):
 
 
 def _split_lu(packed):
+    import jax.numpy as jnp
+
     l = jnp.tril(packed, -1) + jnp.eye(packed.shape[0], dtype=packed.dtype)
     u = jnp.triu(packed)
     return l, u
 
 
 def _gessm(a_kk, a_kj):
+    import jax
+
     l, _ = _split_lu(a_kk)
     return (jax.scipy.linalg.solve_triangular(l, a_kj, lower=True, unit_diagonal=True),)
 
 
 def _tstrf(a_kk, a_ik):
+    import jax
+
     _, u = _split_lu(a_kk)
     # A[i,k] <- A[i,k] U^{-1}
     x = jax.scipy.linalg.solve_triangular(u.T, a_ik.T, lower=True)

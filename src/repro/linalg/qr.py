@@ -12,14 +12,14 @@ PLASMA's T-tile sizes (ib x b) so simulated transfer volumes stay faithful.
 """
 from __future__ import annotations
 
-import jax.numpy as jnp
-
 from repro.core.dag import DataObject, Mode, TaskGraph
 
 from .tiles import make_tile_objects, tile_name
 
 
 def _geqrt(a_kk):
+    import jax.numpy as jnp
+
     q, r = jnp.linalg.qr(a_kk, mode="complete")
     return (r, q)  # writes: A[k,k] <- R, T[k,k] <- Q
 
@@ -29,6 +29,8 @@ def _ormqr(q_kk, a_kj):
 
 
 def _tsqrt(a_kk, a_ik):
+    import jax.numpy as jnp
+
     b = a_kk.shape[0]
     s = jnp.concatenate([a_kk, a_ik], axis=0)  # (2b, b)
     q, r = jnp.linalg.qr(s, mode="complete")  # q: (2b,2b) r: (2b,b)
@@ -36,6 +38,8 @@ def _tsqrt(a_kk, a_ik):
 
 
 def _tsmqr(q_ik, a_kj, a_ij):
+    import jax.numpy as jnp
+
     b = a_kj.shape[0]
     s = jnp.concatenate([a_kj, a_ij], axis=0)
     s = q_ik.T @ s

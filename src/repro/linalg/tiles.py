@@ -3,7 +3,6 @@ from __future__ import annotations
 
 from typing import Dict, Tuple
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.dag import DataObject
@@ -28,7 +27,7 @@ def make_tile_objects(
     return objs
 
 
-def split_tiles(a: jnp.ndarray, tile: int) -> Dict[str, jnp.ndarray]:
+def split_tiles(a, tile: int) -> Dict[str, "jnp.ndarray"]:
     """Split a square matrix into named tiles A[i,j]."""
     n = a.shape[0]
     assert a.shape == (n, n) and n % tile == 0
@@ -42,7 +41,9 @@ def split_tiles(a: jnp.ndarray, tile: int) -> Dict[str, jnp.ndarray]:
     return out
 
 
-def join_tiles(tiles: Dict[str, jnp.ndarray], nt: int, tile: int) -> jnp.ndarray:
+def join_tiles(tiles: Dict[str, "jnp.ndarray"], nt: int, tile: int) -> "jnp.ndarray":
+    import jax.numpy as jnp
+
     rows = []
     for i in range(nt):
         rows.append(
@@ -51,22 +52,28 @@ def join_tiles(tiles: Dict[str, jnp.ndarray], nt: int, tile: int) -> jnp.ndarray
     return jnp.concatenate(rows, axis=0)
 
 
-def random_spd(n: int, seed: int = 0, dtype=jnp.float64) -> jnp.ndarray:
+def random_spd(n: int, seed: int = 0, dtype=None) -> "jnp.ndarray":
     """Symmetric positive-definite test matrix."""
+    import jax.numpy as jnp
+
     rng = np.random.default_rng(seed)
     a = rng.standard_normal((n, n))
     spd = a @ a.T / n + np.eye(n) * n
-    return jnp.asarray(spd, dtype=dtype)
+    return jnp.asarray(spd, dtype=dtype or jnp.float64)
 
 
-def random_dd(n: int, seed: int = 0, dtype=jnp.float64) -> jnp.ndarray:
+def random_dd(n: int, seed: int = 0, dtype=None) -> "jnp.ndarray":
     """Diagonally-dominant matrix (safe for no-pivot LU)."""
+    import jax.numpy as jnp
+
     rng = np.random.default_rng(seed)
     a = rng.standard_normal((n, n))
     a = a + np.eye(n) * (np.abs(a).sum(axis=1).max() + n)
-    return jnp.asarray(a, dtype=dtype)
+    return jnp.asarray(a, dtype=dtype or jnp.float64)
 
 
-def random_dense(n: int, seed: int = 0, dtype=jnp.float64) -> jnp.ndarray:
+def random_dense(n: int, seed: int = 0, dtype=None) -> "jnp.ndarray":
+    import jax.numpy as jnp
+
     rng = np.random.default_rng(seed)
-    return jnp.asarray(rng.standard_normal((n, n)), dtype=dtype)
+    return jnp.asarray(rng.standard_normal((n, n)), dtype=dtype or jnp.float64)

@@ -1,0 +1,45 @@
+"""Import shim: run hypothesis-based tests when hypothesis is installed,
+skip (only) them when it is not, without losing the rest of the module.
+
+Usage in test files::
+
+    from _hypothesis_compat import given, settings, st
+
+When hypothesis is available these are the real objects. When it is
+missing, ``@given(...)`` turns the test into a skip and ``st.*`` produces
+inert placeholders so module-level strategy expressions still evaluate.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    def given(*_a, **_k):
+        def deco(fn):
+            def skipped():
+                pytest.skip("hypothesis not installed")
+
+            skipped.__name__ = fn.__name__
+            skipped.__doc__ = fn.__doc__
+            return skipped
+
+        return deco
+
+    def settings(*_a, **_k):
+        return lambda fn: fn
+
+    class _AnyStrategy:
+        """Absorbs any strategy-building expression (st.lists(...), etc.)."""
+
+        def __call__(self, *a, **k):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    st = _AnyStrategy()

@@ -1,0 +1,59 @@
+"""Benchmark-harness behavior: empty sweeps, parallel run_many equivalence,
+and the scheduler-overhead reporting contract."""
+from functools import partial
+
+from repro.configs.paper_machine import paper_machine
+from repro.core import DADA, run_many
+from repro.linalg.cholesky import cholesky_graph
+
+
+def test_sweep_empty_gpu_list_returns_no_rows(capsys):
+    import sys
+    from pathlib import Path
+
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+    from benchmarks.common import STRATEGIES, sweep
+
+    rows = sweep("tmp_empty", "cholesky", STRATEGIES, 3, [])
+    assert rows == []
+    assert "empty sweep" in capsys.readouterr().out
+    rows = sweep("tmp_empty", "cholesky", {}, 3, [2])
+    assert rows == []
+
+
+def test_run_many_parallel_matches_serial():
+    machine = paper_machine(2)
+    gfac = partial(cholesky_graph, 4, 256, with_fns=False)
+    sfac = partial(DADA, alpha=0.5)
+    serial = run_many(gfac, machine, sfac, n_runs=4, n_jobs=1)
+    parallel = run_many(gfac, machine, sfac, n_runs=4, n_jobs=2)
+    assert serial == parallel  # bit-identical summaries
+
+
+def test_run_many_falls_back_on_unpicklable_factories():
+    machine = paper_machine(2)
+    local = {"n": 0}
+
+    def gfac():
+        local["n"] += 1  # closure: not picklable
+        return cholesky_graph(4, 256, with_fns=False)
+
+    s = run_many(gfac, machine, lambda: DADA(alpha=0.5), n_runs=2, n_jobs=2)
+    assert s.n == 2
+    assert local["n"] >= 1  # ran in-process
+
+
+def test_sched_overhead_reports_events_per_sec(capsys, monkeypatch):
+    import sys
+    from pathlib import Path
+
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+    monkeypatch.setenv("REPRO_BENCH_GPUS", "2")
+    monkeypatch.setenv("REPRO_BENCH_RUNS", "1")
+    import benchmarks.sched_overhead as so
+
+    rows = so.main()
+    out = capsys.readouterr().out
+    assert "events_per_s=" in out
+    assert all(r["events"] > 0 for r in rows)
+    assert {r["kernel"] for r in rows} == {"cholesky", "lu", "qr"}

@@ -1,7 +1,6 @@
 """Data-flow DAG semantics: RAW/WAR/WAW derivation + graph utilities."""
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import DataObject, Mode, TaskGraph
 

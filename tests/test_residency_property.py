@@ -1,0 +1,157 @@
+"""Property tests: the bitmask Residency against the set-based reference.
+
+Random operation sequences (add_copy / write / initialize) applied to both
+implementations must agree on every query (is_resident, locations,
+has_any, transfer_hops, bytes_resident) — including the attached-mode
+incremental resident-bytes vector against a recomputed ground truth.
+"""
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core import DataObject, GraphArrays, Mode, Residency, TaskGraph
+from repro.core._reference import SetResidency
+from repro.core.machine import HOST_MEM
+
+NAMES = [f"d{i}" for i in range(6)]
+MEMS = [HOST_MEM, 0, 1, 2, 7]
+
+
+def _apply(ops, res):
+    for op, name, mem in ops:
+        if op == 0:
+            res.add_copy(name, mem)
+        elif op == 1:
+            res.write(name, mem)
+        else:
+            res.initialize([name], mem)
+
+
+def _graph_over(names):
+    g = TaskGraph()
+    for i, n in enumerate(names):
+        g.add_task("touch", [(DataObject(n, 100 + i), Mode.RW)], flops=1.0)
+    return g
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    st.lists(
+        st.tuples(
+            st.integers(0, 2),
+            st.sampled_from(NAMES),
+            st.sampled_from(MEMS),
+        ),
+        max_size=40,
+    )
+)
+def test_bitmask_residency_matches_set_reference(ops):
+    a = Residency()
+    b = SetResidency()
+    _apply(ops, a)
+    _apply(ops, b)
+    sizes = {n: 100 + i for i, n in enumerate(NAMES)}
+    for n in NAMES:
+        assert a.has_any(n) == b.has_any(n)
+        assert a.locations(n) == b.locations(n)
+        for m in MEMS:
+            assert a.is_resident(n, m) == b.is_resident(n, m)
+            assert a.transfer_hops(n, m) == b.transfer_hops(n, m)
+    for m in MEMS:
+        assert a.bytes_resident(m, sizes) == b.bytes_resident(m, sizes)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    st.lists(
+        st.tuples(
+            st.integers(0, 2),
+            st.sampled_from(NAMES),
+            st.sampled_from(MEMS),
+        ),
+        max_size=40,
+    )
+)
+def test_attached_incremental_bytes_match_recompute(ops):
+    g = _graph_over(NAMES)
+    arr = g.arrays()
+    res = Residency()
+    res.attach(arr)
+    _apply(ops, res)
+    sizes = {n: int(arr.data_sizes[arr.name_to_id[n]]) for n in NAMES}
+    for m in MEMS:
+        assert res.bytes_resident(m) == res.bytes_resident(m, sizes)
+
+
+def test_attach_preserves_existing_state():
+    res = Residency()
+    res.write("d0", 2)
+    res.add_copy("d0", HOST_MEM)
+    g = _graph_over(NAMES)
+    res.attach(g.arrays())
+    assert res.locations("d0") == {2, HOST_MEM}
+    assert res.bytes_resident(2) == 100
+
+
+def test_mask_of_ids_matches_scalar():
+    g = _graph_over(NAMES)
+    arr = g.arrays()
+    res = Residency()
+    res.attach(arr)
+    res.initialize(NAMES, HOST_MEM)
+    res.write("d3", 1)
+    ids = np.arange(len(NAMES))
+    masks = res.mask_of_ids(ids)
+    for n, m in zip(NAMES, masks.tolist()):
+        assert m == res.mask(n)
+
+
+def test_mem_out_of_range_rejected():
+    res = Residency()
+    with pytest.raises(ValueError):
+        res.add_copy("d0", 62)
+    with pytest.raises(ValueError):
+        res.is_resident("d0", -2)
+
+
+# ---------------------------------------------------------------------------
+# GraphArrays CSR view against the Task-object ground truth
+
+
+def test_graph_arrays_csr_matches_tasks():
+    rng = np.random.default_rng(0)
+    datas = [DataObject(f"x{i}", int(rng.integers(1, 1000))) for i in range(8)]
+    g = TaskGraph()
+    for _ in range(50):
+        k = int(rng.integers(1, 4))
+        picks = rng.choice(8, size=k, replace=False)
+        accesses = []
+        for j, di in enumerate(picks):
+            mode = Mode.RW if j == 0 else (Mode.R if rng.random() < 0.6 else Mode.W)
+            accesses.append((datas[di], mode))
+        g.add_task(
+            f"kind{int(rng.integers(3))}", accesses, flops=float(rng.uniform(1, 100))
+        )
+    arr = g.arrays()
+    assert arr.n_tasks == len(g)
+    for t in g.tasks:
+        lo, hi = arr.read_indptr[t.tid], arr.read_indptr[t.tid + 1]
+        names = [arr.data_names[i] for i in arr.read_ids[lo:hi]]
+        assert names == [d.name for d in t.reads]
+        assert arr.read_sizes[lo:hi].tolist() == [d.size_bytes for d in t.reads]
+        lo, hi = arr.write_indptr[t.tid], arr.write_indptr[t.tid + 1]
+        names = [arr.data_names[i] for i in arr.write_ids[lo:hi]]
+        assert names == [d.name for d in t.writes]
+        assert arr.kinds[arr.kind_codes[t.tid]] == t.kind
+        assert arr.flops[t.tid] == t.flops
+        assert [nm for _, nm, _ in arr.task_reads[t.tid]] == [d.name for d in t.reads]
+    # data id space matches data_objects()
+    objs = g.data_objects()
+    assert set(arr.data_names) == set(objs)
+    for name, did in arr.name_to_id.items():
+        assert int(arr.data_sizes[did]) == objs[name].size_bytes
+    # arrays view is cached and invalidated by add_task
+    assert g.arrays() is arr
+    g.add_task("kind0", [(datas[0], Mode.R)])
+    assert g.arrays() is not arr
