@@ -1,0 +1,138 @@
+"""Scheduler-throughput regression gate.
+
+Compares the current ``results/BENCH_sched.json`` (produced by
+``sched_overhead.py``) against the committed baseline
+``results/BENCH_sched_baseline.json`` and exits 1 when events/sec drops
+more than ``REPRO_SCHED_REGRESSION_TOL`` (default 0.25 = 25%).
+
+Two levels of comparison, because single-run events/sec on shared boxes is
+noisy (the committed baseline itself shows ~25% spread between identical
+code paths measured twice in one run):
+
+  * the **aggregate** geometric mean of per-configuration ratios must not
+    drop more than the tolerance — per-row noise averages out across the
+    ~25 configurations, so this reliably catches broad scheduler
+    slowdowns;
+  * per-configuration drops are *reported* (marked against 2× the
+    tolerance) but gate the build only when ``REPRO_SCHED_ROW_TOL`` is
+    set to a fraction (e.g. ``0.5``): single-run rows on shared boxes
+    have been observed to swing −70% on identical code, so a hard
+    per-row gate is only meaningful on quiet, repetition-averaged
+    runners.
+
+Machines differ in raw speed, so both files carry a ``calibration_score``
+— a fixed scheduler-independent, interpreter-bound workload — and all
+baseline numbers are rescaled by the calibration ratio first.
+
+Usage (CI runs this right after ``sched_overhead.py``)::
+
+    python benchmarks/sched_overhead.py
+    python benchmarks/check_sched_regression.py
+
+Refreshing the baseline after an intentional perf change::
+
+    python benchmarks/sched_overhead.py
+    cp benchmarks/results/BENCH_sched.json \
+       benchmarks/results/BENCH_sched_baseline.json
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import sys
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent / "results"
+CURRENT = RESULTS / "BENCH_sched.json"
+BASELINE = RESULTS / "BENCH_sched_baseline.json"
+
+KEY_FIELDS = ("kernel", "strategy", "backend", "nt", "n_gpus")
+
+
+def _rows_by_key(section: dict) -> dict:
+    out = {}
+    for row in section.get("whole_sim", []):
+        out[tuple(row.get(f) for f in KEY_FIELDS)] = row
+    return out
+
+
+def main() -> int:
+    tol = float(os.environ.get("REPRO_SCHED_REGRESSION_TOL", "0.25"))
+    row_tol = float(os.environ.get("REPRO_SCHED_ROW_TOL", "0") or 0)
+    if not CURRENT.exists():
+        print(f"no current results at {CURRENT}; run sched_overhead.py first")
+        return 1
+    if not BASELINE.exists():
+        print(f"no committed baseline at {BASELINE}; gate skipped")
+        return 0
+    cur = json.loads(CURRENT.read_text()).get("sched_overhead", {})
+    base = json.loads(BASELINE.read_text()).get("sched_overhead", {})
+    cal_cur = cur.get("calibration_score") or 0.0
+    cal_base = base.get("calibration_score") or 0.0
+    if cal_cur <= 0 or cal_base <= 0:
+        print("missing calibration figures; gate skipped")
+        return 0
+    scale = cal_cur / cal_base
+    row_limit = row_tol if row_tol > 0 else 2 * tol
+    print(
+        f"calibration: current {cal_cur:.2f}, baseline {cal_base:.2f} "
+        f"-> machine-speed scale {scale:.3f}; tolerance {tol:.0%} "
+        f"aggregate / {row_limit:.0%} per-configuration"
+        + ("" if row_tol > 0 else " (informational)")
+    )
+
+    cur_rows = _rows_by_key(cur)
+    base_rows = _rows_by_key(base)
+    collapsed = []
+    log_ratios = []
+    for key, brow in sorted(base_rows.items()):
+        crow = cur_rows.get(key)
+        if crow is None:
+            continue  # configuration not measured in this run
+        expect = brow["events_per_s"] * scale
+        got = crow["events_per_s"]
+        if expect <= 0 or got <= 0:
+            continue
+        ratio = got / expect
+        log_ratios.append(math.log(ratio))
+        mark = "ok  " if ratio >= 1.0 - row_limit else "FAIL"
+        print(
+            f"  [{mark}] {'/'.join(str(k) for k in key)}: "
+            f"{got:.0f} ev/s vs scaled baseline {expect:.0f} "
+            f"({ratio - 1.0:+.0%})"
+        )
+        if ratio < 1.0 - row_limit:
+            collapsed.append(key)
+    if not log_ratios:
+        print("no overlapping configurations between run and baseline")
+        return 0
+    geo = math.exp(sum(log_ratios) / len(log_ratios))
+    print(
+        f"\naggregate events/sec vs baseline: {geo - 1.0:+.1%} "
+        f"(geometric mean over {len(log_ratios)} configurations)"
+    )
+    failed = False
+    if geo < 1.0 - tol:
+        print(f"aggregate drop exceeds {tol:.0%} — gate FAILED")
+        failed = True
+    if collapsed:
+        print(
+            f"note: {len(collapsed)} configuration(s) dropped more than "
+            f"{row_limit:.0%}"
+            + (
+                " — gate FAILED"
+                if row_tol > 0
+                else " (informational; set REPRO_SCHED_ROW_TOL to gate on rows)"
+            )
+        )
+        if row_tol > 0:
+            failed = True
+    if failed:
+        return 1
+    print("scheduler-throughput gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -33,12 +33,59 @@ MATRIX = 8192
 TILE = 512
 NT = MATRIX // TILE
 RESULTS_DIR = Path(__file__).resolve().parent / "results"
+BENCH_JSON = RESULTS_DIR / "BENCH_sched.json"
 
-GRAPHS: Dict[str, Callable] = {
-    "cholesky": partial(cholesky_graph, NT, TILE, with_fns=False),
-    "lu": partial(lu_graph, NT, TILE, with_fns=False),
-    "qr": partial(qr_graph, NT, TILE, with_fns=False),
-}
+def graphs_for(nt: int, tile: int = TILE) -> Dict[str, Callable]:
+    """Paper-kernel graph factories at an arbitrary tile-grid size NT
+    (scheduler-scaling sweeps use NT ∈ {32, 64}; the paper shape is 16)."""
+    return {
+        "cholesky": partial(cholesky_graph, nt, tile, with_fns=False),
+        "lu": partial(lu_graph, nt, tile, with_fns=False),
+        "qr": partial(qr_graph, nt, tile, with_fns=False),
+    }
+
+
+GRAPHS: Dict[str, Callable] = graphs_for(NT)
+
+
+def machine_for(n_gpus: int, n_cpus: int = None):
+    """The paper box for paper-sized configs, the scaled 32-resource-class
+    platform beyond it (n_gpus > 8 or an explicit CPU count)."""
+    from repro.configs.paper_machine import scaled_machine
+
+    if n_cpus is None and 0 <= n_gpus <= 8:
+        return paper_machine(n_gpus)
+    return scaled_machine(n_gpus=n_gpus, n_cpus=8 if n_cpus is None else n_cpus)
+
+
+def update_bench_json(section: str, payload) -> Path:
+    """Merge one section into ``results/BENCH_sched.json``.
+
+    The file tracks the scheduler-performance trajectory across PRs
+    (events/sec per strategy and backend, wall times, λ-probe latencies);
+    each producing script owns one top-level key so ``sched_overhead.py``
+    and ``paper_validation.py`` can update it independently.
+    """
+    import json
+
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    doc = {}
+    if BENCH_JSON.exists():
+        try:
+            doc = json.loads(BENCH_JSON.read_text())
+        except (ValueError, OSError) as exc:
+            # never silently drop another producer's section: the file is
+            # a cross-PR trajectory, so make the reset loud
+            print(
+                f"warning: {BENCH_JSON} was unreadable ({exc}); "
+                f"starting a fresh trajectory file",
+                flush=True,
+            )
+            doc = {}
+    doc["schema"] = 1
+    doc[section] = payload
+    BENCH_JSON.write_text(json.dumps(doc, indent=2, sort_keys=True) + "\n")
+    return BENCH_JSON
 
 
 def bench_settings():

@@ -168,8 +168,34 @@ def main() -> bool:
     ]
     with ThreadPoolExecutor(max_workers=len(mods)) as tp:
         figs = [f.result() for f in [tp.submit(m.main) for m in mods]]
-    ok = print_checks(validate(*figs))
-    print(f"\ntotal wall-clock: {time.perf_counter() - t0:.2f}s")
+    checks = validate(*figs)
+    ok = print_checks(checks)
+    wall = time.perf_counter() - t0
+    print(f"\ntotal wall-clock: {wall:.2f}s")
+
+    # record the run in the machine-readable perf trajectory (satellite of
+    # the scheduler-throughput tracking; see benchmarks/README.md)
+    import os
+
+    from benchmarks.common import update_bench_json
+
+    update_bench_json(
+        "paper_validation",
+        dict(
+            wall_s=round(wall, 2),
+            backend=os.environ.get("REPRO_SCHED_BACKEND", "numpy"),
+            fast=os.environ.get("REPRO_BENCH_FAST", "") == "1",
+            claims=[
+                dict(claim=c["claim"], passed=bool(c["passed"]),
+                     measured=c["measured"])
+                for c in checks
+            ],
+            figures={
+                name: rows
+                for name, rows in zip(("fig1", "fig2", "fig3", "fig4"), figs)
+            },
+        ),
+    )
     return ok
 
 

@@ -3,15 +3,25 @@
 The paper's sweeps are bottlenecked by the scheduler's own per-decision
 cost, not by the simulated workload (cf. Amaris et al., arXiv:1711.06433 on
 keeping dual-approximation decisions cheap). This benchmark isolates that
-cost: for each strategy it runs seeded simulations of the paper-shaped
-kernels and reports wall-clock, simulator events/sec and tasks/sec —
-the scheduler-throughput numbers the array-native core is optimized for.
+cost along two axes:
 
-Runnable directly (``python benchmarks/sched_overhead.py``) or via
-``python -m benchmarks.sched_overhead``. Knobs: REPRO_BENCH_GPUS (first
-entry is used, default 8) and REPRO_BENCH_RUNS (default 3).
+  * **whole-sim throughput** — for each strategy × backend it runs seeded
+    simulations of the paper-shaped kernels (NT from ``REPRO_BENCH_NT``)
+    and reports wall-clock, simulator events/sec and tasks/sec;
+  * **λ-probe placement** — one wide ready wave of an NT=64 Cholesky on
+    the 32-resource scaled machine, timed through ``DADA.place`` per
+    backend: this is the (ready × resources × λ-probes) scoring kernel the
+    jax backend batches, and the metric the ≥3× acceptance gate reads. The
+    wave's placement decisions are asserted identical across backends.
 
-Output follows the ``name,us_per_call,derived`` contract.
+Results go to stdout (``name,us_per_call,derived`` contract) and to
+``results/BENCH_sched.json`` (consumed by ``check_sched_regression.py``).
+
+Knobs: REPRO_BENCH_GPUS (first entry, default 8), REPRO_BENCH_RUNS
+(default 3), REPRO_BENCH_NT (comma list, default 16), REPRO_SCHED_BACKENDS
+(default ``numpy,jax`` when jax imports, else ``numpy``),
+REPRO_BENCH_LAMBDA (=0 skips the λ-probe section), REPRO_BENCH_LAMBDA_NT
+(default 64), REPRO_BENCH_LAMBDA_REPS (default 3).
 """
 from __future__ import annotations
 
@@ -26,62 +36,283 @@ if __package__ in (None, ""):
         if p not in sys.path:
             sys.path.insert(0, p)
 
-from repro.configs.paper_machine import paper_machine
 from repro.core import Simulator, make_strategy
 from repro.core.dada import DADA
 
-from benchmarks.common import GRAPHS
+from benchmarks.common import graphs_for, machine_for, update_bench_json
 
 
-def strategies():
+def strategies(backend: str):
     return {
-        "heft": lambda: make_strategy("heft"),
-        "ws": lambda: make_strategy("ws"),
-        "dada(0)": lambda: DADA(alpha=0.0),
-        "dada(a)": lambda: DADA(alpha=0.5),
-        "dada(a)+cp": lambda: DADA(alpha=0.5, use_cp=True),
+        "heft": lambda: make_strategy("heft", backend=backend),
+        "dada(0)": lambda: DADA(alpha=0.0, backend=backend),
+        "dada(a)": lambda: DADA(alpha=0.5, backend=backend),
+        "dada(a)+cp": lambda: DADA(alpha=0.5, use_cp=True, backend=backend),
     }
+
+
+# strategies that use no scoring backend: measured once per kernel, under
+# the stable backend label "none" (independent of the backend list)
+BACKEND_FREE_STRATEGIES = {
+    "ws": lambda: make_strategy("ws"),
+}
+
+
+def available_backends() -> list:
+    """Backends to measure: only ones that actually initialise.
+
+    ``get_backend("jax")`` can fall back to numpy (missing jax, init
+    failure); measuring that fallback under a ``jax`` label would record
+    duplicate-numpy rows into the perf trajectory, so such entries are
+    dropped with a notice.
+    """
+    from repro.core import get_backend
+
+    env = os.environ.get("REPRO_SCHED_BACKENDS", "")
+    names = (
+        [b.strip() for b in env.split(",") if b.strip()]
+        if env
+        else ["numpy", "jax"]
+    )
+    out = []
+    for name in names:
+        try:
+            unavailable = name != "numpy" and get_backend(name) is None
+        except ValueError:
+            print(f"note: unknown backend {name!r} — skipped")
+            continue
+        if unavailable:
+            print(f"note: backend {name!r} unavailable here — skipped")
+            continue
+        out.append(name)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# whole-simulation throughput
+
+
+def whole_sim_rows(nts, n_gpus: int, n_runs: int, backends) -> list:
+    rows = []
+    for nt in nts:
+        machine = machine_for(n_gpus)
+        for kernel, gfac in graphs_for(nt).items():
+            # graph construction excluded: we are measuring the scheduler
+            graphs = [gfac() for _ in range(n_runs)]
+            passes = [("none", BACKEND_FREE_STRATEGIES)] + [
+                (backend, strategies(backend)) for backend in backends
+            ]
+            for backend, strats in passes:
+                for label, sfac in strats.items():
+                    events = tasks = 0
+                    t0 = time.perf_counter()
+                    for i, g in enumerate(graphs):
+                        sim = Simulator(g, machine, sfac(), seed=1234 + i)
+                        res = sim.run()
+                        events += res.n_events
+                        tasks += len(g)
+                    dt = time.perf_counter() - t0
+                    us = dt / n_runs * 1e6
+                    row = dict(
+                        kernel=kernel, strategy=label, backend=backend,
+                        nt=nt, n_gpus=n_gpus, runs=n_runs,
+                        wall_s=round(dt, 4), events=events,
+                        events_per_s=round(events / dt, 1) if dt > 0 else 0.0,
+                        tasks_per_s=round(tasks / dt, 1) if dt > 0 else 0.0,
+                    )
+                    rows.append(row)
+                    print(
+                        f"sched_overhead/{kernel}/{label}/gpus{n_gpus}/"
+                        f"nt{nt}/{backend},{us:.1f},"
+                        f"events_per_s={row['events_per_s']};"
+                        f"tasks_per_s={row['tasks_per_s']}"
+                    )
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# λ-probe placement microbenchmark
+
+
+def _widest_wave(graph):
+    """The largest single ready wave: tasks at the most populous depth
+    (for tile Cholesky this is the first syrk/gemm wave, ~NT²/2 tasks)."""
+    depth = [0] * len(graph)
+    for t in graph.tasks:
+        preds = graph.pred[t.tid]
+        depth[t.tid] = (max(depth[p] for p in preds) + 1) if preds else 0
+    counts = {}
+    for d in depth:
+        counts[d] = counts.get(d, 0) + 1
+    best = max(counts, key=lambda d: (counts[d], -d))
+    return [t for t in graph.tasks if depth[t.tid] == best]
+
+
+def _reset_placement_state(sim, load_ts_snapshot):
+    sim.load_ts[:] = load_ts_snapshot
+    for w in sim.workers:
+        w.queue.clear()
+        w.blocked_on = 0
+    sim._inflight.clear()
+    sim._link_free.clear()
+    sim._waiting.clear()
+    sim._events.clear()
+
+
+def lambda_probe_rows(
+    nt: int, n_cpus: int, n_gpus: int, reps: int, backends, kernel: str = "cholesky"
+) -> list:
+    graphs = graphs_for(nt)
+    graph = graphs[kernel]()
+    machine = machine_for(n_gpus, n_cpus)
+    wave = _widest_wave(graph)
+    rows = []
+    placements = {}
+    setups = {}
+    for backend in backends:
+        strat = DADA(alpha=0.5, use_cp=True, backend=backend)
+        sim = Simulator(graph, machine, strat, seed=0)
+        # scatter a third of the tiles across GPU memories so affinity and
+        # transfer scoring are exercised, not just durations
+        for k, name in enumerate(sim.arrays.data_names):
+            if k % 3 == 0 and n_gpus:
+                sim.residency.write(name, k % n_gpus)
+        # isolate the placement *decision* cost: queue pushes trigger the
+        # simulator's prefetch/transfer machinery, which is workload
+        # simulation (identical for every backend), not scheduler scoring
+        placed = {}
+        sim.push = lambda task, rid, _p=placed: _p.__setitem__(task.tid, rid)
+        snapshot = list(sim.load_ts)
+        strat.place(sim, wave, None)  # warm-up (jit compilation for jax)
+        placements[backend] = dict(placed)
+        _reset_placement_state(sim, snapshot)
+        setups[backend] = (strat, sim, snapshot, [])
+    # interleave the repetitions across backends: the wall clock on shared
+    # boxes drifts, and interleaving keeps the comparison apples-to-apples
+    for _ in range(reps):
+        for backend in backends:
+            strat, sim, snapshot, samples = setups[backend]
+            t0 = time.perf_counter()
+            strat.place(sim, wave, None)
+            samples.append(time.perf_counter() - t0)
+            _reset_placement_state(sim, snapshot)
+    for backend in backends:
+        samples = sorted(setups[backend][3])
+        us = samples[len(samples) // 2] * 1e6  # median: the box is noisy
+        rows.append(
+            dict(
+                bench="lambda_probe", kernel=kernel, nt=nt, n_cpus=n_cpus,
+                n_gpus=n_gpus, resources=n_cpus + n_gpus, width=len(wave),
+                strategy="dada(a)+cp", backend=backend, reps=reps,
+                us_per_place=round(us, 1),
+            )
+        )
+    base = next((r for r in rows if r["backend"] == "numpy"), None)
+    for r in rows:
+        # None (not True) when numpy was not measured: an honest "no
+        # comparison happened", never a vacuous pass
+        identical = (
+            placements[r["backend"]] == placements["numpy"]
+            if "numpy" in placements
+            else None
+        )
+        r["decisions_match_numpy"] = identical
+        if base is not None and r["us_per_place"] > 0:
+            r["speedup_vs_numpy"] = round(
+                base["us_per_place"] / r["us_per_place"], 2
+            )
+        print(
+            f"sched_overhead/lambda_probe/{kernel}/nt{nt}/res{r['resources']}/"
+            f"dada(a)+cp/{r['backend']},{r['us_per_place']:.1f},"
+            f"width={r['width']};speedup_vs_numpy={r.get('speedup_vs_numpy', 1.0)};"
+            f"decisions_match_numpy={identical}"
+        )
+    return rows
+
+
+# ---------------------------------------------------------------------------
+
+
+def calibration_score() -> float:
+    """Fixed scheduler-independent workload scoring machine speed.
+
+    The regression gate compares events/sec across machines (developer
+    boxes, CI runners); dividing by this constant-workload score cancels
+    most of the raw CPU-speed difference. Two properties matter: it
+    touches none of the scheduler code under test (a uniform scheduler
+    slowdown must not drag the calibration down with it, or the gate
+    would self-cancel), and it is *interpreter-bound* — heap ops, dict
+    lookups, float arithmetic — because that is what events/sec is bound
+    by, so the normalisation tracks the right axis of machine speed
+    (a box with fast BLAS but a slow interpreter must not look fast).
+    """
+    import heapq
+
+    t0 = time.perf_counter()
+    acc = 0.0
+    for _ in range(5):
+        heap = []
+        table = {}
+        x = 1.0
+        for i in range(20000):
+            x = x * 1.0000001 + 0.5
+            heapq.heappush(heap, (x % 97.0, i))
+            table[i & 1023] = x
+            if i & 7 == 0:
+                acc += heapq.heappop(heap)[0]
+        acc += sum(table.values())
+    dt = time.perf_counter() - t0
+    assert acc != 0.0
+    return 1e5 / dt if dt > 0 else 0.0  # arbitrary units
 
 
 def main() -> list:
     gpus_env = os.environ.get("REPRO_BENCH_GPUS", "8")
     n_gpus = int(gpus_env.split(",")[0] or 8)
     n_runs = int(os.environ.get("REPRO_BENCH_RUNS", "3"))
-    machine = paper_machine(n_gpus)
+    nts = [
+        int(x) for x in os.environ.get("REPRO_BENCH_NT", "16").split(",") if x
+    ]
+    backends = available_backends()
 
     print("name,us_per_call,derived")
-    rows = []
-    for kernel, gfac in GRAPHS.items():
-        for label, sfac in strategies().items():
-            # graph construction excluded: we are measuring the scheduler
-            graphs = [gfac() for _ in range(n_runs)]
-            events = tasks = 0
-            t0 = time.perf_counter()
-            for i, g in enumerate(graphs):
-                sim = Simulator(g, machine, sfac(), seed=1234 + i)
-                res = sim.run()
-                events += res.n_events
-                tasks += len(g)
-            dt = time.perf_counter() - t0
-            ev_s = events / dt if dt > 0 else 0.0
-            t_s = tasks / dt if dt > 0 else 0.0
-            us = dt / n_runs * 1e6
-            row = dict(
-                kernel=kernel, strategy=label, n_gpus=n_gpus, runs=n_runs,
-                wall_s=round(dt, 4), events=events,
-                events_per_s=round(ev_s, 1), tasks_per_s=round(t_s, 1),
-            )
-            rows.append(row)
-            print(
-                f"sched_overhead/{kernel}/{label}/gpus{n_gpus},{us:.1f},"
-                f"events_per_s={row['events_per_s']};tasks_per_s={row['tasks_per_s']}"
-            )
+    rows = whole_sim_rows(nts, n_gpus, n_runs, backends)
     total_ev = sum(r["events"] for r in rows)
     total_s = sum(r["wall_s"] for r in rows)
-    print(
-        f"sched_overhead/total,{total_s * 1e6:.1f},"
-        f"events_per_s={total_ev / total_s:.1f}" if total_s > 0 else "n/a"
+    if total_s > 0:
+        print(
+            f"sched_overhead/total,{total_s * 1e6:.1f},"
+            f"events_per_s={total_ev / total_s:.1f}"
+        )
+
+    lam_rows = []
+    diverged = []
+    if os.environ.get("REPRO_BENCH_LAMBDA", "1") != "0":
+        lam_nt = int(os.environ.get("REPRO_BENCH_LAMBDA_NT", "64"))
+        lam_reps = int(os.environ.get("REPRO_BENCH_LAMBDA_REPS", "3"))
+        lam_rows = lambda_probe_rows(lam_nt, 8, 24, lam_reps, backends)
+        diverged = [
+            r["backend"] for r in lam_rows
+            if r["decisions_match_numpy"] is False
+        ]
+
+    update_bench_json(
+        "sched_overhead",
+        dict(
+            config=dict(n_gpus=n_gpus, runs=n_runs, nts=nts, backends=backends),
+            calibration_score=round(calibration_score(), 2),
+            whole_sim=rows,
+            lambda_probe=lam_rows,
+        ),
     )
+    if diverged:
+        # decision divergence is a correctness regression, not a perf
+        # number — record it in the JSON above, then fail the run
+        print(
+            f"ERROR: backend(s) {diverged} placed the λ-probe wave "
+            f"differently from numpy — decision identity broken"
+        )
+        sys.exit(1)
     return rows
 
 

@@ -64,6 +64,34 @@ PCIE_BANDWIDTH = 8e9  # bytes/s, asymptotic 16x
 PCIE_LATENCY = 15e-6
 
 
+def scaled_machine(
+    n_gpus: int = 24,
+    n_cpus: int = 8,
+    gpus_per_switch: int = 2,
+) -> MachineModel:
+    """A beyond-paper platform: up to 32 heterogeneous resources.
+
+    Same resource classes and PCIe model as the paper box, but with the
+    counts the original hardware never had (the scheduler-scaling sweeps
+    use 8 CPUs + 24 GPUs = 32 resources on NT=32/64 tile grids). GPUs do
+    not pin compute cores here — ``n_cpus`` is the compute-CPU count — so
+    the resource total is exactly ``n_cpus + n_gpus``.
+    """
+    n_res = n_cpus + n_gpus
+    if not 0 < n_res <= 32:
+        raise ValueError(f"scaled_machine supports 1..32 resources, got {n_res}")
+    return make_machine(
+        n_cpus=n_cpus,
+        n_gpus=n_gpus,
+        cpu_class=CPU_CLASS,
+        gpu_class=GPU_CLASS,
+        pcie_bandwidth=PCIE_BANDWIDTH,
+        pcie_latency=PCIE_LATENCY,
+        gpus_per_switch=gpus_per_switch,
+        gpu_pins_cpu=False,
+    )
+
+
 def paper_machine(n_gpus: int, total_cores: int = TOTAL_CORES) -> MachineModel:
     """The paper machine with ``n_gpus`` GPUs enabled (0..8).
 

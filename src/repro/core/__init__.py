@@ -13,6 +13,7 @@ from .api import (
     run_many,
     run_simulation,
 )
+from .backend import backend_name, get_backend
 from .dada import DADA, DualApprox
 from .dag import Access, DataObject, GraphArrays, Mode, Task, TaskGraph
 from .heft import HEFT
@@ -34,6 +35,6 @@ __all__ = [
     "HEFT", "HOST_MEM", "HistoryPerfModel", "LinkModel", "MachineModel",
     "Mode", "Residency", "Resource", "ResourceClass", "SimResult",
     "Simulator", "Strategy", "Summary", "Task", "TaskGraph", "TransferModel",
-    "WorkSteal", "default_jobs", "get_pool", "make_machine", "make_strategy",
-    "run_many", "run_simulation",
+    "WorkSteal", "backend_name", "default_jobs", "get_backend", "get_pool",
+    "make_machine", "make_strategy", "run_many", "run_simulation",
 ]

@@ -220,6 +220,28 @@ def score_missing_bytes_matrix(
     return out
 
 
+def affinity_csr_source(name: str, arr: GraphArrays):
+    """(indptr, ids, weights, accel_only) backing a resident-weighted score.
+
+    This is the data the accelerated scoring backend folds on-device; the
+    weights are the exact per-access floats the matrix functions above use,
+    so backend scores stay bit-equal. Returns ``None`` for scores outside
+    the resident-weighted family (``missing_bytes`` has its own hop
+    formula) — callers fall back to :func:`affinity_rows`.
+    """
+    if name in ("write_resident", "accel_write"):
+        return (
+            arr.write_indptr, arr.write_ids, arr.write_sizes,
+            name == "accel_write",
+        )
+    if name in ("all_resident", "accel_all"):
+        return (
+            arr.acc_indptr, arr.acc_ids, _all_resident_weights(arr),
+            name == "accel_all",
+        )
+    return None
+
+
 AFFINITY_MATRIX_FUNCTIONS: Dict[str, AffinityMatrixFn] = {
     "write_resident": score_write_resident_matrix,
     "all_resident": score_all_resident_matrix,

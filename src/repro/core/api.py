@@ -10,6 +10,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .backend import backend_name, get_backend
 from .dag import TaskGraph
 from .dada import DADA, DualApprox
 from .heft import HEFT
@@ -18,20 +19,23 @@ from .simulator import SimResult, Simulator, Strategy
 from .worksteal import WorkSteal
 
 
-def make_strategy(name: str, **kwargs) -> Strategy:
+def make_strategy(name: str, backend: Optional[str] = None, **kwargs) -> Strategy:
     """Build a strategy from a short spec.
 
     ``heft`` | ``ws`` | ``dual`` | ``dada`` (kwargs: alpha, use_cp, affinity).
+    ``backend`` selects the placement-scoring backend (``numpy``/``jax``,
+    default from ``REPRO_SCHED_BACKEND``); placements are bit-identical
+    across backends, only the scoring cost changes.
     """
     name = name.lower()
     if name == "heft":
-        return HEFT()
+        return HEFT(backend=backend)
     if name == "ws":
         return WorkSteal()
     if name == "dual":
-        return DualApprox(**kwargs)
+        return DualApprox(backend=backend, **kwargs)
     if name == "dada":
-        return DADA(**kwargs)
+        return DADA(backend=backend, **kwargs)
     raise ValueError(f"unknown strategy {name!r}")
 
 

@@ -1,0 +1,893 @@
+"""Pluggable placement-scoring backends (``REPRO_SCHED_BACKEND=numpy|jax``).
+
+The scheduling strategies (``dada.py``, ``heft.py``) are written against the
+numpy/scalar scoring path; this module adds an optional JAX backend that
+accelerates the two placement hot spots on wide activations:
+
+  * **fused score matrices** — the (ready × resources) duration / transfer /
+    affinity matrices come out of one jitted call over padded CSR slices
+    (reads and writes are padded to static shapes so retraces stay bounded),
+    with the CSR-incidence → transfer-time reduction optionally running
+    through the Pallas kernel in ``repro.kernels.sched_score`` on
+    accelerator platforms;
+  * **batched λ-probe search** — DADA's binary search on the makespan guess
+    λ runs as **one jitted dispatch** (a ``lax.while_loop``, no Python
+    loop): each iteration computes the 2^d−1 midpoints reachable within
+    the next ``d`` bisection steps (a speculative midpoint tree), evaluates
+    the whole λ grid in one vmapped sweep of the feasibility verdict, and
+    walks the tree with the verdicts. The λ trajectory (every probe value,
+    every accept/reject and the final accepted λ) is bit-identical to the
+    Python binary-search loop. On CPU the default depth is 1 (the tree
+    degenerates to plain bisection — speculative probes cost real time on
+    a single core); on gpu/tpu it is 5, where the 31-probe vmap rides the
+    accelerator for free.
+
+Bit-for-bit contract: the backend only ever computes *score values* (which
+are IEEE-f64 op-for-op identical to the numpy path) and *feasibility
+verdicts*; the placement for the accepted λ is always rebuilt by the
+strategy's own Python ``try_build``, so decisions — including tie-breaks —
+cannot drift. ``tests/test_backend.py`` enforces both levels.
+
+The feasibility verdict reproduces ``try_build``'s boolean without its
+early exits (overflow flags are sticky, loads accumulate through the same
+op sequence), which admits structural speedups that keep bit-equal
+results:
+
+  * the **affinity phase decomposes into per-resource chains**: each
+    by-score entry only reads/writes its own resource's load, so the
+    n-entry sequential loop becomes a (max-chain-length × resources) scan
+    — entries of different resources advance in parallel lanes — and the
+    per-task assignment flags come back through one gather;
+  * the flexible phase runs on **split CPU/GPU load lanes** (the paper's
+    Algorithm 2 only ever takes a min over one class at a time), with
+    first-occurrence ``argmin`` preserving the scalar tie-break;
+  * probes that are already infeasible (and the usually-empty dedicated
+    pass) **skip the remaining scans** via ``lax.cond``.
+
+The backend is selected per strategy instance (``DADA(backend="jax")``),
+falling back to the ``REPRO_SCHED_BACKEND`` environment variable and
+defaulting to numpy. JAX is imported lazily; when it is missing the jax
+backend degrades to numpy with a one-time warning so dependency-light
+environments keep working.
+
+Knobs:
+  REPRO_SCHED_BACKEND       numpy (default) | jax
+  REPRO_SCHED_JAX_MIN       ready-set width from which the jax path engages
+                            (default 32; set 1 to force it everywhere)
+  REPRO_SCHED_LAMBDA_DEPTH  speculative bisection depth d (default: 1 on
+                            cpu, 5 on gpu/tpu; 1-8)
+  REPRO_SCHED_PALLAS        auto (default: Pallas on gpu/tpu, XLA fold on
+                            cpu) | 1 (force, interpret-mode on cpu) | 0
+"""
+from __future__ import annotations
+
+import os
+import warnings
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .machine import HOST_MEM
+
+_ENV_BACKEND = "REPRO_SCHED_BACKEND"
+_ENV_JAX_MIN = "REPRO_SCHED_JAX_MIN"
+_ENV_DEPTH = "REPRO_SCHED_LAMBDA_DEPTH"
+_ENV_PALLAS = "REPRO_SCHED_PALLAS"
+
+DEFAULT_JAX_MIN = 32
+
+_TINY = 1e-12  # must match dada._TINY
+
+# scan unrolling amortizes the per-step XLA loop overhead that dominates the
+# sequential phases on CPU; it changes code size only, never op order/results
+_UNROLL = 16
+
+_BACKENDS = ("numpy", "jax")
+
+
+def backend_name(explicit: Optional[str] = None) -> str:
+    """Resolve the backend name: explicit arg > env var > ``numpy``."""
+    name = explicit or os.environ.get(_ENV_BACKEND, "") or "numpy"
+    name = name.lower()
+    if name not in _BACKENDS:
+        raise ValueError(
+            f"unknown scheduling backend {name!r} (choose from {_BACKENDS})"
+        )
+    return name
+
+
+def jax_min_wide() -> int:
+    """Ready-set width from which the jax path engages (env-tunable)."""
+    env = os.environ.get(_ENV_JAX_MIN, "")
+    if env:
+        try:
+            return max(1, int(env))
+        except ValueError:
+            pass
+    return DEFAULT_JAX_MIN
+
+
+_JAX_SINGLETON = None  # None: not built; False: import failed; else instance
+_WARNED_FALLBACK = False
+
+
+def get_backend(explicit: Optional[str] = None):
+    """Return the scoring backend: ``None`` for numpy, else the jax backend.
+
+    The jax backend is a process-wide singleton (its jit caches are the
+    expensive part). A missing/broken jax degrades to numpy with a single
+    warning — tier-1 environments without jax keep working unchanged.
+    """
+    if backend_name(explicit) == "numpy":
+        return None
+    global _JAX_SINGLETON, _WARNED_FALLBACK
+    if _JAX_SINGLETON is False:
+        return None
+    if _JAX_SINGLETON is None:
+        try:
+            _JAX_SINGLETON = JaxScoringBackend()
+        except Exception as exc:  # ImportError or accelerator init failure
+            _JAX_SINGLETON = False
+            if not _WARNED_FALLBACK:
+                _WARNED_FALLBACK = True
+                warnings.warn(
+                    "REPRO_SCHED_BACKEND=jax requested but the jax backend "
+                    f"could not be initialised ({exc!r}); falling back to "
+                    "the numpy scoring path",
+                    RuntimeWarning,
+                    stacklevel=2,
+                )
+            return None
+    return _JAX_SINGLETON
+
+
+def _reset_backend_cache() -> None:
+    """Test hook: forget a failed (or built) singleton."""
+    global _JAX_SINGLETON, _WARNED_FALLBACK
+    _JAX_SINGLETON = None
+    _WARNED_FALLBACK = False
+
+
+def _bucket(n: int, lo: int = 8) -> int:
+    """Next power-of-two ≥ n (≥ lo): bounds distinct jit signatures."""
+    b = lo
+    while b < n:
+        b *= 2
+    return b
+
+
+class ScoringBackendMixin:
+    """Lazy, cached scoring-backend resolution shared by the strategy
+    classes (DADA, HEFT): one place defines the fallback semantics."""
+
+    def _init_backend(self, backend: Optional[str]) -> None:
+        self.backend_name = backend
+        self._backend = None
+        self._backend_resolved = False
+
+    def _scoring_backend(self):
+        if not self._backend_resolved:
+            self._backend = get_backend(self.backend_name)
+            self._backend_resolved = True
+        return self._backend
+
+
+def _x64_scoped(method):
+    """Run a backend method under a temporarily-enabled x64 context so the
+    f64 scoring math never leaks into the process-wide jax config."""
+    import functools
+
+    @functools.wraps(method)
+    def wrapper(self, *args, **kwargs):
+        with self._x64():
+            return method(self, *args, **kwargs)
+
+    return wrapper
+
+
+class JaxScoringBackend:
+    """JAX implementation of the placement-scoring hot paths.
+
+    All public methods take/return host-side numpy/python data (plus opaque
+    device handles threaded between the matrices call and the λ search);
+    device placement, padding to static shapes and jit-cache management are
+    internal. Methods return ``None`` when an activation or machine shape
+    is outside the supported envelope (caller falls back to numpy).
+    """
+
+    name = "jax"
+
+    # compact residency codes (Pallas path) are int32: bit 0 = host,
+    # bit u+1 = unique mem u
+    _MAX_UNIQ_MEMS = 30
+
+    def __init__(self) -> None:
+        import jax  # lazy: numpy-only environments never pay this
+        import jax.numpy as jnp
+
+        # x64 is scoped per backend call (see _x64), never flipped
+        # process-wide: the repo's other jax stacks (models, linalg tiles,
+        # Pallas kernels) must keep their f32 defaults regardless of
+        # whether a scheduling strategy was instantiated first
+        from jax.experimental import enable_x64 as _enable_x64
+
+        with _enable_x64():
+            jnp.asarray(0.0)  # fail fast if the context is unsupported
+
+        self.jax = jax
+        self.jnp = jnp
+        self._x64 = _enable_x64
+        platform = jax.default_backend()
+        default_depth = 1 if platform == "cpu" else 5
+        depth = os.environ.get(_ENV_DEPTH, "")
+        try:
+            self.depth = max(1, min(int(depth), 8)) if depth else default_depth
+        except ValueError:
+            self.depth = default_depth
+        pallas = os.environ.get(_ENV_PALLAS, "auto").lower()
+        if pallas == "1":
+            self.pallas_mode = "interpret" if platform == "cpu" else "native"
+        elif pallas in ("0", "off", "false"):
+            self.pallas_mode = "off"
+        else:  # auto
+            self.pallas_mode = "native" if platform in ("gpu", "tpu") else "off"
+        self._matrix_fns: Dict[tuple, object] = {}
+        self._search_fns: Dict[tuple, object] = {}
+        self._heft_fns: Dict[tuple, object] = {}
+        self._machine_cache: Dict[tuple, dict] = {}
+
+    # ------------------------------------------------------------------
+    @property
+    def min_wide(self) -> int:
+        return jax_min_wide()
+
+    # ------------------------------------------------------------------
+    @_x64_scoped
+    def _machine_arrays(self, resources, transfer_model) -> Optional[dict]:
+        """Activation-invariant per-machine device arrays (cached)."""
+        mems = tuple(r.mem for r in resources)
+        accel = tuple(r.is_accelerator for r in resources)
+        key = (mems, accel, transfer_model.latency, transfer_model.bandwidth)
+        m = self._machine_cache.get(key)
+        if m is not None:
+            return m
+        uniq, col_of, _ = transfer_model.mem_plan(mems)
+        if len(uniq) > self._MAX_UNIQ_MEMS:
+            return None
+        jnp = self.jnp
+        cpu_idx = [j for j, a in enumerate(accel) if not a]
+        gpu_idx = [j for j, a in enumerate(accel) if a]
+        m = dict(
+            uniq=tuple(uniq),
+            col_of=jnp.asarray(col_of, dtype=jnp.int32),
+            # full-mask residency tests shift by mem+1 per unique memory
+            mem_shift=jnp.asarray(
+                [u + 1 for u in uniq], dtype=jnp.int64
+            ),
+            col_bits=jnp.asarray(
+                [1 << (u + 1) for u in range(len(uniq))], dtype=jnp.int32
+            ),
+            host_col=jnp.asarray([mem == HOST_MEM for mem in uniq], dtype=bool),
+            accel_res=jnp.asarray(accel, dtype=bool),
+            cpu_idx=jnp.asarray(cpu_idx, dtype=jnp.int32),
+            gpu_idx=jnp.asarray(gpu_idx, dtype=jnp.int32),
+            n_cpu=len(cpu_idx),
+            n_gpu=len(gpu_idx),
+            latency=transfer_model.latency,
+            bandwidth=transfer_model.bandwidth,
+        )
+        self._machine_cache[key] = m
+        return m
+
+    @staticmethod
+    def _pad_csr(
+        indptr: np.ndarray, values: Sequence[np.ndarray], n_pad: int, r_pad: int
+    ) -> List[np.ndarray]:
+        """Scatter gathered CSR rows into dense (n_pad × r_pad) blocks."""
+        n = len(indptr) - 1
+        counts = indptr[1:] - indptr[:-1]
+        rows = np.repeat(np.arange(n, dtype=np.int64), counts)
+        cols = np.arange(int(indptr[-1]), dtype=np.int64) - np.repeat(
+            indptr[:-1], counts
+        )
+        out = []
+        for v in values:
+            dense = np.zeros((n_pad, r_pad), dtype=v.dtype)
+            dense[rows, cols] = v
+            out.append(dense)
+        return out
+
+    # ------------------------------------------------------------------
+    @_x64_scoped
+    def score_matrices(
+        self,
+        sim,
+        tids: Sequence[int],
+        resources,
+        *,
+        p_cpu: Optional[Sequence[float]] = None,
+        p_gpu: Optional[Sequence[float]] = None,
+        use_cp: bool = False,
+        affinity: Optional[str] = None,
+        x_rows: bool = False,
+    ) -> Optional[dict]:
+        """Fused (ready × resources) scoring matrices.
+
+        Returns ``{"C": list rows|None, "C_np": array|None, "C_dev":
+        device array|None, "X_np": array|None, "X_rowmax": list|None,
+        "S_np": array|None}``: cost ``C`` (duration + predicted transfer)
+        when per-class durations are supplied, transfer times ``X`` when
+        ``use_cp`` (full rows only with ``x_rows=True`` — HEFT needs them;
+        DADA only needs the per-row maxima for its λ upper bound, reduced
+        on-device), affinity scores ``S`` when ``affinity`` names a
+        resident-weighted score. Every entry is bit-equal to the numpy
+        path (same IEEE op order); the device-resident ``C_dev`` (padded
+        to the same bucket the λ search uses) avoids a host round-trip
+        between the two calls. ``None`` means unsupported (caller takes
+        the numpy path).
+        """
+        from .affinity import affinity_csr_source
+
+        mach = self._machine_arrays(resources, sim.transfer_model)
+        if mach is None:
+            return None
+        arr = sim.arrays
+        residency = sim.residency
+        n = len(tids)
+        n_pad = _bucket(n)
+        tids_arr = np.asarray(tids, dtype=np.int64)
+        uniq = mach["uniq"]
+        jnp = self.jnp
+
+        want_x = use_cp
+        aff_src = affinity_csr_source(affinity, arr) if affinity else None
+        want_s = aff_src is not None
+        if not (want_x or want_s or p_cpu is not None):
+            return None
+
+        if want_x:
+            r_indptr, r_ids, r_sizes = arr.gather_csr(
+                tids_arr, arr.read_indptr, arr.read_ids, arr.read_sizes
+            )
+            r_pad = _bucket(int((r_indptr[1:] - r_indptr[:-1]).max(initial=1)), lo=1)
+            r_masks = residency.mask_of_ids(r_ids)
+            read_masks, read_sizes = self._pad_csr(
+                r_indptr, [r_masks, r_sizes], n_pad, r_pad
+            )
+        else:
+            r_pad = 0
+            read_masks = read_sizes = np.zeros((n_pad, 1))
+
+        if want_s:
+            w_indptr_full, w_ids_full, w_weights_full, accel_only = aff_src
+            w_indptr, w_ids, w_weights = arr.gather_csr(
+                tids_arr, w_indptr_full, w_ids_full, w_weights_full
+            )
+            w_pad = _bucket(int((w_indptr[1:] - w_indptr[:-1]).max(initial=1)), lo=1)
+            w_masks = residency.mask_of_ids(w_ids)
+            write_masks, write_weights = self._pad_csr(
+                w_indptr, [w_masks, w_weights.astype(np.float64)], n_pad, w_pad
+            )
+        else:
+            w_pad = 0
+            accel_only = False
+            write_masks = write_weights = np.zeros((n_pad, 1))
+
+        want_c = p_cpu is not None
+        if want_c:
+            pc = np.zeros(n_pad, dtype=np.float64)
+            pg = np.zeros(n_pad, dtype=np.float64)
+            pc[:n] = p_cpu
+            pg[:n] = p_gpu
+        else:
+            pc = pg = np.zeros(n_pad, dtype=np.float64)
+
+        key = (n_pad, r_pad, w_pad, len(uniq), len(resources),
+               want_x, bool(x_rows), want_s, want_c, accel_only)
+        fn = self._matrix_fns.get(key)
+        if fn is None:
+            fn = self._build_matrix_fn(key)
+            self._matrix_fns[key] = fn
+        C, X, X_max, S = fn(
+            jnp.asarray(read_masks), jnp.asarray(read_sizes),
+            jnp.asarray(write_masks), jnp.asarray(write_weights),
+            jnp.asarray(pc), jnp.asarray(pg),
+            mach["mem_shift"], mach["col_bits"], mach["host_col"],
+            mach["col_of"], mach["accel_res"],
+            jnp.float64(mach["latency"]), jnp.float64(mach["bandwidth"]),
+        )
+        out = dict(C=None, C_np=None, C_dev=None, X_np=None,
+                   X_rowmax=None, S_np=None)
+        if want_c:
+            out["C_dev"] = C
+            out["C_np"] = np.asarray(C)[:n]
+            out["C"] = out["C_np"].tolist()
+        if want_x and x_rows:
+            out["X_np"] = np.asarray(X)[:n]
+        if want_x and not x_rows:
+            out["X_rowmax"] = np.asarray(X_max)[:n].tolist()
+        if want_s:
+            out["S_np"] = np.asarray(S)[:n]
+        return out
+
+    def _build_matrix_fn(self, key):
+        (n_pad, r_pad, w_pad, n_u, n_res,
+         want_x, x_rows, want_s, want_c, accel_only) = key
+        jax, jnp = self.jax, self.jnp
+        pallas_mode = self.pallas_mode
+
+        def fn(read_masks, read_sizes, write_masks, write_weights,
+               p_cpu, p_gpu, mem_shift, col_bits, host_col, col_of,
+               accel_res, latency, bandwidth):
+            X_res = None
+            X_max = None
+            if want_x:
+                per_read = jnp.where(
+                    read_sizes <= 0.0, 0.0, latency + read_sizes / bandwidth
+                )
+                if pallas_mode != "off":
+                    from repro.kernels.sched_score import transfer_matrix_pallas
+
+                    compact = _compact_masks_jnp(
+                        jnp, read_masks, mem_shift
+                    )
+                    X_u = transfer_matrix_pallas(
+                        compact, per_read, col_bits, host_col,
+                        interpret=pallas_mode == "interpret",
+                    )
+                else:
+                    # in-order fold over the read axis: bit-equal to the
+                    # reduceat fold of the numpy matrix path (hops come
+                    # straight off the full residency masks; the formula
+                    # lives once, in repro.kernels.sched_score)
+                    from repro.kernels.sched_score import (
+                        transfer_matrix_from_full,
+                    )
+
+                    X_u = transfer_matrix_from_full(
+                        read_masks, per_read, mem_shift, host_col
+                    )
+                X_res = X_u[:, col_of]
+                if not x_rows:
+                    # max is order-independent: equals max(row) on host
+                    X_max = jnp.max(X_res, axis=1)
+            S_res = None
+            if want_s:
+                def wbody(r, acc):
+                    m = write_masks[:, r][:, None]
+                    resident = ((m >> mem_shift[None, :]) & 1) != 0
+                    w = write_weights[:, r][:, None]
+                    return acc + jnp.where(resident, w, 0.0)
+
+                S_u = jax.lax.fori_loop(
+                    0, w_pad, wbody, jnp.zeros((n_pad, n_u), dtype=jnp.float64)
+                )
+                S_res = S_u[:, col_of]
+                if accel_only:
+                    S_res = jnp.where(accel_res[None, :], S_res, 0.0)
+            C = None
+            if want_c:
+                base = jnp.where(
+                    accel_res[None, :], p_gpu[:, None], p_cpu[:, None]
+                )
+                C = base + X_res if want_x else jnp.broadcast_to(
+                    base, (n_pad, n_res)
+                )
+            return C, X_res, X_max, S_res
+
+        return jax.jit(fn)
+
+    # ------------------------------------------------------------------
+    # DADA λ-probe search
+    # ------------------------------------------------------------------
+    @_x64_scoped
+    def dada_lambda_search(
+        self,
+        *,
+        n: int,
+        n_res: int,
+        offsets: Sequence[float],
+        C_dev,
+        p_cpu: Sequence[float],
+        p_gpu: Sequence[float],
+        by_score: Sequence[Tuple[float, int, int, float]],
+        tid_index: Dict[int, int],
+        flex_order,
+        resources,
+        have_both: bool,
+        no_cpus: bool,
+        no_gpus: bool,
+        alpha: float,
+        area_bound: bool,
+        area: float,
+        off_total: float,
+        max_off: float,
+        eps_rel: float,
+        max_iters: int,
+        upper0: float,
+    ) -> float:
+        """Run DADA's binary search on λ entirely on the backend.
+
+        Returns the final ``upper`` — identical (bit-for-bit) to the value
+        the Python loop in ``dada.place`` would settle on, because every
+        probe value and every feasibility verdict is reproduced exactly.
+        The caller then rebuilds the placement at that λ with its own
+        ``try_build``. ``C_dev`` is the device-resident padded cost matrix
+        from :meth:`score_matrices` (same ``_bucket(n)`` padding).
+        """
+        jnp = self.jnp
+        n_pad = _bucket(n)
+        assert C_dev.shape == (n_pad, n_res), (C_dev.shape, n_pad, n_res)
+
+        accel = [r.is_accelerator for r in resources]
+        cpu_idx = np.asarray(
+            [j for j, a in enumerate(accel) if not a], dtype=np.int32
+        )
+        gpu_idx = np.asarray(
+            [j for j, a in enumerate(accel) if a], dtype=np.int32
+        )
+
+        pc = np.zeros(n_pad, dtype=np.float64)
+        pg = np.zeros(n_pad, dtype=np.float64)
+        pc[:n] = p_cpu
+        pg[:n] = p_gpu
+        valid = np.zeros(n_pad, dtype=bool)
+        valid[:n] = True
+        # padded flex_order entries point at row 0; the search masks them
+        # with the position-validity of `valid` (True exactly for k < n)
+        ford = np.zeros(n_pad, dtype=np.int32)
+        ford[:n] = flex_order
+
+        # Affinity phase → per-resource chains: entry k of by_score only
+        # reads/writes loads[rid_k], so entries of different resources are
+        # independent; within one resource the by-score order is preserved
+        # by the stable sort. The scan then runs max-chain-length steps
+        # with one lane per resource instead of len(by_score) steps, and
+        # each task reads its own take-flag back through one gather
+        # (task_slot points at the task's (chain position, rid) cell; the
+        # appended always-False cell absorbs tasks without a preference).
+        m = len(by_score)
+        task_slot = np.full(n_pad, 0, dtype=np.int32)
+        if m:
+            rids = np.fromiter((e[2] for e in by_score), np.int64, m)
+            costs = np.fromiter((e[3] for e in by_score), np.float64, m)
+            tis = np.fromiter(
+                (tid_index[e[1]] for e in by_score), np.int64, m
+            )
+            perm = np.argsort(rids, kind="stable")
+            srid = rids[perm]
+            first = np.searchsorted(srid, srid, side="left")
+            pos = np.arange(m, dtype=np.int64) - first
+            chain_pad = _bucket(int(pos.max()) + 1, lo=1)
+            chain_cost = np.zeros((chain_pad, n_res), dtype=np.float64)
+            chain_valid = np.zeros((chain_pad, n_res), dtype=bool)
+            chain_cost[pos, srid] = costs[perm]
+            chain_valid[pos, srid] = True
+            task_slot[:] = chain_pad * n_res  # the appended False cell
+            task_slot[tis[perm]] = (pos * n_res + srid).astype(np.int32)
+        else:
+            chain_pad = 0
+            chain_cost = np.zeros((1, n_res), dtype=np.float64)
+            chain_valid = np.zeros((1, n_res), dtype=bool)
+
+        key = (n_pad, chain_pad, n_res, len(cpu_idx), len(gpu_idx),
+               bool(have_both), bool(area_bound), self.depth)
+        fn = self._search_fns.get(key)
+        if fn is None:
+            fn = self._build_search_fn(key)
+            self._search_fns[key] = fn
+        upper = fn(
+            jnp.asarray(offsets, dtype=jnp.float64),
+            C_dev,
+            jnp.asarray(pc), jnp.asarray(pg), jnp.asarray(valid),
+            jnp.asarray(ford),
+            jnp.asarray(chain_cost), jnp.asarray(chain_valid),
+            jnp.asarray(task_slot),
+            jnp.asarray(cpu_idx), jnp.asarray(gpu_idx),
+            jnp.bool_(no_cpus), jnp.bool_(no_gpus),
+            jnp.float64(alpha), jnp.float64(2.0 + alpha),
+            jnp.float64(area), jnp.float64(off_total), jnp.float64(max_off),
+            jnp.float64(float(n_res)),
+            jnp.float64(eps_rel), jnp.int32(max_iters), jnp.float64(upper0),
+        )
+        return float(upper)
+
+    def _build_search_fn(self, key):
+        (n_pad, chain_pad, n_res, n_cpu, n_gpu,
+         have_both, area_bound, depth) = key
+        jax, jnp = self.jax, self.jnp
+        lax = jax.lax
+        K = 2 ** depth - 1
+        INF = float("inf")
+
+        def fn(loads0, C, p_cpu, p_gpu, valid, flex_ord,
+               chain_cost, chain_valid, task_slot,
+               cpu_idx, gpu_idx, no_cpus, no_gpus,
+               alpha, two_alpha, area, off_total, max_off, n_res_f,
+               eps_rel, max_iters, upper0):
+            # probe-invariant gathers, done once per search
+            if have_both:
+                C_g = C[:, gpu_idx]
+                C_c = C[:, cpu_idx]
+                Cf_g = C_g[flex_ord]
+                Cf_c = C_c[flex_ord]
+                gpu_mask = jnp.zeros((n_res,), bool).at[gpu_idx].set(True)
+                cpu_mask = ~gpu_mask
+
+            def verdict(lam):
+                """Feasibility of guess λ — the exact boolean dada's
+                ``try_build(lam) is not None`` yields (early-exit order
+                differs, the verdict cannot: overflow flags are sticky and
+                loads accumulate through the same op sequence)."""
+                cap = two_alpha * lam + _TINY
+                bad = max_off > cap
+                if area_bound:
+                    bad = bad | (area > (lam * n_res_f - off_total) + _TINY)
+                loads = loads0
+
+                if chain_pad:
+                    budget = alpha * lam + _TINY
+
+                    def astep(carry, x):
+                        loads, bad = carry
+                        costs, av = x
+                        take = av & (loads <= budget)
+                        v = loads + costs
+                        bad = bad | jnp.any(take & (v > cap))
+                        loads = jnp.where(take, v, loads)
+                        return (loads, bad), take
+
+                    (loads, bad), takes = lax.scan(
+                        astep, (loads, bad), (chain_cost, chain_valid),
+                        unroll=min(_UNROLL, chain_pad),
+                    )
+                    flat = jnp.append(takes.reshape(-1), False)
+                    assigned = flat[task_slot]
+                else:
+                    assigned = jnp.zeros((n_pad,), dtype=bool)
+
+                rem = valid & ~assigned
+                big_cpu = no_cpus | (p_cpu > lam)
+                big_gpu = no_gpus | (p_gpu > lam)
+                bad = bad | jnp.any(rem & big_cpu & big_gpu)
+
+                def balance(args):
+                    loads, bad = args
+                    if have_both:
+                        flex = rem & (p_cpu <= lam) & (p_gpu <= lam)
+                        ded = rem & ~flex
+                        ded_gpu = p_cpu > lam
+                        lanes = jnp.arange(n_res)
+
+                        def dstep(carry, x):
+                            loads, bad = carry
+                            on, to_gpu, crow = x
+                            pool = jnp.where(to_gpu, gpu_mask, cpu_mask)
+                            vm = jnp.where(pool, loads + crow, INF)
+                            # one-hot select: jnp.min equals vm[argmin]
+                            # bitwise, first-occurrence argmin keeps the
+                            # scalar tie-break
+                            hot = lanes == jnp.argmin(vm)
+                            bv = jnp.min(vm)
+                            bad = bad | (on & (bv > cap))
+                            loads = jnp.where(hot & on, bv, loads)
+                            return (loads, bad), None
+
+                        def ded_pass(args):
+                            (loads, bad), _ = lax.scan(
+                                dstep, args, (ded, ded_gpu, C), unroll=_UNROLL
+                            )
+                            return loads, bad
+
+                        # the dedicated pass is usually empty for feasible
+                        # λ guesses — skip its n-step scan when it is
+                        loads, bad = lax.cond(
+                            jnp.any(ded), ded_pass, lambda a: a, (loads, bad)
+                        )
+
+                        # flexible phase on split class lanes: Algorithm 2
+                        # only ever takes the min over one class at a time
+                        loads_g = loads[gpu_idx]
+                        loads_c = loads[cpu_idx]
+                        gpu_budget = lam + _TINY
+                        # `valid` is a position mask (True exactly for
+                        # k < n), so it also masks padded flex positions
+                        flex_o = flex[flex_ord] & valid
+
+                        def fstep(carry, x):
+                            loads_g, loads_c, bad = carry
+                            on, crow_g, crow_c = x
+                            g = jnp.argmin(loads_g)
+                            gl = loads_g[g]
+                            use_gpu = on & (gl <= gpu_budget)
+                            vg = gl + crow_g[g]
+                            bad = bad | (use_gpu & (vg > cap))
+                            loads_g = loads_g.at[g].set(
+                                jnp.where(use_gpu, vg, gl)
+                            )
+                            vm = loads_c + crow_c
+                            j = jnp.argmin(vm)
+                            bv = vm[j]
+                            use_eft = on & ~use_gpu
+                            bad = bad | (use_eft & (bv > cap))
+                            loads_c = loads_c.at[j].set(
+                                jnp.where(use_eft, bv, loads_c[j])
+                            )
+                            return (loads_g, loads_c, bad), None
+
+                        (loads_g, loads_c, bad), _ = lax.scan(
+                            fstep, (loads_g, loads_c, bad),
+                            (flex_o, Cf_g, Cf_c), unroll=_UNROLL,
+                        )
+                        # `loads` is returned un-merged: only `bad` is read
+                        # after the balance phase
+                    else:
+                        # single-class machine: the EFT pool is every
+                        # resource, processed in index order
+                        def sstep(carry, x):
+                            loads, bad = carry
+                            on, crow = x
+                            vm = loads + crow
+                            j = jnp.argmin(vm)
+                            bv = vm[j]
+                            bad = bad | (on & (bv > cap))
+                            loads = loads.at[j].set(
+                                jnp.where(on, bv, loads[j])
+                            )
+                            return (loads, bad), None
+
+                        (loads, bad), _ = lax.scan(
+                            sstep, (loads, bad), (rem, C), unroll=_UNROLL
+                        )
+                    return loads, bad
+
+                # a probe that already failed skips the balance scans
+                loads, bad = lax.cond(
+                    bad, lambda a: a, balance, (loads, bad)
+                )
+                return bad
+
+            feasible_grid = jax.vmap(lambda lam: ~verdict(lam))
+
+            def cond(state):
+                lower, upper, it = state
+                return (upper - lower > eps_rel * upper) & (it < max_iters)
+
+            def body(state):
+                lower, upper, it = state
+                # speculative midpoint tree (heap layout): node k covers an
+                # interval; its midpoint is the probe the bisection would
+                # make on reaching it. Depth-d tree = the next d probes for
+                # every possible verdict path — all evaluated in one
+                # vmapped sweep of the λ grid.
+                lo = [None] * K
+                hi = [None] * K
+                mid = [None] * K
+                lo[0], hi[0] = lower, upper
+                for k in range(K):
+                    mid[k] = (lo[k] + hi[k]) / 2.0
+                    if 2 * k + 2 < K:
+                        lo[2 * k + 1], hi[2 * k + 1] = lo[k], mid[k]
+                        lo[2 * k + 2], hi[2 * k + 2] = mid[k], hi[k]
+                mids = jnp.stack(mid)
+                if K == 1:
+                    # no vmap at depth 1: gathers/updates inside the
+                    # verdict stay scalar-indexed (cheap on CPU) instead
+                    # of turning into batched scatters
+                    feas = jnp.reshape(~verdict(mids[0]), (1,))
+                else:
+                    feas = feasible_grid(mids)
+                # walk ≤ depth bisection steps, re-checking the stopping
+                # rule before each (exactly like the Python while loop)
+                idx = jnp.int32(0)
+                for _ in range(depth):
+                    go = (upper - lower > eps_rel * upper) & (it < max_iters)
+                    safe = jnp.minimum(idx, K - 1)
+                    f = feas[safe]
+                    lam = mids[safe]
+                    lower = jnp.where(go & ~f, lam, lower)
+                    upper = jnp.where(go & f, lam, upper)
+                    it = it + go.astype(jnp.int32)
+                    idx = jnp.where(go, 2 * idx + jnp.where(f, 1, 2), idx)
+                return lower, upper, it
+
+            _, upper, _ = lax.while_loop(
+                cond, body, (jnp.float64(0.0), upper0, jnp.int32(0))
+            )
+            return upper
+
+        return jax.jit(fn)
+
+    # ------------------------------------------------------------------
+    # HEFT earliest-finish-time selection
+    # ------------------------------------------------------------------
+    @_x64_scoped
+    def heft_select(
+        self,
+        D_ord: np.ndarray,
+        X_ord: np.ndarray,
+        load_ts: Sequence[float],
+        now: float,
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Sequential EFT worker selection over tasks in priority order.
+
+        ``D_ord``/``X_ord`` are (n × n_res) duration / transfer rows already
+        gathered in priority order. Returns (chosen rid, eft) per task —
+        the same values (1e-15 strict-improvement tie-break included) the
+        scalar loop in ``heft.place`` computes.
+        """
+        jnp = self.jnp
+        n, n_res = D_ord.shape
+        n_pad = _bucket(n)
+        D = np.zeros((n_pad, n_res), dtype=np.float64)
+        X = np.zeros((n_pad, n_res), dtype=np.float64)
+        valid = np.zeros(n_pad, dtype=bool)
+        D[:n] = D_ord
+        X[:n] = X_ord
+        valid[:n] = True
+        key = (n_pad, n_res)
+        fn = self._heft_fns.get(key)
+        if fn is None:
+            fn = self._build_heft_fn(key)
+            self._heft_fns[key] = fn
+        rids, efts = fn(
+            jnp.asarray(D), jnp.asarray(X), jnp.asarray(valid),
+            jnp.asarray(load_ts, dtype=jnp.float64), jnp.float64(now),
+        )
+        return np.asarray(rids)[:n], np.asarray(efts)[:n]
+
+    def _build_heft_fn(self, key):
+        n_pad, n_res = key
+        jax, jnp = self.jax, self.jnp
+        INF = float("inf")
+
+        def fn(D, X, valid, load_ts, now):
+            def step(lts, x):
+                drow, xrow, on = x
+                start = jnp.where(now > lts, now, lts)
+                eft = (start + xrow) + drow
+                # the 1e-15 strict-improvement rule is a left fold over the
+                # resource lanes; n_res is small and static, so unroll it
+                # into scalar selects (no fori machinery per task)
+                if n_res <= 64:
+                    bv = jnp.float64(INF)
+                    bj = jnp.int32(0)
+                    for r in range(n_res):
+                        e = eft[r]
+                        upd = e < bv - 1e-15
+                        bv = jnp.where(upd, e, bv)
+                        bj = jnp.where(upd, jnp.int32(r), bj)
+                else:
+                    def rstep(r, st):
+                        bv, bj = st
+                        e = eft[r]
+                        upd = e < bv - 1e-15
+                        return (
+                            jnp.where(upd, e, bv),
+                            jnp.where(upd, r, bj),
+                        )
+
+                    bv, bj = jax.lax.fori_loop(
+                        0, n_res, rstep, (jnp.float64(INF), jnp.int32(0))
+                    )
+                lts = lts.at[bj].set(jnp.where(on, bv, lts[bj]))
+                return lts, (bj, bv)
+
+            _, (rids, efts) = jax.lax.scan(
+                step, load_ts, (D, X, valid), unroll=_UNROLL
+            )
+            return rids, efts
+
+        return jax.jit(fn)
+
+
+def _compact_masks_jnp(jnp, full_masks, mem_shift):
+    """int32 residency codes from full int64 masks (Pallas-kernel input):
+    bit 0 = host copy, bit u+1 = a valid copy at unique memory u."""
+    out = (full_masks & 1).astype(jnp.int32)
+    n_u = mem_shift.shape[0]
+    for u in range(n_u):
+        out = out | (
+            ((full_masks >> mem_shift[u]) & 1).astype(jnp.int32) << (u + 1)
+        )
+    return out

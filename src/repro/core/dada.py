@@ -31,6 +31,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from .affinity import AFFINITY_FUNCTIONS, AffinityFn, affinity_rows
+from .backend import ScoringBackendMixin
 from .dag import Task
 from .simulator import Simulator, Strategy
 
@@ -38,7 +39,7 @@ _TINY = 1e-12
 _WIDE = 32  # ready-set size from which the batched numpy path wins
 
 
-class DADA(Strategy):
+class DADA(ScoringBackendMixin, Strategy):
     allow_steal = False
     owner_lifo = False
 
@@ -50,13 +51,19 @@ class DADA(Strategy):
         eps_rel: float = 0.01,
         max_iters: int = 30,
         area_bound: bool = False,
+        backend: Optional[str] = None,
     ) -> None:
         """``area_bound``: also reject a guess λ when the total work area
         exceeds λ x (number of resources) — a valid no-schedule certificate
         that keeps λ (and hence the affinity budget α·λ) near the true
         optimum instead of descending to OPT/(2+α). Off by default (the
         paper's Algorithm 2 rejects only on the big-task criterion); the
-        expert-placement bridge turns it on."""
+        expert-placement bridge turns it on.
+
+        ``backend``: placement-scoring backend (``numpy``/``jax``); default
+        follows ``REPRO_SCHED_BACKEND``. The jax backend batches the score
+        matrices and the λ-probe search on wide activations; placements are
+        bit-identical either way (see ``repro.core.backend``)."""
         if not 0.0 <= alpha <= 1.0:
             raise ValueError("alpha must be within [0, 1]")
         self.alpha = alpha
@@ -66,6 +73,7 @@ class DADA(Strategy):
         self.eps_rel = eps_rel
         self.max_iters = max_iters
         self.area_bound = area_bound
+        self._init_backend(backend)
         cp = "+cp" if use_cp else ""
         self.name = f"dada({alpha:g}){cp}"
 
@@ -91,7 +99,24 @@ class DADA(Strategy):
             p_cpu = sim.predictor(cpu_cls).times_list(tids)
             p_gpu = sim.predictor(gpu_cls).times_list(tids)
 
-        if self.use_cp:
+        # accelerated fused scoring (wide activations, jax backend): C, X
+        # and the affinity matrix come out of one jitted dispatch, bit-equal
+        # to the numpy formulas below
+        be = self._scoring_backend()
+        fused = None
+        if be is not None and n >= be.min_wide:
+            fused = be.score_matrices(
+                sim, tids, resources,
+                p_cpu=p_cpu, p_gpu=p_gpu,
+                use_cp=self.use_cp,
+                affinity=self.affinity_name if self.alpha > 0.0 else None,
+            )
+        use_backend_search = fused is not None
+
+        if fused is not None:
+            X = None  # worst-case transfer bound: fused["X_rowmax"] below
+            C_rows = fused["C"]
+        elif self.use_cp:
             X = sim.transfer_model.task_input_transfer_rows(
                 sim.arrays, tids, [r.mem for r in resources], sim.residency
             )
@@ -99,21 +124,22 @@ class DADA(Strategy):
             X = None
 
         # cost matrix C[i][rid] = duration-on-class + predicted transfer
-        gpu_pos = [j for j, r in enumerate(resources) if r.is_accelerator]
-        if X is None:
-            C_rows = []
-            for pc, pg in zip(p_cpu, p_gpu):
-                row = [pc] * n_res
-                for j in gpu_pos:
-                    row[j] = pg
-                C_rows.append(row)
-        else:
-            C_rows = []
-            for pc, pg, xrow in zip(p_cpu, p_gpu, X):
-                row = [pc + x for x in xrow]
-                for j in gpu_pos:
-                    row[j] = pg + xrow[j]
-                C_rows.append(row)
+        if fused is None:
+            gpu_pos = [j for j, r in enumerate(resources) if r.is_accelerator]
+            if X is None:
+                C_rows = []
+                for pc, pg in zip(p_cpu, p_gpu):
+                    row = [pc] * n_res
+                    for j in gpu_pos:
+                        row[j] = pg
+                    C_rows.append(row)
+            else:
+                C_rows = []
+                for pc, pg, xrow in zip(p_cpu, p_gpu, X):
+                    row = [pc + x for x in xrow]
+                    for j in gpu_pos:
+                        row[j] = pg + xrow[j]
+                    C_rows.append(row)
         offsets = [
             lt - sim.now if lt - sim.now > 0.0 else 0.0
             for lt in (sim.load_ts[r.rid] for r in resources)
@@ -121,22 +147,56 @@ class DADA(Strategy):
 
         # affinity preferences per task, with the placement cost prefetched
         pref: List[Tuple[float, int, int, float]] = []  # (score, tid, rid, cost)
-        if self.alpha > 0.0:
-            S_rows = affinity_rows(
-                self.affinity_name, sim.arrays, tids, ready, resources,
-                sim.residency,
-            )
-            for i, row in enumerate(S_rows):
-                if not any(row):
-                    continue  # all-zero (or C-level falsy) row: no preference
-                best_score, best_rid = 0.0, -1
-                for rid in range(n_res):
-                    s = row[rid]
-                    if s > best_score + _TINY:
-                        best_score, best_rid = s, rid
-                if best_rid >= 0:
-                    pref.append((best_score, tids[i], best_rid, C_rows[i][best_rid]))
-        by_score = sorted(pref, key=lambda x: (-x[0], x[1]))
+        S_np = fused["S_np"] if fused is not None else None
+        if self.alpha > 0.0 and S_np is not None:
+            # vectorized best-resource selection: one pass per resource
+            # column reproduces the scalar rid-ascending tolerance scan
+            # row-by-row, and the (-score, tid) lexsort matches sorted()
+            # because tids are unique
+            best = np.zeros(n, dtype=np.float64)
+            best_rid = np.full(n, -1, dtype=np.int64)
+            for rid in range(n_res):
+                col = S_np[:, rid]
+                upd = col > best + _TINY
+                if upd.any():
+                    best[upd] = col[upd]
+                    best_rid[upd] = rid
+            sel = np.nonzero(best_rid >= 0)[0]
+            if len(sel):
+                scores = best[sel]
+                prids = best_rid[sel]
+                ptids = np.asarray(tids, dtype=np.int64)[sel]
+                pcosts = fused["C_np"][sel, prids]
+                order_p = np.lexsort((ptids, -scores))
+                by_score = list(
+                    zip(
+                        scores[order_p].tolist(),
+                        ptids[order_p].tolist(),
+                        prids[order_p].tolist(),
+                        pcosts[order_p].tolist(),
+                    )
+                )
+            else:
+                by_score = []
+        else:
+            if self.alpha > 0.0:
+                S_rows = affinity_rows(
+                    self.affinity_name, sim.arrays, tids, ready, resources,
+                    sim.residency,
+                )
+                for i, row in enumerate(S_rows):
+                    if not any(row):
+                        continue  # all-zero (C-level falsy) row: no preference
+                    best_score, best_rid = 0.0, -1
+                    for rid in range(n_res):
+                        s = row[rid]
+                        if s > best_score + _TINY:
+                            best_score, best_rid = s, rid
+                    if best_rid >= 0:
+                        pref.append(
+                            (best_score, tids[i], best_rid, C_rows[i][best_rid])
+                        )
+            by_score = sorted(pref, key=lambda x: (-x[0], x[1]))
 
         # speedup sort keys for the flexible phase (λ-independent)
         skey = [-(pc / max(pg, _TINY)) for pc, pg in zip(p_cpu, p_gpu)]
@@ -154,8 +214,15 @@ class DADA(Strategy):
 
         all_idx = list(range(n))
         # global flex order (λ-independent): per-probe flex sets are subsets
-        # of ready, so filtering this order equals sorting each subset
-        flex_order = sorted(all_idx, key=lambda i: (skey[i], tids[i]))
+        # of ready, so filtering this order equals sorting each subset.
+        # (skey, tid) keys are unique per task (tids are unique), so the
+        # wide-activation lexsort yields the identical permutation.
+        if n >= _WIDE:
+            flex_order = np.lexsort(
+                (np.asarray(tids, dtype=np.int64), np.asarray(skey))
+            ).tolist()
+        else:
+            flex_order = sorted(all_idx, key=lambda i: (skey[i], tids[i]))
         alpha = self.alpha
         two_alpha = 2.0 + alpha
         area_bound = self.area_bound
@@ -279,7 +346,12 @@ class DADA(Strategy):
         # ------------------------------------------------------------------
         # binary search on λ (classical dual-approximation driver)
         worst_xfer = 0.0
-        if X is not None:
+        if fused is not None and fused["X_rowmax"] is not None:
+            # device-reduced per-row maxima equal max(xrow) (max is
+            # order-independent); the host fold order is unchanged
+            for v in fused["X_rowmax"]:
+                worst_xfer += v
+        elif X is not None:
             for xrow in X:
                 worst_xfer += max(xrow)
         upper = (
@@ -290,19 +362,56 @@ class DADA(Strategy):
         )
         lower = 0.0
         kept: Optional[Tuple[Dict[int, int], List[float]]] = None
-        it = 0
-        while upper - lower > self.eps_rel * upper and it < self.max_iters:
-            lam = (upper + lower) / 2.0
-            built = try_build(lam)
+        searched = False
+        if use_backend_search:
+            # the whole λ binary search runs as one backend dispatch; the
+            # returned λ is bit-identical to the Python loop's final
+            # upper, and the placement is rebuilt by try_build so decisions
+            # (including tie-breaks) cannot drift
+            lam_final = be.dada_lambda_search(
+                n=n,
+                n_res=n_res,
+                offsets=offsets,
+                C_dev=fused["C_dev"],
+                p_cpu=p_cpu,
+                p_gpu=p_gpu,
+                by_score=by_score,
+                tid_index={tid: i for i, tid in enumerate(tids)},
+                flex_order=flex_order,
+                resources=resources,
+                have_both=have_both,
+                no_cpus=no_cpus,
+                no_gpus=no_gpus,
+                alpha=alpha,
+                area_bound=area_bound,
+                area=(area if area_bound else 0.0),
+                off_total=(off_total if area_bound else 0.0),
+                max_off=max_off,
+                eps_rel=self.eps_rel,
+                max_iters=self.max_iters,
+                upper0=upper,
+            )
+            built = try_build(lam_final)
             if built is not None:
-                upper = lam
+                upper = lam_final
                 kept = built
-            else:
-                lower = lam
-            it += 1
-        if kept is None:
-            kept = try_build(upper)
-            assert kept is not None, "λ=upper must always be feasible"
+                searched = True
+            # else: defensive — a divergent verdict would leave an
+            # infeasible λ; fall back to the Python search below
+        if not searched:
+            it = 0
+            while upper - lower > self.eps_rel * upper and it < self.max_iters:
+                lam = (upper + lower) / 2.0
+                built = try_build(lam)
+                if built is not None:
+                    upper = lam
+                    kept = built
+                else:
+                    lower = lam
+                it += 1
+            if kept is None:
+                kept = try_build(upper)
+                assert kept is not None, "λ=upper must always be feasible"
 
         assign, loads = kept
         # expose the accepted guess for tests / introspection

@@ -24,16 +24,26 @@ from typing import List, Optional
 
 import numpy as np
 
+from .backend import ScoringBackendMixin
 from .dag import Task
 from .simulator import Simulator, Strategy
 
 _WIDE = 32  # ready-set size from which the batched numpy path wins
 
 
-class HEFT(Strategy):
+class HEFT(ScoringBackendMixin, Strategy):
     name = "heft"
     allow_steal = False
     owner_lifo = False
+
+    def __init__(self, backend: Optional[str] = None) -> None:
+        """``backend``: placement-scoring backend (``numpy``/``jax``);
+        default follows ``REPRO_SCHED_BACKEND``. The jax backend computes
+        the transfer matrix in one fused dispatch and runs the sequential
+        EFT selection as a jitted scan on wide activations — placements
+        (including the 1e-15 strict-improvement tie-break) are
+        bit-identical to the scalar loop."""
+        self._init_backend(backend)
 
     def place(self, sim: Simulator, ready: List[Task], src: Optional[int]) -> None:
         machine = sim.machine
@@ -70,6 +80,26 @@ class HEFT(Strategy):
                 col = sim.predictor(r.cls).times_list(tids)
                 cls_times[r.cls.name] = col
             cols.append(col)
+
+        # accelerated path (wide activations, jax backend): fused transfer
+        # matrix + jitted sequential EFT scan, bit-identical placements
+        be = self._scoring_backend()
+        if be is not None and n >= be.min_wide:
+            fused = be.score_matrices(
+                sim, tids, resources, use_cp=True, x_rows=True
+            )
+            if fused is not None:
+                load_ts = sim.load_ts
+                colsT = np.asarray(cols, dtype=np.float64).T  # (n, n_res)
+                X_np = fused["X_np"]
+                rids, efts = be.heft_select(
+                    colsT[order], X_np[order], load_ts, sim.now
+                )
+                for k, i in enumerate(order):
+                    rid = int(rids[k])
+                    load_ts[rid] = float(efts[k])
+                    sim.push(ready[i], rid)
+                return
 
         X = sim.transfer_model.task_input_transfer_rows(
             sim.arrays, tids, [r.mem for r in resources], sim.residency

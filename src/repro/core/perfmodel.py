@@ -168,6 +168,25 @@ class TransferModel:
             return 0.0
         return self.latency + nbytes / self.bandwidth
 
+    def mem_plan(self, mems: tuple) -> tuple:
+        """Decompose a resource→memory list into (unique mems, column-of,
+        already-unique flag). Memoized; shared by the numpy matrix path and
+        the jax scoring backend so both see the identical column layout."""
+        cached = self._mem_plans.get(mems)
+        if cached is None:
+            uniq: List[int] = []
+            col_of: List[int] = []
+            seen: Dict[int, int] = {}
+            for mem in mems:
+                j = seen.get(mem)
+                if j is None:
+                    j = seen[mem] = len(uniq)
+                    uniq.append(mem)
+                col_of.append(j)
+            cached = (uniq, col_of, len(uniq) == len(mems))
+            self._mem_plans[mems] = cached
+        return cached
+
     def task_input_transfer_time(
         self,
         task: Task,
@@ -201,21 +220,7 @@ class TransferModel:
         """
         # resources sharing a memory space (all CPUs see host memory) share
         # a column: compute per unique memory, then expand
-        mem_key = tuple(mems)
-        cached = self._mem_plans.get(mem_key)
-        if cached is None:
-            uniq: List[int] = []
-            col_of: List[int] = []
-            seen: Dict[int, int] = {}
-            for mem in mems:
-                j = seen.get(mem)
-                if j is None:
-                    j = seen[mem] = len(uniq)
-                    uniq.append(mem)
-                col_of.append(j)
-            cached = (uniq, col_of, len(uniq) == len(mems))
-            self._mem_plans[mem_key] = cached
-        uniq, col_of, full = cached
+        uniq, col_of, full = self.mem_plan(tuple(mems))
 
         n = len(tids)
         if n >= 32:

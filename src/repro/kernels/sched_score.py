@@ -1,0 +1,155 @@
+"""Pallas kernel: CSR read-incidence → predicted transfer-time reduction.
+
+This is the scoring hot spot of the ``use_cp`` scheduling strategies: for
+every (ready task i, memory space u) pair, sum the per-read transfer times
+of the reads that are *not* resident at u —
+
+    X[i, u] = Σ_r  hops(mask[i, r], u) * per_read[i, r]
+
+where ``mask`` holds compact residency codes (bit 0 = a host copy exists,
+bit u+1 = a valid copy at unique memory u) and ``hops`` is the paper-era
+PCIe path length: 0 if resident (or the data exists nowhere yet), 1 for
+host→device / anything→host, 2 for device→host→device.
+
+Layout mirrors ``tile_gemm``: the grid tiles the task axis, each program
+reduces its (bt × r_pad) read block into a (bt × n_u) output block. The
+reduction is an **in-order fori fold over the read axis**, so every output
+entry is bit-equal to the scalar reference in ``repro.core._reference``
+(padded reads carry mask 0 → hops 0 → exact +0.0). ``transfer_matrix_jnp``
+is the XLA fallback with the identical fold — the CPU path of the jax
+scheduling backend, and the reference the Pallas kernel is tested against
+(interpret mode on CPU).
+
+TPU note: f64 is unsupported on real TPUs; deploying there means f32
+scores, which relaxes the bit-for-bit guarantee to decision-equality (the
+backend keeps the numpy path authoritative for the final build either way).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hop_fold(masks, per_read, resident_of, host_col, n_u):
+    """Shared in-order read fold: the single home of the hop formula.
+
+    ``resident_of(r)`` returns the (n_pad, n_u) residency booleans of read
+    column r; everything else (host short-circuit, 2-hop device→device,
+    nowhere-yet data) is identical for the compact- and full-mask callers,
+    so the bit-for-bit-critical arithmetic lives exactly once.
+    """
+    on_host = (masks & 1) != 0
+    nowhere = masks == 0
+    n_pad = masks.shape[0]
+
+    def body(r, acc):
+        skip = resident_of(r) | nowhere[:, r][:, None]
+        hops = jnp.where(
+            skip,
+            0.0,
+            jnp.where(
+                host_col[None, :],
+                1.0,
+                jnp.where(on_host[:, r][:, None], 1.0, 2.0),
+            ),
+        )
+        return acc + hops * per_read[:, r][:, None]
+
+    return jax.lax.fori_loop(
+        0, masks.shape[1], body, jnp.zeros((n_pad, n_u), dtype=per_read.dtype)
+    )
+
+
+def transfer_matrix_jnp(
+    masks: jax.Array,  # (n_pad, r_pad) int32 compact residency codes
+    per_read: jax.Array,  # (n_pad, r_pad) per-read transfer times
+    col_bits: jax.Array,  # (n_u,) int32, bit u+1 set
+    host_col: jax.Array,  # (n_u,) bool, True where unique mem u is the host
+) -> jax.Array:
+    """XLA reference over compact codes: (n_pad × n_u) transfer times."""
+    return _hop_fold(
+        masks, per_read,
+        lambda r: (masks[:, r][:, None] & col_bits[None, :]) != 0,
+        host_col, col_bits.shape[0],
+    )
+
+
+def transfer_matrix_from_full(
+    masks: jax.Array,  # (n_pad, r_pad) int64 full residency masks
+    per_read: jax.Array,  # (n_pad, r_pad) per-read transfer times
+    mem_shift: jax.Array,  # (n_u,) int64, mem+1 shift per unique memory
+    host_col: jax.Array,  # (n_u,) bool, True where unique mem u is the host
+) -> jax.Array:
+    """Same fold straight off the full int64 residency masks — the CPU
+    path of the jax scheduling backend (no compact remap needed)."""
+    return _hop_fold(
+        masks, per_read,
+        lambda r: ((masks[:, r][:, None] >> mem_shift[None, :]) & 1) != 0,
+        host_col, mem_shift.shape[0],
+    )
+
+
+def _xfer_kernel(masks_ref, pr_ref, bits_ref, host_ref, out_ref, *, r_pad):
+    masks = masks_ref[...]  # (bt, r_pad)
+    pr = pr_ref[...]
+    bits = bits_ref[...]  # (1, n_u)
+    hostc = host_ref[...] != 0  # (1, n_u)
+    on_host = (masks & 1) != 0
+    nowhere = masks == 0
+    bt, n_u = out_ref.shape
+
+    def body(r, acc):
+        m = jax.lax.dynamic_slice_in_dim(masks, r, 1, axis=1)  # (bt, 1)
+        resident = (m & bits) != 0  # (bt, n_u)
+        skip = resident | jax.lax.dynamic_slice_in_dim(nowhere, r, 1, axis=1)
+        oh = jax.lax.dynamic_slice_in_dim(on_host, r, 1, axis=1)
+        hops = jnp.where(
+            skip, 0.0, jnp.where(hostc, 1.0, jnp.where(oh, 1.0, 2.0))
+        ).astype(pr.dtype)
+        prr = jax.lax.dynamic_slice_in_dim(pr, r, 1, axis=1)
+        return acc + hops * prr
+
+    out_ref[...] = jax.lax.fori_loop(
+        0, r_pad, body, jnp.zeros((bt, n_u), dtype=pr.dtype)
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "interpret"))
+def transfer_matrix_pallas(
+    masks: jax.Array,
+    per_read: jax.Array,
+    col_bits: jax.Array,
+    host_col: jax.Array,
+    *,
+    bt: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Pallas version of :func:`transfer_matrix_jnp` (same fold order).
+
+    ``bt`` tiles the task axis; reads and memory columns stay whole per
+    program (r_pad and n_u are small — a handful of reads per task, ≤ ~32
+    memory spaces). ``interpret=True`` runs on CPU for testing.
+    """
+    n_pad, r_pad = masks.shape
+    n_u = col_bits.shape[0]
+    bt = min(bt, n_pad)
+    assert n_pad % bt == 0, (n_pad, bt)
+    grid = (n_pad // bt,)
+    bits2 = col_bits.reshape(1, n_u)
+    host2 = host_col.astype(jnp.int32).reshape(1, n_u)
+    return pl.pallas_call(
+        functools.partial(_xfer_kernel, r_pad=r_pad),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, r_pad), lambda i: (i, 0)),  # masks
+            pl.BlockSpec((bt, r_pad), lambda i: (i, 0)),  # per-read times
+            pl.BlockSpec((1, n_u), lambda i: (0, 0)),  # column bits
+            pl.BlockSpec((1, n_u), lambda i: (0, 0)),  # host-column flags
+        ],
+        out_specs=pl.BlockSpec((bt, n_u), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, n_u), per_read.dtype),
+        interpret=interpret,
+    )(masks, per_read, bits2, host2)

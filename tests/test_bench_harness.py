@@ -43,17 +43,75 @@ def test_run_many_falls_back_on_unpicklable_factories():
     assert local["n"] >= 1  # ran in-process
 
 
-def test_sched_overhead_reports_events_per_sec(capsys, monkeypatch):
+def test_sched_overhead_reports_events_per_sec(capsys, monkeypatch, tmp_path):
+    import json
     import sys
     from pathlib import Path
 
     sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
     monkeypatch.setenv("REPRO_BENCH_GPUS", "2")
     monkeypatch.setenv("REPRO_BENCH_RUNS", "1")
+    monkeypatch.setenv("REPRO_BENCH_LAMBDA", "0")  # skip the NT=64 micro
+    monkeypatch.setenv("REPRO_SCHED_BACKENDS", "numpy")
+    import benchmarks.common as common
     import benchmarks.sched_overhead as so
 
+    out_json = tmp_path / "BENCH_sched.json"
+    monkeypatch.setattr(common, "BENCH_JSON", out_json)
     rows = so.main()
     out = capsys.readouterr().out
     assert "events_per_s=" in out
     assert all(r["events"] > 0 for r in rows)
     assert {r["kernel"] for r in rows} == {"cholesky", "lu", "qr"}
+    # backend-free ws is measured once under the stable "none" label
+    assert {r["backend"] for r in rows} == {"numpy", "none"}
+    assert all(
+        r["backend"] == "none" for r in rows if r["strategy"] == "ws"
+    )
+    # machine-readable perf trajectory (BENCH_sched.json satellite)
+    doc = json.loads(out_json.read_text())
+    sec = doc["sched_overhead"]
+    assert sec["calibration_score"] > 0
+    assert len(sec["whole_sim"]) == len(rows)
+    assert {"kernel", "strategy", "backend", "nt", "events_per_s",
+            "wall_s"} <= set(sec["whole_sim"][0])
+
+
+def test_sched_regression_gate(monkeypatch, tmp_path, capsys):
+    """The CI gate fails on a >25% events/sec drop after machine-speed
+    calibration, and passes when throughput merely tracks machine speed."""
+    import json
+    import sys
+    from pathlib import Path
+
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+    import benchmarks.check_sched_regression as gate
+
+    def write(path, cal, evs):
+        path.write_text(json.dumps({
+            "sched_overhead": {
+                "calibration_score": cal,
+                "whole_sim": [{
+                    "kernel": "cholesky", "strategy": "heft",
+                    "backend": "numpy", "nt": 16, "n_gpus": 8,
+                    "events_per_s": evs,
+                }],
+            }
+        }))
+
+    cur = tmp_path / "cur.json"
+    base = tmp_path / "base.json"
+    monkeypatch.setattr(gate, "CURRENT", cur)
+    monkeypatch.setattr(gate, "BASELINE", base)
+
+    # a slower machine (half calibration) with proportional events/sec: OK
+    write(base, 1000.0, 50000.0)
+    write(cur, 500.0, 25500.0)
+    assert gate.main() == 0
+    # a >25% real regression on the same machine: FAIL
+    write(cur, 1000.0, 36000.0)
+    assert gate.main() == 1
+    # missing baseline: skipped, not failed
+    base.unlink()
+    assert gate.main() == 0
+    capsys.readouterr()

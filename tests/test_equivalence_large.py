@@ -1,0 +1,96 @@
+"""Large-graph equivalence: NT=32/64 tile grids on the 32-resource scaled
+machine — the regime the jax scoring backend exists for. Asserts
+numpy-vs-reference and jax-vs-numpy decision identity (satellite of the
+backend tentpole; the paper-size equivalence suite lives in
+test_equivalence.py / test_backend.py)."""
+import pytest
+
+from repro.configs.paper_machine import scaled_machine
+from repro.core import DADA, HEFT, run_simulation
+from repro.core._reference import ReferenceDADA, ReferenceHEFT
+from repro.linalg.cholesky import cholesky_graph
+from repro.linalg.lu import lu_graph
+from repro.linalg.qr import qr_graph
+
+KERNELS = {
+    "cholesky": cholesky_graph,
+    "lu": lu_graph,
+    "qr": qr_graph,
+}
+
+MACHINE = scaled_machine(n_gpus=24, n_cpus=8)  # 32 resources
+assert len(MACHINE.resources) == 32
+
+
+def _fingerprint(res):
+    return (
+        res.makespan,
+        res.total_bytes,
+        res.n_transfers,
+        tuple(sorted(res.busy.items())),
+        tuple((iv.tid, iv.rid, iv.start, iv.end) for iv in res.intervals),
+    )
+
+
+# ---------------------------------------------------------------------------
+# numpy vs frozen scalar reference at NT=32 (the reference is O(n·m·probes)
+# scalar Python — NT=32 keeps it inside test-suite budgets)
+
+
+@pytest.mark.parametrize("kernel", sorted(KERNELS))
+def test_numpy_matches_reference_nt32_32res(kernel):
+    graph = KERNELS[kernel](32, 512, with_fns=False)
+    a = run_simulation(graph, MACHINE, DADA(alpha=0.5, use_cp=True), seed=1)
+    b = run_simulation(
+        graph, MACHINE, ReferenceDADA(alpha=0.5, use_cp=True), seed=1
+    )
+    assert _fingerprint(a) == _fingerprint(b)
+
+
+def test_numpy_heft_matches_reference_nt32_32res():
+    graph = cholesky_graph(32, 512, with_fns=False)
+    a = run_simulation(graph, MACHINE, HEFT(), seed=1)
+    b = run_simulation(graph, MACHINE, ReferenceHEFT(), seed=1)
+    assert _fingerprint(a) == _fingerprint(b)
+
+
+# ---------------------------------------------------------------------------
+# jax vs numpy at NT=32 and NT=64 (jax engages on the wide ready waves;
+# narrow activations exercise the numpy fast path inside the same run)
+
+
+@pytest.mark.parametrize("kernel", sorted(KERNELS))
+def test_jax_matches_numpy_nt32_32res(kernel, monkeypatch):
+    jax = pytest.importorskip("jax")  # noqa: F841
+    monkeypatch.setenv("REPRO_SCHED_JAX_MIN", "8")
+    graph = KERNELS[kernel](32, 512, with_fns=False)
+    a = run_simulation(
+        graph, MACHINE, DADA(alpha=0.5, use_cp=True, backend="numpy"), seed=4
+    )
+    b = run_simulation(
+        graph, MACHINE, DADA(alpha=0.5, use_cp=True, backend="jax"), seed=4
+    )
+    assert _fingerprint(a) == _fingerprint(b)
+
+
+def test_jax_heft_matches_numpy_nt32_32res(monkeypatch):
+    jax = pytest.importorskip("jax")  # noqa: F841
+    monkeypatch.setenv("REPRO_SCHED_JAX_MIN", "8")
+    graph = cholesky_graph(32, 512, with_fns=False)
+    a = run_simulation(graph, MACHINE, HEFT(backend="numpy"), seed=4)
+    b = run_simulation(graph, MACHINE, HEFT(backend="jax"), seed=4)
+    assert _fingerprint(a) == _fingerprint(b)
+
+
+def test_jax_matches_numpy_nt64_32res():
+    """The acceptance-size configuration: NT=64 Cholesky (45760 tasks) on
+    32 resources, wide λ-probe waves on the jax backend."""
+    jax = pytest.importorskip("jax")  # noqa: F841
+    graph = cholesky_graph(64, 512, with_fns=False)
+    a = run_simulation(
+        graph, MACHINE, DADA(alpha=0.5, use_cp=True, backend="numpy"), seed=2
+    )
+    b = run_simulation(
+        graph, MACHINE, DADA(alpha=0.5, use_cp=True, backend="jax"), seed=2
+    )
+    assert _fingerprint(a) == _fingerprint(b)
