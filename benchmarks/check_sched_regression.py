@@ -39,9 +39,14 @@ from __future__ import annotations
 
 import json
 import math
-import os
 import sys
 from pathlib import Path
+
+if __package__ in (None, ""):
+    _repo = Path(__file__).resolve().parents[1]
+    for _p in (str(_repo), str(_repo / "src")):
+        if _p not in sys.path:
+            sys.path.insert(0, _p)
 
 RESULTS = Path(__file__).resolve().parent / "results"
 CURRENT = RESULTS / "BENCH_sched.json"
@@ -58,8 +63,11 @@ def _rows_by_key(section: dict) -> dict:
 
 
 def main() -> int:
-    tol = float(os.environ.get("REPRO_SCHED_REGRESSION_TOL", "0.25"))
-    row_tol = float(os.environ.get("REPRO_SCHED_ROW_TOL", "0") or 0)
+    from repro.sched import current_config
+
+    cfg = current_config()
+    tol = cfg.regression_tol
+    row_tol = cfg.row_tol
     if not CURRENT.exists():
         print(f"no current results at {CURRENT}; run sched_overhead.py first")
         return 1

@@ -18,14 +18,14 @@ lambdas) so ``run_many`` can ship them to its process pool.
 from __future__ import annotations
 
 import csv
-import os
 from functools import partial
 from pathlib import Path
 from typing import Callable, Dict, List
 
 from repro.configs.paper_machine import paper_machine
-from repro.core import DADA, Summary, default_jobs, get_pool, make_strategy, run_many
+from repro.core import Summary, default_jobs, get_pool, run_many
 from repro.linalg.cholesky import cholesky_graph
+from repro.sched import resolve
 from repro.linalg.lu import lu_graph
 from repro.linalg.qr import qr_graph
 
@@ -89,19 +89,27 @@ def update_bench_json(section: str, payload) -> Path:
 
 
 def bench_settings():
-    fast = os.environ.get("REPRO_BENCH_FAST", "") == "1"
-    runs = int(os.environ.get("REPRO_BENCH_RUNS", "3" if fast else "30"))
-    gpus_env = os.environ.get("REPRO_BENCH_GPUS", "2,4,8" if fast else "1,2,3,4,5,6,7,8")
-    gpus = [int(x) for x in gpus_env.split(",") if x]
+    """(runs, gpu_counts) from the validated ``SchedConfig`` (one parse
+    for every ``REPRO_BENCH_*`` knob; malformed values fail loudly there)."""
+    from repro.sched import current_config
+
+    cfg = current_config()
+    runs = cfg.bench_runs if cfg.bench_runs is not None else (3 if cfg.bench_fast else 30)
+    if cfg.bench_gpus is not None:
+        gpus = list(cfg.bench_gpus)
+    else:
+        gpus = [2, 4, 8] if cfg.bench_fast else [1, 2, 3, 4, 5, 6, 7, 8]
     return runs, gpus
 
 
+# one code path for every consumer: specs resolved through the policy
+# registry (repro.sched), identical objects to the old direct constructors
 STRATEGIES: Dict[str, Callable] = {
-    "heft": partial(make_strategy, "heft"),
-    "ws": partial(make_strategy, "ws"),
-    "dada(0)": partial(DADA, alpha=0.0),
-    "dada(a)": partial(DADA, alpha=0.5),
-    "dada(a)+cp": partial(DADA, alpha=0.5, use_cp=True),
+    "heft": partial(resolve, "heft"),
+    "ws": partial(resolve, "ws"),
+    "dada(0)": partial(resolve, "dada?alpha=0"),
+    "dada(a)": partial(resolve, "dada?alpha=0.5"),
+    "dada(a)+cp": partial(resolve, "dada?alpha=0.5&use_cp=1"),
 }
 
 

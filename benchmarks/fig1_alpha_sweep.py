@@ -5,7 +5,7 @@ from __future__ import annotations
 
 from functools import partial
 
-from repro.core import DADA
+from repro.sched import resolve
 
 from .common import bench_settings, emit_csv_lines, sweep
 
@@ -16,9 +16,11 @@ def main() -> list:
     runs, gpus = bench_settings()
     strategies = {}
     for a in ALPHAS:
-        strategies[f"dada({a:g})"] = partial(DADA, alpha=a)
+        strategies[f"dada({a:g})"] = partial(resolve, f"dada?alpha={a:g}")
     for a in ALPHAS:
-        strategies[f"dada({a:g})+cp"] = partial(DADA, alpha=a, use_cp=True)
+        strategies[f"dada({a:g})+cp"] = partial(
+            resolve, f"dada?alpha={a:g}&use_cp=1"
+        )
     rows = sweep("fig1_alpha_sweep", "cholesky", strategies, runs, gpus)
     emit_csv_lines(rows)
     return rows

@@ -10,7 +10,8 @@ from __future__ import annotations
 from functools import partial
 
 from repro.configs.paper_machine import paper_machine
-from repro.core import DADA, make_strategy, run_many
+from repro.core import run_many
+from repro.sched import resolve
 from repro.linalg.cholesky import cholesky_graph
 
 from .common import bench_settings
@@ -23,9 +24,9 @@ def main() -> list:
     for n in (2048, 4096, 8192, 16384):
         nt = n // 512
         for label, fac in [
-            ("ws", partial(make_strategy, "ws")),
-            ("heft", partial(make_strategy, "heft")),
-            ("dada(a)+cp", partial(DADA, alpha=0.5, use_cp=True)),
+            ("ws", partial(resolve, "ws")),
+            ("heft", partial(resolve, "heft")),
+            ("dada(a)+cp", partial(resolve, "dada?alpha=0.5&use_cp=1")),
         ]:
             s = run_many(
                 partial(cholesky_graph, nt, 512, with_fns=False),

@@ -20,7 +20,8 @@ if __package__ in (None, ""):  # `python benchmarks/paper_validation.py`
             sys.path.insert(0, p)
 
 from repro.configs.paper_machine import paper_machine
-from repro.core import DADA, make_strategy, run_many
+from repro.core import run_many
+from repro.sched import resolve
 from repro.linalg.cholesky import cholesky_graph
 
 
@@ -117,10 +118,10 @@ def _validate_c6(checks: List[dict], n_runs: int) -> List[dict]:
 
     with ThreadPoolExecutor(max_workers=2) as tp:
         ws_f = tp.submit(
-            run_many, small, machine, partial(make_strategy, "ws"), n_runs
+            run_many, small, machine, partial(resolve, "ws"), n_runs
         )
         da_f = tp.submit(
-            run_many, small, machine, partial(DADA, alpha=0.5), n_runs
+            run_many, small, machine, partial(resolve, "dada?alpha=0.5"), n_runs
         )
         ws, da = ws_f.result(), da_f.result()
     checks.append(
@@ -175,16 +176,17 @@ def main() -> bool:
 
     # record the run in the machine-readable perf trajectory (satellite of
     # the scheduler-throughput tracking; see benchmarks/README.md)
-    import os
+    from repro.sched import current_config
 
     from benchmarks.common import update_bench_json
 
+    cfg = current_config()
     update_bench_json(
         "paper_validation",
         dict(
             wall_s=round(wall, 2),
-            backend=os.environ.get("REPRO_SCHED_BACKEND", "numpy"),
-            fast=os.environ.get("REPRO_BENCH_FAST", "") == "1",
+            backend=cfg.backend,
+            fast=cfg.bench_fast,
             claims=[
                 dict(claim=c["claim"], passed=bool(c["passed"]),
                      measured=c["measured"])
@@ -205,7 +207,7 @@ if __name__ == "__main__":
         print("WARNING: some paper claims did not reproduce — see above", file=sys.stderr)
         # gate CI on claim regressions; REPRO_BENCH_ALLOW_FAIL=1 opts out
         # (e.g. deliberately tiny smoke configurations on noisy runners)
-        import os
+        from repro.sched import current_config
 
-        if os.environ.get("REPRO_BENCH_ALLOW_FAIL", "") != "1":
+        if not current_config().bench_allow_fail:
             sys.exit(1)

@@ -25,7 +25,6 @@ REPRO_BENCH_LAMBDA (=0 skips the λ-probe section), REPRO_BENCH_LAMBDA_NT
 """
 from __future__ import annotations
 
-import os
 import sys
 import time
 from pathlib import Path
@@ -36,25 +35,35 @@ if __package__ in (None, ""):
         if p not in sys.path:
             sys.path.insert(0, p)
 
-from repro.core import Simulator, make_strategy
-from repro.core.dada import DADA
+from functools import partial
+
+from repro.core import Simulator
+from repro.sched import resolve
 
 from benchmarks.common import graphs_for, machine_for, update_bench_json
 
 
 def strategies(backend: str):
+    """Backend-scored strategies, resolved through the policy registry
+    (the same code path every other benchmark and the tests use)."""
     return {
-        "heft": lambda: make_strategy("heft", backend=backend),
-        "dada(0)": lambda: DADA(alpha=0.0, backend=backend),
-        "dada(a)": lambda: DADA(alpha=0.5, backend=backend),
-        "dada(a)+cp": lambda: DADA(alpha=0.5, use_cp=True, backend=backend),
+        "heft": partial(resolve, "heft", backend=backend),
+        "dada(0)": partial(resolve, "dada?alpha=0", backend=backend),
+        "dada(a)": partial(resolve, "dada?alpha=0.5", backend=backend),
+        "dada(a)+cp": partial(
+            resolve, "dada?alpha=0.5&use_cp=1", backend=backend
+        ),
     }
 
 
 # strategies that use no scoring backend: measured once per kernel, under
-# the stable backend label "none" (independent of the backend list)
+# the stable backend label "none" (independent of the backend list).
+# `random` and `locality` ride here as extra rows — same schema, so the
+# committed baseline (which simply lacks these keys) is unaffected.
 BACKEND_FREE_STRATEGIES = {
-    "ws": lambda: make_strategy("ws"),
+    "ws": partial(resolve, "ws"),
+    "random": partial(resolve, "random"),
+    "locality": partial(resolve, "locality"),
 }
 
 
@@ -67,11 +76,12 @@ def available_backends() -> list:
     dropped with a notice.
     """
     from repro.core import get_backend
+    from repro.sched import current_config
 
-    env = os.environ.get("REPRO_SCHED_BACKENDS", "")
+    cfg = current_config()
     names = (
-        [b.strip() for b in env.split(",") if b.strip()]
-        if env
+        list(cfg.bench_backends)
+        if cfg.bench_backends is not None
         else ["numpy", "jax"]
     )
     out = []
@@ -104,14 +114,19 @@ def whole_sim_rows(nts, n_gpus: int, n_runs: int, backends) -> list:
             ]
             for backend, strats in passes:
                 for label, sfac in strats.items():
-                    events = tasks = 0
-                    t0 = time.perf_counter()
-                    for i, g in enumerate(graphs):
-                        sim = Simulator(g, machine, sfac(), seed=1234 + i)
-                        res = sim.run()
-                        events += res.n_events
-                        tasks += len(g)
-                    dt = time.perf_counter() - t0
+                    # best-of-2 passes: a transient stall (noisy neighbor,
+                    # cgroup throttle) during one pass must not record a
+                    # phantom 2× slowdown into the perf trajectory
+                    dt = float("inf")
+                    for _rep in range(2):
+                        events = tasks = 0
+                        t0 = time.perf_counter()
+                        for i, g in enumerate(graphs):
+                            sim = Simulator(g, machine, sfac(), seed=1234 + i)
+                            res = sim.run()
+                            events += res.n_events
+                            tasks += len(g)
+                        dt = min(dt, time.perf_counter() - t0)
                     us = dt / n_runs * 1e6
                     row = dict(
                         kernel=kernel, strategy=label, backend=backend,
@@ -170,7 +185,7 @@ def lambda_probe_rows(
     placements = {}
     setups = {}
     for backend in backends:
-        strat = DADA(alpha=0.5, use_cp=True, backend=backend)
+        strat = resolve("dada?alpha=0.5&use_cp=1", backend=backend)
         sim = Simulator(graph, machine, strat, seed=0)
         # scatter a third of the tiles across GPU memories so affinity and
         # transfer scoring are exercised, not just durations
@@ -248,9 +263,13 @@ def calibration_score() -> float:
     """
     import heapq
 
-    t0 = time.perf_counter()
     acc = 0.0
+    best = float("inf")
+    # best-of-5: each repetition is timed separately and the fastest one
+    # scores (timeit practice) — a noisy-neighbor burst during one rep
+    # must not halve the calibration and double every scaled baseline
     for _ in range(5):
+        t0 = time.perf_counter()
         heap = []
         table = {}
         x = 1.0
@@ -261,18 +280,18 @@ def calibration_score() -> float:
             if i & 7 == 0:
                 acc += heapq.heappop(heap)[0]
         acc += sum(table.values())
-    dt = time.perf_counter() - t0
+        best = min(best, time.perf_counter() - t0)
     assert acc != 0.0
-    return 1e5 / dt if dt > 0 else 0.0  # arbitrary units
+    return 2e4 / best if best > 0 else 0.0  # arbitrary units
 
 
 def main() -> list:
-    gpus_env = os.environ.get("REPRO_BENCH_GPUS", "8")
-    n_gpus = int(gpus_env.split(",")[0] or 8)
-    n_runs = int(os.environ.get("REPRO_BENCH_RUNS", "3"))
-    nts = [
-        int(x) for x in os.environ.get("REPRO_BENCH_NT", "16").split(",") if x
-    ]
+    from repro.sched import current_config
+
+    cfg = current_config()
+    n_gpus = cfg.bench_gpus[0] if cfg.bench_gpus else 8
+    n_runs = cfg.bench_runs if cfg.bench_runs is not None else 3
+    nts = list(cfg.bench_nt)
     backends = available_backends()
 
     print("name,us_per_call,derived")
@@ -287,10 +306,10 @@ def main() -> list:
 
     lam_rows = []
     diverged = []
-    if os.environ.get("REPRO_BENCH_LAMBDA", "1") != "0":
-        lam_nt = int(os.environ.get("REPRO_BENCH_LAMBDA_NT", "64"))
-        lam_reps = int(os.environ.get("REPRO_BENCH_LAMBDA_REPS", "3"))
-        lam_rows = lambda_probe_rows(lam_nt, 8, 24, lam_reps, backends)
+    if cfg.bench_lambda:
+        lam_rows = lambda_probe_rows(
+            cfg.bench_lambda_nt, 8, 24, cfg.bench_lambda_reps, backends
+        )
         diverged = [
             r["backend"] for r in lam_rows
             if r["decisions_match_numpy"] is False

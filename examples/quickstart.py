@@ -9,10 +9,11 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 import jax.numpy as jnp
 
 from repro.configs.paper_machine import paper_machine
-from repro.core import DADA, make_strategy, run_simulation
+from repro.core import run_simulation
 from repro.linalg import tiles as T
 from repro.linalg.cholesky import cholesky_graph
 from repro.linalg.execute import execute_schedule
+from repro.sched import resolve
 
 N, TILE = 1024, 128
 NT = N // TILE
@@ -21,14 +22,19 @@ machine = paper_machine(n_gpus=4)
 graph = cholesky_graph(NT, TILE)
 print(f"Cholesky {N}x{N}: {len(graph)} tasks, {graph.n_edges} edges")
 
-for strat in [make_strategy("heft"), DADA(alpha=0.5, use_cp=True), make_strategy("ws")]:
+# policies come from the registry: bare names or query-string specs
+for spec in ["heft", "dada?alpha=0.5&use_cp=1", "ws", "locality", "random"]:
+    strat = resolve(spec)
     res = run_simulation(cholesky_graph(NT, TILE, with_fns=False), machine, strat, seed=0)
     print(f"  {res.strategy:12s} {res.gflops:7.1f} GFLOPS  "
           f"{res.gbytes*1e3:7.1f} MB moved  {res.n_steals} steals")
 
 # execute the affinity schedule for real and check the factorization
 a = T.random_spd(N, seed=0, dtype=jnp.float32)
-res = run_simulation(cholesky_graph(NT, TILE, with_fns=False), machine, DADA(alpha=0.5), seed=0)
+res = run_simulation(
+    cholesky_graph(NT, TILE, with_fns=False), machine,
+    resolve("dada?alpha=0.5"), seed=0,
+)
 store = execute_schedule(graph, T.split_tiles(a, TILE), res)
 L = jnp.tril(T.join_tiles(store, NT, TILE))
 err = float(jnp.abs(L @ L.T - a).max() / jnp.abs(a).max())

@@ -29,6 +29,12 @@ from .perfmodel import ClassPredictor, HistoryPerfModel, Residency, TransferMode
 from .simulator import SimResult, Simulator, Strategy
 from .worksteal import WorkSteal
 
+# importing the policy package last (it imports the strategy classes
+# above) registers the built-in policies and attaches the score_matrix
+# views, so `HEFT().score_matrix` / `repro.sched.resolve` work however
+# the packages are first imported
+from repro import sched as _sched  # noqa: E402  (deliberate tail import)
+
 __all__ = [
     "AFFINITY_FUNCTIONS", "AFFINITY_MATRIX_FUNCTIONS", "Access", "ClassPredictor",
     "DADA", "DataObject", "DualApprox", "GraphArrays",

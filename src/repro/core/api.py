@@ -1,42 +1,51 @@
-"""Public API of the scheduling core."""
+"""Public API of the scheduling core.
+
+Strategy construction lives in ``repro.sched`` (the Policy registry);
+``make_strategy`` and the string form of ``run_simulation`` survive here
+as thin deprecated shims with bit-identical results.
+"""
 from __future__ import annotations
 
 import math
 import os
 import pickle
 import threading
+import warnings
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .backend import backend_name, get_backend
 from .dag import TaskGraph
-from .dada import DADA, DualApprox
-from .heft import HEFT
 from .machine import MachineModel
 from .simulator import SimResult, Simulator, Strategy
-from .worksteal import WorkSteal
 
 
 def make_strategy(name: str, backend: Optional[str] = None, **kwargs) -> Strategy:
-    """Build a strategy from a short spec.
+    """Deprecated shim: build a strategy from a short spec.
 
-    ``heft`` | ``ws`` | ``dual`` | ``dada`` (kwargs: alpha, use_cp, affinity).
-    ``backend`` selects the placement-scoring backend (``numpy``/``jax``,
-    default from ``REPRO_SCHED_BACKEND``); placements are bit-identical
-    across backends, only the scoring cost changes.
+    Use :func:`repro.sched.resolve` instead — it accepts the same names
+    (``heft`` | ``ws`` | ``dual`` | ``dada`` …) plus query-string kwargs
+    (``"dada?alpha=0.5&use_cp=1"``) and the full registered-policy set.
+    This wrapper delegates to the registry, so the constructed strategy —
+    and every placement it makes — is bit-identical to ``resolve(name)``.
     """
-    name = name.lower()
-    if name == "heft":
-        return HEFT(backend=backend)
-    if name == "ws":
-        return WorkSteal()
-    if name == "dual":
-        return DualApprox(backend=backend, **kwargs)
-    if name == "dada":
-        return DADA(backend=backend, **kwargs)
-    raise ValueError(f"unknown strategy {name!r}")
+    warnings.warn(
+        "make_strategy() is deprecated; use repro.sched.resolve "
+        "(same names, plus query-string kwargs like 'dada?alpha=0.5')",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    from repro.sched import resolve
+    from repro.sched.registry import get_factory, parse_spec
+
+    # keep the historical error wording for unknown names only; real
+    # validation errors (bad alpha, unknown affinity) must pass through
+    try:
+        get_factory(parse_spec(name)[0])
+    except ValueError as exc:
+        raise ValueError(f"unknown strategy {name.lower()!r}") from exc
+    return resolve(name, backend=backend, **kwargs)
 
 
 def run_simulation(
@@ -45,10 +54,19 @@ def run_simulation(
     strategy,
     seed: int = 0,
     noise: float = 0.03,
+    config=None,
 ) -> SimResult:
     if isinstance(strategy, str):
-        strategy = make_strategy(strategy)
-    sim = Simulator(graph, machine, strategy, seed=seed, noise=noise)
+        warnings.warn(
+            "passing a strategy name string to run_simulation() is "
+            "deprecated; pass repro.sched.resolve(spec) instead",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        from repro.sched import resolve
+
+        strategy = resolve(strategy)
+    sim = Simulator(graph, machine, strategy, seed=seed, noise=noise, config=config)
     return sim.run()
 
 
@@ -126,18 +144,16 @@ def _run_chunk(
     return out
 
 
-def default_jobs(n_runs: int) -> int:
-    """Worker count for run_many: REPRO_BENCH_JOBS, else min(cpus, runs)."""
-    env = os.environ.get("REPRO_BENCH_JOBS", "")
-    if env:
-        try:
-            return max(1, int(env))
-        except ValueError:
-            print(
-                f"warning: REPRO_BENCH_JOBS={env!r} is not an integer; "
-                "using the CPU count",
-                flush=True,
-            )
+def default_jobs(n_runs: int, config=None) -> int:
+    """Worker count for run_many: REPRO_BENCH_JOBS (via SchedConfig),
+    else min(cpus, runs). A malformed value raises at config parse time
+    (``SchedConfig.from_env``) instead of silently using the CPU count."""
+    if config is None:
+        from repro.sched.config import current_config
+
+        config = current_config()
+    if config.bench_jobs is not None:
+        return max(1, config.bench_jobs)
     return max(1, min(os.cpu_count() or 1, n_runs))
 
 

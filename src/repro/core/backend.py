@@ -45,12 +45,14 @@ results:
     pass) **skip the remaining scans** via ``lax.cond``.
 
 The backend is selected per strategy instance (``DADA(backend="jax")``),
-falling back to the ``REPRO_SCHED_BACKEND`` environment variable and
-defaulting to numpy. JAX is imported lazily; when it is missing the jax
-backend degrades to numpy with a one-time warning so dependency-light
+falling back to the scheduling configuration (``repro.sched.SchedConfig``,
+itself parsed once from ``REPRO_SCHED_BACKEND`` et al. with validation)
+and defaulting to numpy. JAX is imported lazily; when it is missing the
+jax backend degrades to numpy with a one-time warning so dependency-light
 environments keep working.
 
-Knobs:
+Knobs (all parsed/validated by ``SchedConfig.from_env``; this module never
+reads ``os.environ`` directly):
   REPRO_SCHED_BACKEND       numpy (default) | jax
   REPRO_SCHED_JAX_MIN       ready-set width from which the jax path engages
                             (default 32; set 1 to force it everywhere)
@@ -61,7 +63,6 @@ Knobs:
 """
 from __future__ import annotations
 
-import os
 import warnings
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -69,12 +70,17 @@ import numpy as np
 
 from .machine import HOST_MEM
 
-_ENV_BACKEND = "REPRO_SCHED_BACKEND"
-_ENV_JAX_MIN = "REPRO_SCHED_JAX_MIN"
-_ENV_DEPTH = "REPRO_SCHED_LAMBDA_DEPTH"
-_ENV_PALLAS = "REPRO_SCHED_PALLAS"
-
 DEFAULT_JAX_MIN = 32
+
+
+def _resolve_config(config=None):
+    """The active ``SchedConfig`` (lazy import: repro.sched.policies
+    imports this module back for the strategy classes)."""
+    if config is not None:
+        return config
+    from repro.sched.config import current_config
+
+    return current_config()
 
 _TINY = 1e-12  # must match dada._TINY
 
@@ -85,10 +91,11 @@ _UNROLL = 16
 _BACKENDS = ("numpy", "jax")
 
 
-def backend_name(explicit: Optional[str] = None) -> str:
-    """Resolve the backend name: explicit arg > env var > ``numpy``."""
-    name = explicit or os.environ.get(_ENV_BACKEND, "") or "numpy"
-    name = name.lower()
+def backend_name(explicit: Optional[str] = None, config=None) -> str:
+    """Resolve the backend name: explicit arg > SchedConfig > ``numpy``."""
+    if explicit is None:
+        return _resolve_config(config).backend
+    name = explicit.lower()
     if name not in _BACKENDS:
         raise ValueError(
             f"unknown scheduling backend {name!r} (choose from {_BACKENDS})"
@@ -96,38 +103,40 @@ def backend_name(explicit: Optional[str] = None) -> str:
     return name
 
 
-def jax_min_wide() -> int:
-    """Ready-set width from which the jax path engages (env-tunable)."""
-    env = os.environ.get(_ENV_JAX_MIN, "")
-    if env:
-        try:
-            return max(1, int(env))
-        except ValueError:
-            pass
-    return DEFAULT_JAX_MIN
+def jax_min_wide(config=None) -> int:
+    """Ready-set width from which the jax path engages (config-tunable)."""
+    return _resolve_config(config).jax_min
 
 
-_JAX_SINGLETON = None  # None: not built; False: import failed; else instance
+# built backends keyed by the config fields the backend actually consumes
+# (lambda_depth, pallas) — the typical process uses one config and hence
+# one instance (its jit caches are the expensive part), but an explicit
+# per-strategy SchedConfig must not silently inherit the first caller's
+# depth/pallas settings
+_JAX_BACKENDS: Dict[tuple, "JaxScoringBackend"] = {}
+_JAX_FAILED = False
 _WARNED_FALLBACK = False
 
 
-def get_backend(explicit: Optional[str] = None):
+def get_backend(explicit: Optional[str] = None, config=None):
     """Return the scoring backend: ``None`` for numpy, else the jax backend.
 
-    The jax backend is a process-wide singleton (its jit caches are the
-    expensive part). A missing/broken jax degrades to numpy with a single
-    warning — tier-1 environments without jax keep working unchanged.
+    A missing/broken jax degrades to numpy with a single warning — tier-1
+    environments without jax keep working unchanged.
     """
-    if backend_name(explicit) == "numpy":
+    config = _resolve_config(config)
+    if backend_name(explicit, config) == "numpy":
         return None
-    global _JAX_SINGLETON, _WARNED_FALLBACK
-    if _JAX_SINGLETON is False:
+    global _JAX_FAILED, _WARNED_FALLBACK
+    if _JAX_FAILED:
         return None
-    if _JAX_SINGLETON is None:
+    key = (config.lambda_depth, config.pallas, config.jax_min)
+    be = _JAX_BACKENDS.get(key)
+    if be is None:
         try:
-            _JAX_SINGLETON = JaxScoringBackend()
+            be = _JAX_BACKENDS[key] = JaxScoringBackend(config)
         except Exception as exc:  # ImportError or accelerator init failure
-            _JAX_SINGLETON = False
+            _JAX_FAILED = True
             if not _WARNED_FALLBACK:
                 _WARNED_FALLBACK = True
                 warnings.warn(
@@ -138,13 +147,14 @@ def get_backend(explicit: Optional[str] = None):
                     stacklevel=2,
                 )
             return None
-    return _JAX_SINGLETON
+    return be
 
 
 def _reset_backend_cache() -> None:
-    """Test hook: forget a failed (or built) singleton."""
-    global _JAX_SINGLETON, _WARNED_FALLBACK
-    _JAX_SINGLETON = None
+    """Test hook: forget failed (or built) backends."""
+    global _JAX_FAILED, _WARNED_FALLBACK
+    _JAX_BACKENDS.clear()
+    _JAX_FAILED = False
     _WARNED_FALLBACK = False
 
 
@@ -158,16 +168,21 @@ def _bucket(n: int, lo: int = 8) -> int:
 
 class ScoringBackendMixin:
     """Lazy, cached scoring-backend resolution shared by the strategy
-    classes (DADA, HEFT): one place defines the fallback semantics."""
+    classes (DADA, HEFT): one place defines the fallback semantics.
 
-    def _init_backend(self, backend: Optional[str]) -> None:
+    ``config`` is the typed :class:`repro.sched.SchedConfig`; when None
+    the process-wide environment-derived config applies at resolution
+    time (not at construction, so strategies stay picklable and cheap)."""
+
+    def _init_backend(self, backend: Optional[str], config=None) -> None:
         self.backend_name = backend
+        self.config = config
         self._backend = None
         self._backend_resolved = False
 
     def _scoring_backend(self):
         if not self._backend_resolved:
-            self._backend = get_backend(self.backend_name)
+            self._backend = get_backend(self.backend_name, self.config)
             self._backend_resolved = True
         return self._backend
 
@@ -201,9 +216,11 @@ class JaxScoringBackend:
     # bit u+1 = unique mem u
     _MAX_UNIQ_MEMS = 30
 
-    def __init__(self) -> None:
+    def __init__(self, config=None) -> None:
         import jax  # lazy: numpy-only environments never pay this
         import jax.numpy as jnp
+
+        config = _resolve_config(config)
 
         # x64 is scoped per backend call (see _x64), never flipped
         # process-wide: the repo's other jax stacks (models, linalg tiles,
@@ -219,12 +236,11 @@ class JaxScoringBackend:
         self._x64 = _enable_x64
         platform = jax.default_backend()
         default_depth = 1 if platform == "cpu" else 5
-        depth = os.environ.get(_ENV_DEPTH, "")
-        try:
-            self.depth = max(1, min(int(depth), 8)) if depth else default_depth
-        except ValueError:
-            self.depth = default_depth
-        pallas = os.environ.get(_ENV_PALLAS, "auto").lower()
+        self.depth = (
+            config.lambda_depth if config.lambda_depth is not None else default_depth
+        )
+        self._min_wide = config.jax_min
+        pallas = config.pallas
         if pallas == "1":
             self.pallas_mode = "interpret" if platform == "cpu" else "native"
         elif pallas in ("0", "off", "false"):
@@ -239,7 +255,11 @@ class JaxScoringBackend:
     # ------------------------------------------------------------------
     @property
     def min_wide(self) -> int:
-        return jax_min_wide()
+        # frozen at construction from the resolved SchedConfig: per-call
+        # environment scans have no place on the activation hot path, and
+        # an explicitly threaded config's jax_min must win (get_backend
+        # keys its cache on it)
+        return self._min_wide
 
     # ------------------------------------------------------------------
     @_x64_scoped

@@ -52,6 +52,7 @@ class DADA(ScoringBackendMixin, Strategy):
         max_iters: int = 30,
         area_bound: bool = False,
         backend: Optional[str] = None,
+        config=None,
     ) -> None:
         """``area_bound``: also reject a guess λ when the total work area
         exceeds λ x (number of resources) — a valid no-schedule certificate
@@ -61,9 +62,11 @@ class DADA(ScoringBackendMixin, Strategy):
         expert-placement bridge turns it on.
 
         ``backend``: placement-scoring backend (``numpy``/``jax``); default
-        follows ``REPRO_SCHED_BACKEND``. The jax backend batches the score
-        matrices and the λ-probe search on wide activations; placements are
-        bit-identical either way (see ``repro.core.backend``)."""
+        follows the scheduling configuration (``config`` or the
+        environment-derived ``repro.sched.SchedConfig``). The jax backend
+        batches the score matrices and the λ-probe search on wide
+        activations; placements are bit-identical either way (see
+        ``repro.core.backend``)."""
         if not 0.0 <= alpha <= 1.0:
             raise ValueError("alpha must be within [0, 1]")
         self.alpha = alpha
@@ -73,7 +76,7 @@ class DADA(ScoringBackendMixin, Strategy):
         self.eps_rel = eps_rel
         self.max_iters = max_iters
         self.area_bound = area_bound
-        self._init_backend(backend)
+        self._init_backend(backend, config)
         cp = "+cp" if use_cp else ""
         self.name = f"dada({alpha:g}){cp}"
 

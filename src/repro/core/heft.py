@@ -36,14 +36,15 @@ class HEFT(ScoringBackendMixin, Strategy):
     allow_steal = False
     owner_lifo = False
 
-    def __init__(self, backend: Optional[str] = None) -> None:
+    def __init__(self, backend: Optional[str] = None, config=None) -> None:
         """``backend``: placement-scoring backend (``numpy``/``jax``);
-        default follows ``REPRO_SCHED_BACKEND``. The jax backend computes
-        the transfer matrix in one fused dispatch and runs the sequential
-        EFT selection as a jitted scan on wide activations — placements
-        (including the 1e-15 strict-improvement tie-break) are
+        default follows the scheduling configuration (``config`` or the
+        environment-derived ``repro.sched.SchedConfig``). The jax backend
+        computes the transfer matrix in one fused dispatch and runs the
+        sequential EFT selection as a jitted scan on wide activations —
+        placements (including the 1e-15 strict-improvement tie-break) are
         bit-identical to the scalar loop."""
-        self._init_backend(backend)
+        self._init_backend(backend, config)
 
     def place(self, sim: Simulator, ready: List[Task], src: Optional[int]) -> None:
         machine = sim.machine

@@ -102,11 +102,17 @@ class Simulator:
         seed: int = 0,
         noise: float = 0.03,
         transfer_model: Optional[TransferModel] = None,
+        config=None,
     ) -> None:
         self.graph = graph
         self.arrays: GraphArrays = graph.arrays()
         self.machine = machine
         self.strategy = strategy
+        # the typed scheduling configuration (repro.sched.SchedConfig);
+        # resolved lazily from the environment when not supplied, so
+        # strategies and instrumentation read sim.config instead of
+        # scattering os.environ lookups through hot paths
+        self._config = config
         self.rng = np.random.default_rng(seed)
         self.noise = noise
         # One multiplicative noise factor per task (each task executes
@@ -177,6 +183,16 @@ class Simulator:
         self.busy = {r.rid: 0.0 for r in machine.resources}
         self.intervals: List[ScheduledInterval] = []
         self._n_done = 0
+
+    # ------------------------------------------------------------------
+    @property
+    def config(self):
+        """The active ``repro.sched.SchedConfig`` for this simulation."""
+        if self._config is None:
+            from repro.sched.config import current_config
+
+            self._config = current_config()
+        return self._config
 
     # ------------------------------------------------------------------
     def predictor(self, cls: ResourceClass) -> ClassPredictor:

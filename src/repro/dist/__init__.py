@@ -1,11 +1,12 @@
-"""Distribution layer (minimal surface).
+"""Distribution layer: sharding rules, scheduler bridge, elasticity.
 
-Only the ``hints`` module is implemented so far: it carries the
-batch-sharding constraint helpers the model code calls unconditionally.
-The remaining submodules named by the roadmap (``sharding``, ``elastic``,
-``sched_bridge``, ``straggler``) land in later PRs; importers should treat
-them as optional (tests gate on ``pytest.importorskip``).
+Built on the ``repro.sched`` policy API: ``sched_bridge`` maps the Policy
+score mechanism to expert/shard placement, ``sharding`` holds the
+rule-based PartitionSpec derivations for every model pytree, ``elastic``
+re-plans mesh + placement after device-count changes, ``straggler``
+re-balances micro-batches from observed step times, and ``hints`` carries
+the batch-sharding constraint helpers the model code calls unconditionally.
 """
-from . import hints
+from . import elastic, hints, sched_bridge, sharding, straggler
 
-__all__ = ["hints"]
+__all__ = ["elastic", "hints", "sched_bridge", "sharding", "straggler"]

@@ -1,0 +1,83 @@
+"""Elastic re-planning: device loss/gain → mesh shape + expert placement.
+
+A pod that loses devices (preemption, hardware fault) must keep serving:
+``choose_mesh_shape`` picks the largest supported (data, model) mesh that
+fits the surviving device count, and ``replan`` rebuilds the expert
+placement *with affinity to the previous plan* — the paper's criterion
+applied to failure recovery: experts whose weights already live on
+surviving groups stay put, so the re-shard moves a minimum of bytes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+from .sched_bridge import ExpertPlacement, plan_expert_placement
+
+MODEL_AXIS = 16  # the TP group: fixed by kernel tiling, never degraded
+
+
+def choose_mesh_shape(n_devices: int) -> Tuple[int, int]:
+    """Largest (data, model) mesh fitting ``n_devices``.
+
+    The model axis stays 16 (TP layouts are compiled for it); the data
+    axis degrades to the largest power of two that fits, so a 300-device
+    degraded pod runs as (16, 16) and a 17-device remnant as (1, 16).
+    """
+    if n_devices < MODEL_AXIS:
+        raise ValueError(
+            f"need at least {MODEL_AXIS} devices for one TP group, "
+            f"got {n_devices}"
+        )
+    data = 1
+    while data * 2 * MODEL_AXIS <= n_devices:
+        data *= 2
+    return (data, MODEL_AXIS)
+
+
+@dataclass(frozen=True)
+class ElasticPlan:
+    mesh_shape: Tuple[int, int]
+    n_devices: int  # devices actually used
+    placement: ExpertPlacement
+
+
+def replan(
+    n_devices: int,
+    *,
+    n_experts: int,
+    routing_mass: Optional[Sequence[float]] = None,
+    prev_assignment: Optional[Sequence[int]] = None,
+    alpha: float = 1.0,
+) -> ElasticPlan:
+    """Re-plan mesh + expert placement after a device-count change.
+
+    Expert groups ride the model axis (the all-to-all stays inside a
+    pod's fast interconnect); when the expert count does not divide the
+    axis, the group count halves until it does. ``prev_assignment``
+    (from the plan being replaced) engages the affinity phase so
+    surviving experts keep their weights in place.
+    """
+    shape = choose_mesh_shape(n_devices)
+    groups = shape[1]
+    while groups > 1 and n_experts % groups:
+        groups //= 2
+    if routing_mass is None:
+        mass = np.ones(n_experts, dtype=np.float64)  # no stats yet: uniform
+    else:
+        mass = np.asarray(routing_mass, dtype=np.float64)
+    if len(mass) != n_experts:
+        raise ValueError("routing_mass length != n_experts")
+    prev = prev_assignment
+    if prev is not None:
+        prev = np.asarray(prev, dtype=np.int64)
+        # groups that no longer exist carry no affinity
+        prev = np.where(prev < groups, prev, -1)
+    placement = plan_expert_placement(mass, groups, prev_assignment=prev, alpha=alpha)
+    return ElasticPlan(
+        mesh_shape=shape,
+        n_devices=shape[0] * shape[1],
+        placement=placement,
+    )

@@ -1,0 +1,266 @@
+"""Sharding rules: every model pytree → PartitionSpec tree, by rule not table.
+
+One rule set covers the whole architecture pool (dense GQA, MLA, MoE,
+hybrid Mamba/attention, xLSTM, encoder-decoder, modality stubs), so adding
+an arch never means adding a spec table. The rules are divisibility-gated:
+a dimension is only sharded when the mesh axis divides it, and anything
+unshardable replicates — lowering must never fail on an exotic shape.
+
+Placement policy (the production 16×16 pod, optional leading ``pod`` axis):
+
+  * **parameters** — tensor parallelism on the ``model`` axis (the largest
+    divisible dimension, preferring the last on ties: the conventional
+    column-parallel layout), FSDP on the ``data`` axis over the first
+    remaining divisible dimension (``fsdp=False`` drops it, e.g. TP-only
+    decode); stacked period trees (``blocks``/``cross``/``enc_blocks``)
+    keep the leading scan axis unsharded;
+  * **embeddings** — untied tables shard ``d_model`` (gathers stay local:
+    vocab-sharded gathers hit SPMD's full-remat fallback), tied tables
+    shard the vocab dim (the one-hot contraction in ``forward`` partitions
+    cleanly and the lm_head matmul reuses the shards);
+  * **MoE experts** — expert parallelism on ``model`` (spanning
+    ``("pod", "model")`` with ``ep_pods=True``) when the expert count
+    divides, else tensor parallelism *inside* each expert on the widest
+    divisible inner dimension (grok-style few-expert models);
+  * **activations/batch** — the batch dimension over the data axes
+    (``("pod", "data")`` on multi-pod meshes); when the batch itself is
+    indivisible (``long_500k`` has batch 1) the sequence dimension takes
+    the data axes instead;
+  * **KV caches** — batch over ``data``; KV heads over ``model`` when they
+    divide (GQA with enough heads), else the sequence dimension
+    (sequence-sharded KV, the long-context layout); other recurrent state
+    (Mamba/xLSTM/MLA) shards its largest divisible dimension.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+# pytrees whose leaves carry a leading stacked-period axis (scanned)
+_STACKED_ROOTS = ("blocks", "cross", "enc_blocks")
+
+
+def _axis_size(mesh, name: str) -> int:
+    return dict(mesh.shape).get(name, 1)
+
+
+def _data_axes(mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _trim(entries) -> P:
+    """PartitionSpec with trailing Nones dropped (the canonical short form
+    for activation specs; parameter/cache specs stay full-rank)."""
+    out = list(entries)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def _largest_divisible(
+    shape: Sequence[int], size: int, taken: Sequence[int], lo: int = 0
+) -> Optional[int]:
+    """Index of the largest dim (>= ``lo``) divisible by ``size``; ties go
+    to the rightmost dim (conventional column-parallel layout)."""
+    best, best_dim = None, -1
+    for i in range(lo, len(shape)):
+        if i in taken or size <= 1:
+            continue
+        if shape[i] % size == 0 and shape[i] >= best_dim:
+            best, best_dim = i, shape[i]
+    return best
+
+
+def _first_divisible(
+    shape: Sequence[int], size: int, taken: Sequence[int], lo: int = 0
+) -> Optional[int]:
+    for i in range(lo, len(shape)):
+        if i not in taken and size > 1 and shape[i] % size == 0:
+            return i
+    return None
+
+
+# ---------------------------------------------------------------------------
+# parameters
+
+
+def _param_spec(
+    cfg: ModelConfig,
+    path_names: Tuple[str, ...],
+    shape: Tuple[int, ...],
+    mesh,
+    *,
+    fsdp: bool,
+    ep_pods: bool,
+) -> P:
+    model = _axis_size(mesh, "model")
+    data = _axis_size(mesh, "data")
+    pod = _axis_size(mesh, "pod")
+    stacked = bool(path_names) and path_names[0] in _STACKED_ROOTS
+    off = 1 if stacked else 0  # leading period axis stays unsharded
+    ndim = len(shape)
+    spec: list = [None] * ndim
+    leaf = path_names[-1] if path_names else ""
+
+    # 1-d (biases, norm scales) and scalars: replicate
+    if ndim - off <= 1:
+        return P(*spec)
+
+    # embeddings: gather-friendly layouts, never FSDP (see module doc)
+    if "embed" in path_names and leaf == "table":
+        vocab, d = shape
+        if cfg.tie_embeddings:
+            if vocab % model == 0:
+                spec[0] = "model"
+        elif d % model == 0:
+            spec[1] = "model"
+        return P(*spec)
+
+    taken: list = []
+    # MoE expert tensors: (periods, E, a, b) — expert parallelism first
+    if "moe" in path_names and ndim - off == 3:
+        E = shape[off]
+        if ep_pods and pod > 1 and E % (pod * model) == 0:
+            spec[off] = ("pod", "model")
+            taken.append(off)
+        elif E % model == 0:
+            spec[off] = "model"
+            taken.append(off)
+        else:  # few-expert models: TP inside each expert
+            j = _largest_divisible(shape, model, taken, lo=off + 1)
+            if j is not None:
+                spec[j] = "model"
+                taken.append(j)
+        if fsdp:
+            j = _first_divisible(shape, data, taken, lo=off + 1)
+            if j is not None:
+                spec[j] = "data"
+        return P(*spec)
+
+    # generic matrices: TP on the largest divisible dim, FSDP on the first
+    # remaining divisible dim
+    j = _largest_divisible(shape, model, taken, lo=off)
+    if j is not None:
+        spec[j] = "model"
+        taken.append(j)
+    if fsdp:
+        j = _first_divisible(shape, data, taken, lo=off)
+        if j is not None:
+            spec[j] = "data"
+    return P(*spec)
+
+
+def param_specs(
+    cfg: ModelConfig,
+    params,
+    mesh,
+    *,
+    fsdp: bool = True,
+    ep_pods: bool = False,
+):
+    """PartitionSpec tree matching ``params`` (arrays or ShapeDtypeStructs)."""
+
+    def one(path, leaf) -> P:
+        names = tuple(
+            k.key for k in path if isinstance(k, jax.tree_util.DictKey)
+        )
+        return _param_spec(
+            cfg, names, tuple(leaf.shape), mesh, fsdp=fsdp, ep_pods=ep_pods
+        )
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+# ---------------------------------------------------------------------------
+# activations / batch
+
+
+def batch_specs(cfg: ModelConfig, mesh, batch) -> Dict[str, Any]:
+    """Specs for step inputs: batch dim over the data axes; indivisible
+    batch (e.g. ``long_500k``'s batch of 1) falls through to the sequence
+    dimension."""
+    axes = _data_axes(mesh)
+    shard = math.prod(_axis_size(mesh, a) for a in axes)
+
+    def one(leaf) -> P:
+        shape = tuple(leaf.shape)
+        spec: list = [None] * len(shape)
+        if shard > 1:
+            for i, dim in enumerate(shape):
+                if dim % shard == 0 and dim >= shard:
+                    spec[i] = axes
+                    break
+        return _trim(spec)
+
+    return jax.tree_util.tree_map(one, batch)
+
+
+# ---------------------------------------------------------------------------
+# decode caches / recurrent state
+
+
+def _cache_spec(
+    path_names: Tuple[str, ...], shape: Tuple[int, ...], mesh
+) -> P:
+    model = _axis_size(mesh, "model")
+    daxes = _data_axes(mesh)
+    dshard = math.prod(_axis_size(mesh, a) for a in daxes)
+    ndim = len(shape)
+    spec: list = [None] * ndim
+    off = 1  # leading stacked-period axis
+    taken: list = [0]
+    leaf = path_names[-1] if path_names else ""
+
+    if ndim > off and dshard > 1 and shape[off] % dshard == 0:
+        spec[off] = daxes
+        taken.append(off)
+
+    if model > 1:
+        if leaf in ("k", "v") and ndim - off == 4:
+            # (B, S, kv_heads, head_dim): heads when they divide (GQA with
+            # enough heads), else sequence-sharded KV
+            if shape[off + 2] % model == 0:
+                spec[off + 2] = "model"
+            elif shape[off + 1] % model == 0:
+                spec[off + 1] = "model"
+        else:
+            j = _largest_divisible(shape, model, taken, lo=off + 1)
+            if j is not None:
+                spec[j] = "model"
+    return P(*spec)
+
+
+def cache_specs(cfg: ModelConfig, mesh, cache):
+    """Specs for the decode cache pytree (``{"p{j}": state leaves}``)."""
+
+    def one(path, leaf) -> P:
+        names = tuple(
+            k.key for k in path if isinstance(k, jax.tree_util.DictKey)
+        )
+        return _cache_spec(names, tuple(leaf.shape), mesh)
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+# ---------------------------------------------------------------------------
+# optimizer state / materialisation
+
+
+def opt_specs(pspec):
+    """AdamW state specs: moments inherit the parameter layout, the step
+    counter replicates."""
+    return {"m": pspec, "v": pspec, "step": P()}
+
+
+def to_named(mesh, spec_tree):
+    """PartitionSpec tree → NamedSharding tree over ``mesh``."""
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

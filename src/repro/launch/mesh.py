@@ -7,7 +7,27 @@ that the sharding rules treat as pure data parallelism.
 """
 from __future__ import annotations
 
+import numpy as np
+
 import jax
+
+
+def _mesh(shape, axes, devices):
+    """Version-tolerant mesh construction.
+
+    ``jax.make_mesh(..., axis_types=AxisType.Auto)`` only exists on recent
+    jax; older releases spell the same thing as a plain ``Mesh`` over a
+    reshaped device array (Auto is their only behavior).
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(
+            shape, axes, devices=devices,
+            axis_types=(axis_type.Auto,) * len(axes),
+        )
+    return jax.sharding.Mesh(
+        np.asarray(devices, dtype=object).reshape(shape), axes
+    )
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -23,19 +43,13 @@ def make_production_mesh(*, multi_pod: bool = False):
             "dry-run entrypoint must set XLA_FLAGS=--xla_force_host_platform_"
             "device_count before any jax import"
         )
-    return jax.make_mesh(
-        shape, axes, devices=devices[:n],
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-    )
+    return _mesh(shape, axes, devices[:n])
 
 
 def make_smoke_mesh(n_data: int = 1, n_model: int = 1):
     """Tiny mesh over however many real devices exist (tests)."""
     devices = jax.devices()[: n_data * n_model]
-    return jax.make_mesh(
-        (n_data, n_model), ("data", "model"), devices=devices,
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return _mesh((n_data, n_model), ("data", "model"), devices)
 
 
 def data_axes(mesh) -> tuple:

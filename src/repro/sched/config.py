@@ -1,0 +1,251 @@
+"""Typed scheduling configuration — the single source of truth for every
+``REPRO_SCHED_*`` / ``REPRO_BENCH_*`` knob.
+
+Before this module the knobs were parsed ad hoc at ~10 call sites
+(``backend.py`` read four env vars with silent fallbacks, the benchmark
+harness another six): a typo like ``REPRO_SCHED_LAMBDA_DEPTH=banana``
+silently became the platform default deep inside the jax backend.
+``SchedConfig.from_env()`` parses the whole environment once, validates
+every value, and rejects unknown ``REPRO_SCHED_*``/``REPRO_BENCH_*``
+variables with one clear error, so misconfiguration fails at the edge
+instead of deep in a hot path.
+
+The frozen dataclass is then threaded explicitly through the scheduling
+stack (``repro.core.backend`` / ``dada`` / ``heft`` / ``Simulator``) —
+``os.environ`` is only ever read here.
+
+``current_config()`` memoizes the parse against a snapshot of the relevant
+environment entries, so hot paths pay a dict scan, not a re-parse, while
+tests that monkeypatch the environment still see fresh values.
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass, fields
+from typing import Mapping, Optional, Tuple
+
+SCHED_PREFIX = "REPRO_SCHED_"
+BENCH_PREFIX = "REPRO_BENCH_"
+
+BACKENDS = ("numpy", "jax")
+PALLAS_MODES = ("auto", "1", "0", "off", "false")
+
+# env var -> (field name, parser); parsers raise ValueError with the
+# offending variable named, so the error reads as configuration feedback
+_MISSING = object()
+
+
+def _err(var: str, value: str, expected: str) -> ValueError:
+    return ValueError(
+        f"invalid scheduling configuration: {var}={value!r} ({expected})"
+    )
+
+
+def _parse_int(var: str, value: str, lo: Optional[int] = None) -> int:
+    try:
+        n = int(value)
+    except ValueError:
+        raise _err(var, value, "expected an integer") from None
+    if lo is not None and n < lo:
+        raise _err(var, value, f"expected an integer >= {lo}")
+    return n
+
+
+def _parse_float(var: str, value: str) -> float:
+    try:
+        return float(value)
+    except ValueError:
+        raise _err(var, value, "expected a number") from None
+
+
+def _parse_flag(var: str, value: str) -> bool:
+    if value in ("", "0"):
+        return False
+    if value == "1":
+        return True
+    raise _err(var, value, "expected 0 or 1")
+
+
+def _parse_int_list(var: str, value: str, lo: int = 0) -> Tuple[int, ...]:
+    out = []
+    for part in value.split(","):
+        part = part.strip()
+        if not part:
+            continue  # empty entries allowed: REPRO_BENCH_GPUS="" is an empty sweep
+        out.append(_parse_int(var, part, lo))
+    return tuple(out)
+
+
+def _parse_str_list(var: str, value: str) -> Tuple[str, ...]:
+    return tuple(p.strip() for p in value.split(",") if p.strip())
+
+
+@dataclass(frozen=True)
+class SchedConfig:
+    """Every scheduling/benchmark knob, parsed and validated once.
+
+    Scheduling (``REPRO_SCHED_*``):
+
+    - ``backend``: placement-scoring backend, ``numpy`` (default) or
+      ``jax``; see ``repro.core.backend``.
+    - ``jax_min``: ready-set width from which the jax path engages.
+    - ``lambda_depth``: speculative λ-bisection depth (``None`` = platform
+      default: 1 on cpu, 5 on gpu/tpu), clamped to [1, 8].
+    - ``pallas``: Pallas transfer-kernel mode (``auto``/``1``/``0``).
+    - ``bench_backends``: backends the overhead benchmark measures.
+    - ``regression_tol`` / ``row_tol``: throughput-gate tolerances.
+
+    Benchmark harness (``REPRO_BENCH_*``): see ``benchmarks/common.py``;
+    ``None`` means "unset" where the consumer's default depends on other
+    knobs (e.g. runs defaults to 3 under ``bench_fast``, 30 otherwise).
+    """
+
+    # --- scheduling ----------------------------------------------------
+    backend: str = "numpy"
+    jax_min: int = 32
+    lambda_depth: Optional[int] = None
+    pallas: str = "auto"
+    bench_backends: Optional[Tuple[str, ...]] = None
+    regression_tol: float = 0.25
+    row_tol: float = 0.0
+    # --- benchmark harness ---------------------------------------------
+    bench_fast: bool = False
+    bench_runs: Optional[int] = None
+    bench_gpus: Optional[Tuple[int, ...]] = None
+    bench_nt: Tuple[int, ...] = (16,)
+    bench_jobs: Optional[int] = None
+    bench_lambda: bool = True
+    bench_lambda_nt: int = 64
+    bench_lambda_reps: int = 3
+    bench_allow_fail: bool = False
+
+    def __post_init__(self) -> None:
+        if self.backend not in BACKENDS:
+            raise _err(
+                "REPRO_SCHED_BACKEND", self.backend,
+                f"choose from {BACKENDS}",
+            )
+        if self.pallas not in PALLAS_MODES:
+            raise _err(
+                "REPRO_SCHED_PALLAS", self.pallas,
+                f"choose from {PALLAS_MODES}",
+            )
+        if self.lambda_depth is not None:
+            object.__setattr__(
+                self, "lambda_depth", max(1, min(int(self.lambda_depth), 8))
+            )
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def from_env(cls, env: Optional[Mapping[str, str]] = None) -> "SchedConfig":
+        """Parse (and validate) the environment into a ``SchedConfig``.
+
+        Raises ``ValueError`` naming the offending variable for malformed
+        values *and* for unknown ``REPRO_SCHED_*``/``REPRO_BENCH_*``
+        variables — a typoed knob must not silently do nothing.
+        """
+        if env is None:
+            env = os.environ
+        kw = {}
+        unknown = []
+        for var, raw in env.items():
+            if not (var.startswith(SCHED_PREFIX) or var.startswith(BENCH_PREFIX)):
+                continue
+            spec = _ENV_SCHEMA.get(var)
+            if spec is None:
+                unknown.append(var)
+                continue
+            field_name, parse = spec
+            kw[field_name] = parse(var, raw)
+        if unknown:
+            known = ", ".join(sorted(_ENV_SCHEMA))
+            raise ValueError(
+                "unknown scheduling configuration variable(s): "
+                f"{', '.join(sorted(unknown))} (known: {known})"
+            )
+        return cls(**kw)
+
+    def env_items(self) -> Tuple[Tuple[str, str], ...]:
+        """The env-var form of every non-default field (for subprocesses)."""
+        defaults = SchedConfig()
+        out = []
+        for f in fields(self):
+            v = getattr(self, f.name)
+            if v == getattr(defaults, f.name):
+                continue
+            var = _FIELD_TO_ENV[f.name]
+            if isinstance(v, tuple):
+                s = ",".join(str(x) for x in v)
+            elif isinstance(v, bool):
+                s = "1" if v else "0"
+            else:
+                s = str(v)
+            out.append((var, s))
+        return tuple(out)
+
+
+_ENV_SCHEMA = {
+    "REPRO_SCHED_BACKEND": ("backend", lambda var, v: v.lower()),
+    "REPRO_SCHED_JAX_MIN": ("jax_min", lambda var, v: _parse_int(var, v, lo=1)),
+    "REPRO_SCHED_LAMBDA_DEPTH": (
+        "lambda_depth", lambda var, v: _parse_int(var, v)),
+    "REPRO_SCHED_PALLAS": ("pallas", lambda var, v: v.lower()),
+    "REPRO_SCHED_BACKENDS": ("bench_backends", _parse_str_list),
+    "REPRO_SCHED_REGRESSION_TOL": ("regression_tol", _parse_float),
+    "REPRO_SCHED_ROW_TOL": (
+        "row_tol", lambda var, v: _parse_float(var, v) if v else 0.0),
+    "REPRO_BENCH_FAST": ("bench_fast", _parse_flag),
+    "REPRO_BENCH_RUNS": ("bench_runs", lambda var, v: _parse_int(var, v, lo=1)),
+    "REPRO_BENCH_GPUS": ("bench_gpus", _parse_int_list),
+    "REPRO_BENCH_NT": ("bench_nt", lambda var, v: _parse_int_list(var, v, lo=1)),
+    "REPRO_BENCH_JOBS": ("bench_jobs", lambda var, v: _parse_int(var, v, lo=1)),
+    "REPRO_BENCH_LAMBDA": (
+        "bench_lambda", lambda var, v: v != "0"),
+    "REPRO_BENCH_LAMBDA_NT": (
+        "bench_lambda_nt", lambda var, v: _parse_int(var, v, lo=1)),
+    "REPRO_BENCH_LAMBDA_REPS": (
+        "bench_lambda_reps", lambda var, v: _parse_int(var, v, lo=1)),
+    "REPRO_BENCH_ALLOW_FAIL": ("bench_allow_fail", _parse_flag),
+}
+
+_FIELD_TO_ENV = {field: var for var, (field, _) in _ENV_SCHEMA.items()}
+
+KNOWN_ENV_VARS: Tuple[str, ...] = tuple(sorted(_ENV_SCHEMA))
+
+
+# ---------------------------------------------------------------------------
+# memoized accessor: one parse per environment state
+
+_CACHE: Optional[Tuple[Tuple[Tuple[str, str], ...], SchedConfig]] = None
+
+
+def _env_snapshot() -> Tuple[Tuple[str, str], ...]:
+    return tuple(
+        sorted(
+            (k, v)
+            for k, v in os.environ.items()
+            if k.startswith(SCHED_PREFIX) or k.startswith(BENCH_PREFIX)
+        )
+    )
+
+
+def current_config() -> SchedConfig:
+    """The process-wide ``SchedConfig`` derived from the environment.
+
+    Re-parses only when a relevant environment entry changed (tests
+    monkeypatching ``REPRO_*`` see fresh values immediately); otherwise
+    returns the memoized instance, so call sites can treat this as cheap.
+    """
+    global _CACHE
+    snap = _env_snapshot()
+    if _CACHE is not None and _CACHE[0] == snap:
+        return _CACHE[1]
+    cfg = SchedConfig.from_env()
+    _CACHE = (snap, cfg)
+    return cfg
+
+
+def _reset_config_cache() -> None:
+    """Test hook: forget the memoized environment parse."""
+    global _CACHE
+    _CACHE = None

@@ -1,0 +1,173 @@
+"""The ``Policy`` protocol: placement from (ready × resources) score matrices.
+
+The paper's observation — developed further by Amaris et al.
+(arXiv:1711.06433) for generic heterogeneous policies and by Wu et al.
+(arXiv:1502.07451) for graph-partition/locality policies — is that HEFT and
+DADA are two instances of *one* mechanism: every placement decision is a
+function of per-(task × resource) completion-time and data-transfer scores.
+This module makes that mechanism the public extension point:
+
+  * :class:`Policy` — the structural protocol every scheduling policy
+    satisfies (the simulator only ever calls ``init`` / ``place`` and reads
+    the three class flags; ``score_matrix`` exposes the policy's scores for
+    introspection, benchmarks and the distribution bridge);
+  * :class:`ScoreMatrixPolicy` — a base class whose ``place`` is a generic
+    driver: emit one score matrix over the array-native core, assign each
+    task to its argmin resource (optionally load-aware, with ties broken by
+    earliest finish). New policies implement ``score_matrix`` only — see
+    ``docs/writing_a_policy.md`` for a worked 20-line example;
+  * :func:`assign_from_scores` — the pure scores → assignment kernel,
+    shared with ``repro.dist.sched_bridge`` (expert→group placement is the
+    same mechanism with a per-column capacity).
+
+HEFT / DADA keep their specialised ``place`` implementations (sequential
+EFT scan, λ binary search) for bit-for-bit compatibility with the frozen
+references, but expose their score matrices through the same method.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Protocol, Sequence, runtime_checkable
+
+import numpy as np
+
+from repro.core.simulator import Simulator, Strategy
+from repro.core.dag import Task
+
+
+@runtime_checkable
+class Policy(Protocol):
+    """Structural interface of a scheduling policy.
+
+    Any object with these members schedules: the legacy ``Strategy``
+    subclasses satisfy it unchanged, so ``isinstance(HEFT(), Policy)``
+    holds without inheritance.
+    """
+
+    name: str
+    allow_steal: bool
+    owner_lifo: bool
+
+    def init(self, sim: Simulator) -> None:
+        """Called once before the simulation starts."""
+
+    def place(self, sim: Simulator, ready: List[Task], src: Optional[int]) -> None:
+        """Place newly-ready tasks (the paper's *activate* operation)."""
+
+    def score_matrix(
+        self, sim: Simulator, ready: Sequence[Task]
+    ) -> Optional[np.ndarray]:
+        """(ready × resources) placement scores, lower = better; ``None``
+        for policies that do not score (e.g. work stealing)."""
+
+
+def assign_from_scores(
+    scores: np.ndarray,
+    *,
+    loads: Optional[np.ndarray] = None,
+    costs: Optional[np.ndarray] = None,
+    capacity: Optional[np.ndarray] = None,
+    order: Optional[Sequence[int]] = None,
+    return_loads: bool = False,
+):
+    """Greedy scores → assignment: the shared placement kernel.
+
+    Each item ``i`` (in ``order``, default given order) goes to the column
+    minimizing ``scores[i] + loads``; the chosen column's load then grows
+    by ``costs[i, j]`` (default: the score itself), so the driver is
+    load-aware whenever ``loads`` is supplied. ``capacity[j]`` bounds how
+    many items a column may take (the expert-placement use in
+    ``repro.dist.sched_bridge``). Ties go to the lowest column index
+    (numpy argmin first-occurrence) — deterministic by construction.
+
+    Returns the chosen column per item, in the items' original order
+    (plus the final per-column loads when ``return_loads``).
+    """
+    S = np.asarray(scores, dtype=np.float64)
+    n, m = S.shape
+    if order is None:
+        order = range(n)
+    # load-aware only when the caller supplies loads: without them the
+    # driver is a pure (capacity-masked) per-row argmin, no accumulation
+    live_loads = (
+        None if loads is None else np.asarray(loads, dtype=np.float64).copy()
+    )
+    remaining = None if capacity is None else np.asarray(capacity, dtype=np.int64).copy()
+    choice = np.empty(n, dtype=np.int64)
+    for i in order:
+        row = S[i] if live_loads is None else S[i] + live_loads
+        if remaining is not None:
+            row = np.where(remaining > 0, row, np.inf)
+        j = int(np.argmin(row))
+        if not np.isfinite(row[j]):
+            raise ValueError("assign_from_scores: no eligible column left")
+        choice[i] = j
+        if live_loads is not None:
+            live_loads[j] += costs[i, j] if costs is not None else S[i, j]
+        if remaining is not None:
+            remaining[j] -= 1
+    if return_loads:
+        if live_loads is None:
+            raise ValueError("return_loads requires loads")
+        return choice, live_loads
+    return choice
+
+
+def class_duration_matrix(sim: Simulator, tids: Sequence[int]) -> np.ndarray:
+    """(ready × resources) predicted durations from the cached per-class
+    vector predictors (two lookups on the paper machine, one per class)."""
+    cols = {}
+    out = np.empty((len(tids), len(sim.machine.resources)), dtype=np.float64)
+    for j, r in enumerate(sim.machine.resources):
+        col = cols.get(r.cls.name)
+        if col is None:
+            col = cols[r.cls.name] = sim.predictor(r.cls).times_list(list(tids))
+        out[:, j] = col
+    return out
+
+
+class ScoreMatrixPolicy(Strategy):
+    """Base class: placement driven entirely by :meth:`score_matrix`.
+
+    Subclasses emit one (ready × resources) score matrix per activation;
+    the generic driver assigns each task to its minimum-score resource.
+    With ``load_aware = True`` the driver adds the resources' predicted
+    backlog (``sim.load_ts`` relative to now) to every score, charges the
+    chosen resource the task's predicted duration, and keeps
+    ``sim.load_ts`` up to date — the same shared time-stamps HEFT/DADA
+    maintain (paper §2.3), so score policies compose with them.
+    """
+
+    allow_steal = False
+    owner_lifo = False
+    load_aware = False
+
+    def score_matrix(self, sim: Simulator, ready: Sequence[Task]) -> np.ndarray:
+        raise NotImplementedError
+
+    def place(self, sim: Simulator, ready: List[Task], src: Optional[int]) -> None:
+        tids = [t.tid for t in ready]
+        S = np.asarray(self.score_matrix(sim, ready), dtype=np.float64)
+        if S.shape != (len(ready), len(sim.machine.resources)):
+            raise ValueError(
+                f"{self.name}: score matrix shape {S.shape} != "
+                f"(ready={len(ready)}, resources={len(sim.machine.resources)})"
+            )
+        if self.load_aware:
+            now = sim.now
+            offsets = np.array(
+                [max(lt - now, 0.0) for lt in sim.load_ts], dtype=np.float64
+            )
+            dur = class_duration_matrix(sim, tids)
+            choice, loads = assign_from_scores(
+                S, loads=offsets, costs=dur, return_loads=True
+            )
+            # charge the placements into the shared completion time-stamps
+            # (paper §2.3) so interleaved strategies see the backlog
+            for j, load in enumerate(loads):
+                sim.load_ts[j] = now + float(load)
+            for i, t in enumerate(ready):
+                sim.push(t, int(choice[i]))
+        else:
+            choice = assign_from_scores(S)
+            for i, t in enumerate(ready):
+                sim.push(t, int(choice[i]))

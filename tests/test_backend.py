@@ -250,8 +250,11 @@ def test_min_wide_env(monkeypatch):
     assert jax_min_wide() == 32
     monkeypatch.setenv("REPRO_SCHED_JAX_MIN", "4")
     assert jax_min_wide() == 4
+    # malformed values now fail loudly at SchedConfig.from_env() instead
+    # of silently falling back to the default deep inside the backend
     monkeypatch.setenv("REPRO_SCHED_JAX_MIN", "junk")
-    assert jax_min_wide() == 32
+    with pytest.raises(ValueError, match="REPRO_SCHED_JAX_MIN"):
+        jax_min_wide()
 
 
 def test_missing_jax_falls_back_with_warning(monkeypatch):

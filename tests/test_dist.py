@@ -6,16 +6,6 @@ import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
-pytest.importorskip(
-    "repro.dist.elastic", reason="repro.dist.elastic not implemented yet"
-)
-pytest.importorskip(
-    "repro.dist.sched_bridge", reason="repro.dist.sched_bridge not implemented yet"
-)
-pytest.importorskip(
-    "repro.dist.straggler", reason="repro.dist.straggler not implemented yet"
-)
-
 from repro.configs.registry import get_config
 from repro.dist.elastic import choose_mesh_shape, replan
 from repro.dist.sched_bridge import (

@@ -8,11 +8,6 @@ from pathlib import Path
 
 import pytest
 
-# repro.launch.dryrun needs the full sharding rule set, not just hints
-pytest.importorskip(
-    "repro.dist.sharding", reason="repro.dist.sharding not implemented yet"
-)
-
 REPO = Path(__file__).resolve().parents[1]
 
 

@@ -5,10 +5,6 @@ import jax.numpy as jnp
 import pytest
 from jax.sharding import PartitionSpec as P
 
-pytest.importorskip(
-    "repro.dist.sharding", reason="repro.dist.sharding not implemented yet"
-)
-
 from repro.configs.registry import get_config
 from repro.configs.shapes import SHAPES
 from repro.dist.sharding import batch_specs, cache_specs, opt_specs, param_specs
