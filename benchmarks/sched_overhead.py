@@ -7,7 +7,12 @@ cost along two axes:
 
   * **whole-sim throughput** — for each strategy × backend it runs seeded
     simulations of the paper-shaped kernels (NT from ``REPRO_BENCH_NT``)
-    and reports wall-clock, simulator events/sec and tasks/sec;
+    and reports wall-clock, simulator events/sec and tasks/sec. Two extra
+    row families gate the layered runtime: a **capacity-bounded** pass
+    (32 MB device memories, affinity eviction — the eviction/write-back/
+    pressure path) and a **multi-graph streaming** row (four tenant DAGs
+    interleaving on one ``repro.runtime.Engine``, with per-graph
+    makespans);
   * **λ-probe placement** — one wide ready wave of an NT=64 Cholesky on
     the 32-resource scaled machine, timed through ``DADA.place`` per
     backend: this is the (ready × resources × λ-probes) scoring kernel the
@@ -102,6 +107,14 @@ def available_backends() -> list:
 # whole-simulation throughput
 
 
+_MB = 1024 * 1024
+# eviction-path row: device memories bounded to 32 MB (heavy pressure on
+# the NT=16 trace), affinity victim selection — regression-gates the
+# capacity-bounded engine path (memory manager + pressure scoring)
+CAPACITY_ROW_BYTES = 32 * _MB
+CAPACITY_ROW_STRATEGIES = ("heft", "dada(a)+cp")
+
+
 def whole_sim_rows(nts, n_gpus: int, n_runs: int, backends) -> list:
     rows = []
     for nt in nts:
@@ -109,10 +122,22 @@ def whole_sim_rows(nts, n_gpus: int, n_runs: int, backends) -> list:
         for kernel, gfac in graphs_for(nt).items():
             # graph construction excluded: we are measuring the scheduler
             graphs = [gfac() for _ in range(n_runs)]
-            passes = [("none", BACKEND_FREE_STRATEGIES)] + [
-                (backend, strategies(backend)) for backend in backends
+            passes = [("none", 0, BACKEND_FREE_STRATEGIES)] + [
+                (backend, 0, strategies(backend)) for backend in backends
             ]
-            for backend, strats in passes:
+            if kernel == "cholesky":
+                # the eviction path, measured once per NT on the numpy
+                # scoring path (jax engages only on wide activations)
+                passes.append((
+                    "numpy",
+                    CAPACITY_ROW_BYTES,
+                    {
+                        label: sfac
+                        for label, sfac in strategies("numpy").items()
+                        if label in CAPACITY_ROW_STRATEGIES
+                    },
+                ))
+            for backend, capacity, strats in passes:
                 for label, sfac in strats.items():
                     # best-of-2 passes: a transient stall (noisy neighbor,
                     # cgroup throttle) during one pass must not record a
@@ -122,7 +147,10 @@ def whole_sim_rows(nts, n_gpus: int, n_runs: int, backends) -> list:
                         events = tasks = 0
                         t0 = time.perf_counter()
                         for i, g in enumerate(graphs):
-                            sim = Simulator(g, machine, sfac(), seed=1234 + i)
+                            sim = Simulator(
+                                g, machine, sfac(), seed=1234 + i,
+                                mem_capacity=capacity, eviction="affinity",
+                            )
                             res = sim.run()
                             events += res.n_events
                             tasks += len(g)
@@ -130,19 +158,77 @@ def whole_sim_rows(nts, n_gpus: int, n_runs: int, backends) -> list:
                     us = dt / n_runs * 1e6
                     row = dict(
                         kernel=kernel, strategy=label, backend=backend,
-                        nt=nt, n_gpus=n_gpus, runs=n_runs,
+                        nt=nt, n_gpus=n_gpus, runs=n_runs, capacity=capacity,
                         wall_s=round(dt, 4), events=events,
                         events_per_s=round(events / dt, 1) if dt > 0 else 0.0,
                         tasks_per_s=round(tasks / dt, 1) if dt > 0 else 0.0,
                     )
                     rows.append(row)
+                    cap_tag = f"/cap{capacity // _MB}MB" if capacity else ""
                     print(
                         f"sched_overhead/{kernel}/{label}/gpus{n_gpus}/"
-                        f"nt{nt}/{backend},{us:.1f},"
+                        f"nt{nt}/{backend}{cap_tag},{us:.1f},"
                         f"events_per_s={row['events_per_s']};"
                         f"tasks_per_s={row['tasks_per_s']}"
                     )
     return rows
+
+
+# ---------------------------------------------------------------------------
+# multi-graph streaming throughput
+
+
+def streaming_rows(nt: int, n_gpus: int, n_runs: int, n_graphs: int = 4) -> list:
+    """Aggregate events/sec of ``n_graphs`` Cholesky DAGs interleaving on
+    one engine (two tenants at t=0, the rest streamed in mid-run), plus
+    per-graph makespans — the multi-tenant serving shape the layered
+    runtime exists for."""
+    from repro.runtime import Engine
+
+    machine = machine_for(n_gpus)
+    gfac = graphs_for(nt)["cholesky"]
+    graph_sets = [
+        [gfac() for _ in range(n_graphs)] for _ in range(n_runs)
+    ]
+    sfac = partial(resolve, "dada?alpha=0.5&use_cp=1", backend="numpy")
+    dt = float("inf")
+    per_run = []
+    for _rep in range(2):
+        events = tasks = 0
+        per_run = []  # deterministic per seed: reps reproduce the same values
+        t0 = time.perf_counter()
+        for i, graphs in enumerate(graph_sets):
+            eng = Engine(machine, sfac(), seed=1234 + i)
+            for k, g in enumerate(graphs):
+                # stagger half the tenants into the live run
+                eng.submit(g, at=None if k < 2 else 0.002 * k)
+            results = eng.run()
+            events += eng.n_events
+            tasks += sum(len(g) for g in graphs)
+            per_run.append([r.makespan for r in results])
+        dt = min(dt, time.perf_counter() - t0)
+    import statistics
+
+    # per-graph makespans summarized across every seeded run (a regression
+    # visible only under one seed must not be masked by the last run)
+    per_graph = [
+        round(statistics.median(run[k] for run in per_run), 5)
+        for k in range(n_graphs)
+    ]
+    row = dict(
+        kernel=f"cholesky-x{n_graphs}stream", strategy="dada(a)+cp",
+        backend="numpy", nt=nt, n_gpus=n_gpus, runs=n_runs, capacity=0,
+        n_graphs=n_graphs, wall_s=round(dt, 4), events=events,
+        events_per_s=round(events / dt, 1) if dt > 0 else 0.0,
+        tasks_per_s=round(tasks / dt, 1) if dt > 0 else 0.0,
+        per_graph_makespans=per_graph,
+    )
+    print(
+        f"sched_overhead/{row['kernel']}/dada(a)+cp/gpus{n_gpus}/nt{nt}/numpy,"
+        f"{dt / n_runs * 1e6:.1f},events_per_s={row['events_per_s']};"
+        f"per_graph_makespans={per_graph}"
+    )
+    return [row]
 
 
 # ---------------------------------------------------------------------------
@@ -296,6 +382,8 @@ def main() -> list:
 
     print("name,us_per_call,derived")
     rows = whole_sim_rows(nts, n_gpus, n_runs, backends)
+    if nts:  # REPRO_BENCH_NT="" is a valid empty sweep
+        rows += streaming_rows(nts[0], n_gpus, n_runs)
     total_ev = sum(r["events"] for r in rows)
     total_s = sum(r["wall_s"] for r in rows)
     if total_s > 0:

@@ -1,0 +1,65 @@
+"""Multi-tenant streaming: several task DAGs interleaving on one machine.
+
+The layered runtime (``repro.runtime.Engine``) accepts task graphs before
+*and during* a run — ``submit(graph, at=...)`` posts the arrival as an
+event — so many tenant DAGs share the workers, links and (optionally
+capacity-bounded) device memories of one machine, each getting its own
+per-graph makespan and interval timeline.
+
+Run:  PYTHONPATH=src python examples/multi_graph_stream.py
+"""
+from repro.configs.paper_machine import paper_machine
+from repro.linalg.cholesky import cholesky_graph
+from repro.linalg.lu import lu_graph
+from repro.linalg.qr import qr_graph
+from repro.runtime import Engine
+from repro.sched import resolve
+
+MB = 1024 * 1024
+
+machine = paper_machine(n_gpus=4)
+
+# Two tenants are queued at t=0; three more stream in while the machine is
+# busy. Device memories are capacity-bounded, so tenants also contend for
+# GPU memory and the affinity evictor earns its keep.
+TENANTS = [
+    ("cholesky-16", cholesky_graph(16, 256, with_fns=False), None),
+    ("lu-12", lu_graph(12, 256, with_fns=False), None),
+    ("qr-10", qr_graph(10, 256, with_fns=False), 0.02),
+    ("cholesky-12", cholesky_graph(12, 256, with_fns=False), 0.04),
+    ("lu-8", lu_graph(8, 256, with_fns=False), 0.06),
+]
+
+engine = Engine(
+    machine,
+    resolve("dada?alpha=0.5&use_cp=1"),
+    seed=0,
+    mem_capacity=64 * MB,
+    eviction="affinity",
+)
+for name, graph, at in TENANTS:
+    ctx = engine.submit(graph, at=at)
+    arrival = f"t={at:.2f}s" if at is not None else "t=0 (queued)"
+    print(f"submitted {name:12s} {len(graph):4d} tasks, arrives {arrival}")
+
+results = engine.run()
+
+print(f"\n{'tenant':12s} {'arrive':>7s} {'finish':>7s} {'makespan':>9s} {'gflops':>7s}")
+for (name, graph, _), res in zip(TENANTS, results):
+    print(
+        f"{name:12s} "
+        f"{(res.intervals[0].start if res.intervals else 0):7.3f} "
+        f"{max(iv.end for iv in res.intervals):7.3f} "
+        f"{res.makespan:9.4f} {res.gflops:7.1f}"
+    )
+print(
+    f"\nmachine totals: {engine.n_events} events, "
+    f"{engine.total_bytes / 1e9:.2f} GB moved, "
+    f"{engine.metrics.n_evictions} evictions "
+    f"({engine.metrics.writeback_bytes / 1e6:.1f} MB written back)"
+)
+assert all(
+    sorted(iv.tid for iv in r.intervals) == list(range(len(t[1])))
+    for r, t in zip(results, TENANTS)
+), "every tenant task must run exactly once"
+print("OK")

@@ -27,7 +27,10 @@ from .machine import (
 )
 from .perfmodel import ClassPredictor, HistoryPerfModel, Residency, TransferModel
 from .simulator import SimResult, Simulator, Strategy
-from .worksteal import WorkSteal
+
+# WorkSteal is the queue protocol itself and lives with it in the layered
+# runtime (repro.runtime.queues); re-exported here unchanged
+from repro.runtime.queues import WorkSteal
 
 # importing the policy package last (it imports the strategy classes
 # above) registers the built-in policies and attaches the score_matrix

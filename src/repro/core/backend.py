@@ -330,8 +330,15 @@ class JaxScoringBackend:
         use_cp: bool = False,
         affinity: Optional[str] = None,
         x_rows: bool = False,
+        x_bias: Optional[np.ndarray] = None,
     ) -> Optional[dict]:
         """Fused (ready × resources) scoring matrices.
+
+        ``x_bias`` (optional, capacity-bounded memories): an additive
+        (n × resources) penalty — predicted eviction seconds — folded
+        into the transfer matrix on device before ``C`` / ``X`` / the
+        per-row maxima are derived, so jax scores stay bit-equal to the
+        numpy path's ``x + bias`` fold.
 
         Returns ``{"C": list rows|None, "C_np": array|None, "C_dev":
         device array|None, "X_np": array|None, "X_rowmax": list|None,
@@ -364,6 +371,12 @@ class JaxScoringBackend:
         want_s = aff_src is not None
         if not (want_x or want_s or p_cpu is not None):
             return None
+        want_bias = want_x and x_bias is not None
+        if want_bias:
+            bias = np.zeros((n_pad, len(resources)), dtype=np.float64)
+            bias[:n] = x_bias
+        else:
+            bias = np.zeros((1, 1), dtype=np.float64)
 
         if want_x:
             r_indptr, r_ids, r_sizes = arr.gather_csr(
@@ -403,7 +416,7 @@ class JaxScoringBackend:
             pc = pg = np.zeros(n_pad, dtype=np.float64)
 
         key = (n_pad, r_pad, w_pad, len(uniq), len(resources),
-               want_x, bool(x_rows), want_s, want_c, accel_only)
+               want_x, bool(x_rows), want_s, want_c, accel_only, want_bias)
         fn = self._matrix_fns.get(key)
         if fn is None:
             fn = self._build_matrix_fn(key)
@@ -411,7 +424,7 @@ class JaxScoringBackend:
         C, X, X_max, S = fn(
             jnp.asarray(read_masks), jnp.asarray(read_sizes),
             jnp.asarray(write_masks), jnp.asarray(write_weights),
-            jnp.asarray(pc), jnp.asarray(pg),
+            jnp.asarray(pc), jnp.asarray(pg), jnp.asarray(bias),
             mach["mem_shift"], mach["col_bits"], mach["host_col"],
             mach["col_of"], mach["accel_res"],
             jnp.float64(mach["latency"]), jnp.float64(mach["bandwidth"]),
@@ -432,12 +445,12 @@ class JaxScoringBackend:
 
     def _build_matrix_fn(self, key):
         (n_pad, r_pad, w_pad, n_u, n_res,
-         want_x, x_rows, want_s, want_c, accel_only) = key
+         want_x, x_rows, want_s, want_c, accel_only, want_bias) = key
         jax, jnp = self.jax, self.jnp
         pallas_mode = self.pallas_mode
 
         def fn(read_masks, read_sizes, write_masks, write_weights,
-               p_cpu, p_gpu, mem_shift, col_bits, host_col, col_of,
+               p_cpu, p_gpu, x_bias, mem_shift, col_bits, host_col, col_of,
                accel_res, latency, bandwidth):
             X_res = None
             X_max = None
@@ -468,6 +481,11 @@ class JaxScoringBackend:
                         read_masks, per_read, mem_shift, host_col
                     )
                 X_res = X_u[:, col_of]
+                if want_bias:
+                    # memory-pressure penalty: the same host-computed
+                    # addend the numpy path folds, applied before C and
+                    # the per-row maxima derive from X
+                    X_res = X_res + x_bias
                 if not x_rows:
                     # max is order-independent: equals max(row) on host
                     X_max = jnp.max(X_res, axis=1)

@@ -102,6 +102,13 @@ class DADA(ScoringBackendMixin, Strategy):
             p_cpu = sim.predictor(cpu_cls).times_list(tids)
             p_gpu = sim.predictor(gpu_cls).times_list(tids)
 
+        # memory-pressure penalty under +CP (capacity-bounded memories):
+        # predicted eviction seconds folded into the transfer matrix on
+        # the numpy and jax scoring paths alike
+        from repro.runtime.memory import fold_pressure, pressure_rows_for
+
+        P = pressure_rows_for(sim, tids, resources) if self.use_cp else None
+
         # accelerated fused scoring (wide activations, jax backend): C, X
         # and the affinity matrix come out of one jitted dispatch, bit-equal
         # to the numpy formulas below
@@ -113,6 +120,7 @@ class DADA(ScoringBackendMixin, Strategy):
                 p_cpu=p_cpu, p_gpu=p_gpu,
                 use_cp=self.use_cp,
                 affinity=self.affinity_name if self.alpha > 0.0 else None,
+                x_bias=P,
             )
         use_backend_search = fused is not None
 
@@ -120,8 +128,11 @@ class DADA(ScoringBackendMixin, Strategy):
             X = None  # worst-case transfer bound: fused["X_rowmax"] below
             C_rows = fused["C"]
         elif self.use_cp:
-            X = sim.transfer_model.task_input_transfer_rows(
-                sim.arrays, tids, [r.mem for r in resources], sim.residency
+            X = fold_pressure(
+                sim.transfer_model.task_input_transfer_rows(
+                    sim.arrays, tids, [r.mem for r in resources], sim.residency
+                ),
+                P,
             )
         else:
             X = None

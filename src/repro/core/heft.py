@@ -82,12 +82,19 @@ class HEFT(ScoringBackendMixin, Strategy):
                 cls_times[r.cls.name] = col
             cols.append(col)
 
+        # memory-pressure penalty (capacity-bounded memories only):
+        # predicted eviction seconds folded into the transfer matrix, on
+        # the numpy and jax scoring paths alike
+        from repro.runtime.memory import fold_pressure, pressure_rows_for
+
+        P = pressure_rows_for(sim, tids, resources)
+
         # accelerated path (wide activations, jax backend): fused transfer
         # matrix + jitted sequential EFT scan, bit-identical placements
         be = self._scoring_backend()
         if be is not None and n >= be.min_wide:
             fused = be.score_matrices(
-                sim, tids, resources, use_cp=True, x_rows=True
+                sim, tids, resources, use_cp=True, x_rows=True, x_bias=P
             )
             if fused is not None:
                 load_ts = sim.load_ts
@@ -102,8 +109,11 @@ class HEFT(ScoringBackendMixin, Strategy):
                     sim.push(ready[i], rid)
                 return
 
-        X = sim.transfer_model.task_input_transfer_rows(
-            sim.arrays, tids, [r.mem for r in resources], sim.residency
+        X = fold_pressure(
+            sim.transfer_model.task_input_transfer_rows(
+                sim.arrays, tids, [r.mem for r in resources], sim.residency
+            ),
+            P,
         )
 
         # --- worker selection: earliest finish time ----------------------

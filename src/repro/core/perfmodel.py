@@ -336,6 +336,11 @@ class Residency:
         self.mask_list: Optional[List[int]] = None
         self._sizes: Optional[List[int]] = None
         self._resident_bytes: List[int] = [0] * (_MAX_MEM + 2)
+        # optional mask-change callback ``(did, name, old, new)`` —
+        # installed by the capacity-bounded memory layer
+        # (repro.runtime.memory) to mirror residency into its per-memory
+        # LRU/accounting; None (the default) keeps the hot paths untouched
+        self.observer = None
 
     # ------------------------------------------------------------------
     def attach(self, arr: GraphArrays) -> None:
@@ -382,6 +387,8 @@ class Residency:
                     else:
                         rb[idx] -= size
                     changed ^= low
+                if self.observer is not None:
+                    self.observer(did, name, old, new)
 
     # ------------------------------------------------------------------
     def is_resident(self, name: str, mem: int) -> bool:
@@ -443,6 +450,18 @@ class Residency:
             else:
                 rb[idx] -= size
             changed ^= low
+        if self.observer is not None:
+            self.observer(did, name, old, new_mask)
+
+    def drop_copy(self, name: str, mem: int) -> None:
+        """Invalidate the copy of ``name`` at ``mem`` (eviction support).
+
+        The inverse of :meth:`add_copy`: clears one residency bit, leaving
+        any other valid copies untouched. A no-op when no copy is there.
+        """
+        if not -1 <= mem <= _MAX_MEM:
+            raise ValueError(f"memory id {mem} outside supported range")
+        self._set_mask(name, self._mask.get(name, 0) & ~(1 << (mem + 1)))
 
     def initialize(self, names: Iterable[str], mem: int) -> None:
         for n in names:

@@ -1,99 +1,39 @@
-"""Event-driven XKaapi-like runtime simulator.
+"""The single-graph simulation facade over :class:`repro.runtime.Engine`.
 
-Reproduces the paper's execution flow (§2.1-2.2):
-  * each worker owns a local ready-queue (pop / push / steal),
-  * completing a task triggers ``activate`` on its newly-ready successors —
-    this is where the scheduling strategy runs,
-  * idle workers emit steal requests to a randomly selected victim (enabled
-    per strategy; HEFT/DADA place every ready task explicitly),
-  * transfers to/from accelerator memories are prefetched when a task is
-    pushed, overlap with computation, and contend on shared PCIe-switch
-    links (FIFO per link group),
-  * the runtime observes real (noisy) durations and feeds the history-based
-    performance model, which therefore calibrates online (§2.3).
+Historically this module *was* the runtime — a 460-line monolith holding
+the event loop, the worker queues, the transfer machinery, the metrics and
+the steal protocol. Those layers now live in :mod:`repro.runtime`
+(``events`` / ``queues`` / ``transfers`` / ``memory`` / ``engine`` /
+``metrics``); :class:`Simulator` remains the stable single-graph surface:
+construct with one graph, ``run()`` one :class:`SimResult`.
 
-Determinism: all randomness flows through one seeded numpy Generator.
-
-Hot paths run against the graph's structure-of-arrays view
-(``TaskGraph.arrays()``): per-task read/write lists are prebuilt instead of
-re-deriving tuples from ``Task.accesses``, residency tests are bitmask
-ops, in-flight transfers are indexed per data name (write invalidation is
-O(copies) instead of O(all in-flight keys)), and strategies get cached
-per-class vectorized predictions via :meth:`Simulator.predictor`.
+With capacity unbounded (the default) a ``Simulator`` run is bit-for-bit
+identical to the pre-decomposition simulator — same event order, same
+seeded stream consumption, same IEEE operation order — which is what the
+equivalence suites against ``repro.core._reference`` enforce. Capacity
+limits and eviction (``REPRO_SCHED_MEM_CAPACITY`` /
+``REPRO_SCHED_EVICTION`` or the ``mem_capacity=`` / ``eviction=``
+arguments) and stale-transfer cancellation (``REPRO_SCHED_CANCEL_STALE``)
+are opt-in; multi-graph streaming is the engine's own surface
+(``Engine.submit``).
 """
 from __future__ import annotations
 
-import heapq
-from collections import deque
-from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Optional
 
-import numpy as np
+from repro.runtime.engine import Engine, GraphContext, Strategy
+from repro.runtime.metrics import ScheduledInterval, SimResult
 
-from .dag import GraphArrays, Task, TaskGraph
-from .machine import HOST_MEM, MachineModel, ResourceClass
-from .perfmodel import ClassPredictor, HistoryPerfModel, Residency, TransferModel
+from .dag import TaskGraph
+from .machine import MachineModel
+from .perfmodel import TransferModel
 
-
-@dataclass(slots=True)
-class ScheduledInterval:
-    tid: int
-    rid: int
-    start: float
-    end: float
+__all__ = ["ScheduledInterval", "SimResult", "Simulator", "Strategy"]
 
 
-@dataclass
-class SimResult:
-    makespan: float
-    total_bytes: int
-    n_transfers: int
-    n_steals: int
-    busy: Dict[int, float]
-    intervals: List[ScheduledInterval]
-    strategy: str
-    total_flops: float
-    n_events: int = 0
+class Simulator(Engine):
+    """One task graph on one machine: the paper's simulation setup."""
 
-    @property
-    def gflops(self) -> float:
-        if self.makespan <= 0:
-            return 0.0
-        return self.total_flops / self.makespan / 1e9
-
-    @property
-    def gbytes(self) -> float:
-        return self.total_bytes / 1e9
-
-
-class Strategy:
-    """Scheduling strategy interface: placement happens in ``activate``."""
-
-    name = "base"
-    allow_steal = False
-    owner_lifo = False
-
-    def init(self, sim: "Simulator") -> None:  # pragma: no cover - default
-        pass
-
-    def place(
-        self, sim: "Simulator", ready: List[Task], src: Optional[int]
-    ) -> None:  # pragma: no cover - interface
-        raise NotImplementedError
-
-
-class _Worker:
-    __slots__ = ("rid", "queue", "running", "run_start", "blocked_on")
-
-    def __init__(self, rid: int) -> None:
-        self.rid = rid
-        self.queue: deque = deque()
-        self.running: Optional[Task] = None
-        self.run_start: float = 0.0
-        self.blocked_on: int = 0  # pending input transfers for head task
-
-
-class Simulator:
     def __init__(
         self,
         graph: TaskGraph,
@@ -103,359 +43,49 @@ class Simulator:
         noise: float = 0.03,
         transfer_model: Optional[TransferModel] = None,
         config=None,
+        mem_capacity: Optional[int] = None,
+        eviction: Optional[str] = None,
+        cancel_stale: Optional[bool] = None,
     ) -> None:
-        self.graph = graph
-        self.arrays: GraphArrays = graph.arrays()
-        self.machine = machine
-        self.strategy = strategy
-        # the typed scheduling configuration (repro.sched.SchedConfig);
-        # resolved lazily from the environment when not supplied, so
-        # strategies and instrumentation read sim.config instead of
-        # scattering os.environ lookups through hot paths
-        self._config = config
-        self.rng = np.random.default_rng(seed)
-        self.noise = noise
-        # One multiplicative noise factor per task (each task executes
-        # exactly once), drawn as a single batched normal at startup.
-        # NOTE: this consumes the seeded stream in tid order rather than
-        # execution order (the pre-vectorization simulator drew per task at
-        # start time), so seeded results differ numerically from pre-PR-1
-        # runs — a deliberate trade recorded in CHANGES.md. Equivalence
-        # guarantees are against repro.core._reference under THIS stream.
-        if noise > 0 and len(graph) > 0:
-            self._noise_mult = np.exp(
-                self.rng.normal(0.0, noise, size=len(graph))
-            ).tolist()
-        else:
-            self._noise_mult = None
-        self.model = HistoryPerfModel()
-        self.transfer_model = transfer_model or TransferModel(
-            bandwidth=machine.link.bandwidth, latency=machine.link.latency
+        super().__init__(
+            machine,
+            strategy,
+            seed=seed,
+            noise=noise,
+            transfer_model=transfer_model,
+            config=config,
+            mem_capacity=mem_capacity,
+            eviction=eviction,
+            cancel_stale=cancel_stale,
         )
-        self.residency = Residency()
-        self.residency.attach(self.arrays)
-        # all application data starts in host memory (paper setup)
-        self.residency.initialize(self.arrays.data_names, HOST_MEM)
-
-        self.now = 0.0
-        self._events: List[Tuple[float, int, str, Any]] = []
-        self._seq = 0
-        self.workers = [_Worker(r.rid) for r in machine.resources]
-        # shared predicted-completion time-stamps (paper §2.3)
-        self.load_ts = [0.0] * len(self.workers)
-        self._n_unfinished_preds = [
-            len(graph.pred[t.tid]) for t in graph.tasks
-        ]
-        self._succ = [graph.succ[t.tid] for t in graph.tasks]
-        self._done = [False] * len(graph)
-        self._start_times: Dict[int, float] = {}
-        # in-flight transfers indexed per data name: name -> {dst_mem: done_t}
-        self._inflight: Dict[str, Dict[int, float]] = {}
-        self._link_free: Dict[int, float] = {}
-        self._waiting: Dict[Tuple[str, int], List[int]] = {}  # -> worker rids
-        # accelerator memory -> link group (first resource on that memory)
-        self._mem_link: Dict[int, Optional[int]] = {}
-        for r in machine.resources:
-            if r.is_accelerator:
-                self._mem_link.setdefault(r.mem, r.link)
-        # inlined link timing (hot path); only valid for a plain LinkModel
-        from .machine import LinkModel as _LM
-
-        self._plain_link = type(machine.link) is _LM
-        self._link_lat = machine.link.latency
-        self._link_bw = machine.link.bandwidth
-        # per-rid memory space / resource class (avoids by_id() in hot paths)
-        self._mem_of = [r.mem for r in machine.resources]
-        self._bit_of = [1 << (r.mem + 1) for r in machine.resources]
-        self._steal_on = strategy.allow_steal
-        self._lifo = strategy.owner_lifo
-        # per-resource-class vectorized predictors (lazy)
-        self._predictors: Dict[str, ClassPredictor] = {}
-        # per-rid ground-truth static durations (flops/rate, 1e-7 floor)
-        self._rid_static = [
-            self.predictor(r.cls).static_list for r in machine.resources
-        ]
-        # metrics
-        self.total_bytes = 0
-        self.n_transfers = 0
-        self.n_steals = 0
-        self.n_events = 0
-        self.busy = {r.rid: 0.0 for r in machine.resources}
-        self.intervals: List[ScheduledInterval] = []
-        self._n_done = 0
+        self._primary: GraphContext = self.submit(graph)
+        # legacy aliases (instrumentation and benchmarks reset these
+        # between measured placements)
+        self._inflight = self._primary.inflight
+        self._waiting = self._primary.waiting
 
     # ------------------------------------------------------------------
-    @property
-    def config(self):
-        """The active ``repro.sched.SchedConfig`` for this simulation."""
-        if self._config is None:
-            from repro.sched.config import current_config
-
-            self._config = current_config()
-        return self._config
-
-    # ------------------------------------------------------------------
-    def predictor(self, cls: ResourceClass) -> ClassPredictor:
-        """Cached vectorized HistoryPerfModel.predict for ``cls``."""
-        p = self._predictors.get(cls.name)
-        if p is None:
-            p = ClassPredictor(self.model, cls, self.arrays)
-            self._predictors[cls.name] = p
-        return p
-
-    # ------------------------------------------------------------------
-    # event plumbing
-    def _post(self, t: float, kind: str, payload: Any) -> None:
-        self._seq += 1
-        heapq.heappush(self._events, (t, self._seq, kind, payload))
-
-    # ------------------------------------------------------------------
-    # transfers
-    def _gpu_link_group(self, mem: int) -> Optional[int]:
-        return self._mem_link.get(mem)
-
-    def _one_hop(self, nbytes: int, group: Optional[int], t: float) -> float:
-        """Serialize the transfer on its link group (FIFO = shared bandwidth)."""
-        start = max(t, self._link_free.get(group, 0.0)) if group is not None else t
-        if self._plain_link:
-            dur = 0.0 if nbytes <= 0 else self._link_lat + nbytes / self._link_bw
-        else:
-            dur = self.machine.link.time(nbytes)
-        done = start + dur
-        if group is not None:
-            self._link_free[group] = done
-        self.total_bytes += nbytes
-        self.n_transfers += 1
-        return done
-
-    def request_transfer(self, name: str, size: int, dst_mem: int) -> Optional[float]:
+    def request_transfer(self, name: str, size: int, dst_mem: int):
         """Ensure a valid copy of ``name`` will exist at ``dst_mem``.
 
         Returns the completion time, or None if already resident.
         """
-        mask = self.residency._mask.get(name, 0)
-        if mask & (1 << (dst_mem + 1)):
-            return None  # already resident
-        flights = self._inflight.get(name)
-        if flights is not None:
-            done = flights.get(dst_mem)
-            if done is not None:
-                return done
-        if mask == 0:
-            raise RuntimeError(f"no valid copy of {name} anywhere")
-        t = self.now
-        mem_link = self._mem_link
-        if (mask & 1) and dst_mem != HOST_MEM:
-            # a host copy exists: single host->device hop
-            done = self._one_hop(size, mem_link.get(dst_mem), t)
-        elif dst_mem == HOST_MEM:
-            src = (mask & -mask).bit_length() - 2  # lowest-numbered location
-            done = self._one_hop(size, mem_link.get(src), t)
-        else:
-            # GPU -> host -> GPU (two hops, paper-era PCIe path)
-            src = (mask & -mask).bit_length() - 2
-            if flights is not None and HOST_MEM in flights:
-                mid = flights[HOST_MEM]
-            else:
-                mid = self._one_hop(size, mem_link.get(src), t)
-                if flights is None:
-                    flights = self._inflight[name] = {}
-                flights[HOST_MEM] = mid
-                self._post(mid, "xfer", (name, HOST_MEM))
-            done = self._one_hop(size, mem_link.get(dst_mem), mid)
-        if flights is None:
-            flights = self._inflight[name] = {}
-        flights[dst_mem] = done
-        self._post(done, "xfer", (name, dst_mem))
-        return done
-
-    def _prefetch(self, task: Task, rid: int) -> None:
-        mem = self._mem_of[rid]
-        bit = self._bit_of[rid]
-        mask_list = self.residency.mask_list
-        inflight = self._inflight
-        for did, name, size in self.arrays.task_reads[task.tid]:
-            if not mask_list[did] & bit:
-                fl = inflight.get(name)
-                if fl is None or mem not in fl:
-                    self.request_transfer(name, size, mem)
-
-    # ------------------------------------------------------------------
-    # queue operations (pop / push / steal)
-    def push(self, task: Task, rid: int) -> None:
-        """Push ``task`` onto worker ``rid``'s queue (any worker may push
-        into any other worker's queue, §2.2)."""
-        w = self.workers[rid]
-        w.queue.append(task)
-        self._prefetch(task, rid)
-        self._try_start(w)
-
-    def _steal(self, thief: _Worker) -> bool:
-        # Eligible victims: a backlog of >=2, or >=1 while actually running.
-        # (A lone task whose transfers are in flight is not stolen — the
-        # copy is already on its way to the victim's memory.)
-        victims = [
-            w
-            for w in self.workers
-            if w.rid != thief.rid
-            and (len(w.queue) >= 2 or (len(w.queue) >= 1 and w.running is not None))
-        ]
-        if not victims:
-            return False
-        v = victims[int(self.rng.integers(len(victims)))]
-        task = v.queue.popleft()  # thief takes the oldest task
-        self.n_steals += 1
-        thief.queue.append(task)
-        self._prefetch(task, thief.rid)
-        return True
-
-    # ------------------------------------------------------------------
-    def _try_start(self, w: _Worker) -> None:
-        if w.running is not None or not w.queue:
-            return
-        rid = w.rid
-        task = w.queue[-1] if self._lifo else w.queue[0]
-        # make sure inputs are (going to be) resident
-        mem = self._mem_of[rid]
-        bit = self._bit_of[rid]
-        mask_list = self.residency.mask_list
-        inflight = self._inflight
-        missing = 0
-        for did, name, size in self.arrays.task_reads[task.tid]:
-            if not mask_list[did] & bit:
-                fl = inflight.get(name)
-                if fl is None or mem not in fl:
-                    self.request_transfer(name, size, mem)
-                self._waiting.setdefault((name, mem), []).append(rid)
-                missing += 1
-        if missing:
-            w.blocked_on = missing
-            return
-        # pop + execute
-        if self._lifo:
-            w.queue.pop()
-        else:
-            w.queue.popleft()
-        w.blocked_on = 0
-        tid = task.tid
-        # ground-truth duration: per-rid static flops/rate (the predictor's
-        # cached vector, identical to cls.exec_time incl. the 1e-7 floor)
-        # times the task's seeded noise factor
-        dur = self._rid_static[rid][tid]
-        if self._noise_mult is not None:
-            dur *= self._noise_mult[tid]
-        w.running = task
-        w.run_start = self.now
-        self._seq += 1
-        heapq.heappush(self._events, (self.now + dur, self._seq, "done", (rid, tid, dur)))
-
-    # ------------------------------------------------------------------
-    def _complete(self, rid: int, tid: int, dur: float) -> None:
-        w = self.workers[rid]
-        res = self.machine.resources[rid]
-        task = self.graph.tasks[tid]
-        w.running = None
-        self._done[tid] = True
-        self._n_done += 1
-        self.busy[rid] += dur
-        self.intervals.append(ScheduledInterval(tid, rid, w.run_start, self.now))
-        self.model.observe(task, res.cls, dur)
-        bit = self._bit_of[rid]
-        write_id = self.residency.write_id
-        inflight_pop = self._inflight.pop
-        for did, name, size in self.arrays.task_writes[tid]:
-            write_id(did, name, bit)
-            # invalidate any stale dedup entries for this data (O(1): the
-            # in-flight table is indexed per data name)
-            inflight_pop(name, None)
-        # load time-stamp correction (§2.3: runtime corrects predictions)
-        if not w.queue:
-            self.load_ts[rid] = self.now
-
-        newly_ready: List[Task] = []
-        preds = self._n_unfinished_preds
-        tasks = self.graph.tasks
-        for s in self._succ[tid]:
-            preds[s] -= 1
-            if preds[s] == 0:
-                newly_ready.append(tasks[s])
-        if newly_ready:
-            # the *activate* operation — where scheduling decisions happen
-            self.strategy.place(self, newly_ready, rid)
-        self._try_start(w)
-        if self._steal_on:
-            self._steal_round()
-
-    def _steal_round(self) -> None:
-        if not self.strategy.allow_steal:
-            return
-        progress = True
-        while progress:
-            progress = False
-            for w in self.workers:
-                if w.running is None and not w.queue:
-                    if self._steal(w):
-                        self._try_start(w)
-                        progress = True
+        return self.transfers.request(
+            self._primary, name, size, dst_mem, self.now
+        )
 
     # ------------------------------------------------------------------
     def run(self) -> SimResult:
-        self.strategy.init(self)
-        roots = self.graph.roots()
-        if roots:
-            self.strategy.place(self, roots, None)
-        self._steal_round()
-        events = self._events
-        heappop = heapq.heappop
-        inflight = self._inflight
-        add_copy = self.residency.add_copy
-        waiting = self._waiting
-        workers = self.workers
-        steal_on = self.strategy.allow_steal
-        n_events = 0
-        while events:
-            t, _, kind, payload = heappop(events)
-            self.now = t
-            n_events += 1
-            if kind == "xfer":
-                name, mem = payload
-                flights = inflight.get(name)
-                if flights is not None:
-                    flights.pop(mem, None)
-                    if not flights:
-                        del inflight[name]
-                # NOTE (pre-existing modeling artifact, preserved for
-                # equivalence): a transfer that was in flight when its data
-                # was overwritten still lands as a "valid" copy here — the
-                # simulated runtime does not cancel stale transfers.
-                add_copy(name, mem)
-                waiters = waiting.pop((name, mem), None)
-                if waiters:
-                    for rid in waiters:
-                        w = workers[rid]
-                        if w.blocked_on > 0:
-                            w.blocked_on -= 1
-                            if w.blocked_on == 0:
-                                self._try_start(w)
-                if steal_on:
-                    self._steal_round()
-            else:  # "done"
-                rid, tid, dur = payload
-                self._complete(rid, tid, dur)
-        self.n_events = n_events
-        if self._n_done != len(self.graph):
-            missing = [t.tid for t in self.graph.tasks if not self._done[t.tid]]
-            raise RuntimeError(
-                f"simulation stalled: {len(missing)} tasks unfinished, e.g. {missing[:5]}"
-            )
+        self._run_loop()
+        m = self.metrics
         return SimResult(
             makespan=self.now,
-            total_bytes=self.total_bytes,
-            n_transfers=self.n_transfers,
-            n_steals=self.n_steals,
-            busy=dict(self.busy),
-            intervals=self.intervals,
+            total_bytes=m.total_bytes,
+            n_transfers=m.n_transfers,
+            n_steals=m.n_steals,
+            busy=dict(m.busy),
+            intervals=m.intervals,
             strategy=self.strategy.name,
-            total_flops=self.graph.total_flops(),
-            n_events=self.n_events,
+            total_flops=self._primary.graph.total_flops(),
+            n_events=m.n_events,
         )

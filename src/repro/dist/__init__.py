@@ -1,12 +1,14 @@
 """Distribution layer: sharding rules, scheduler bridge, elasticity.
 
 Built on the ``repro.sched`` policy API: ``sched_bridge`` maps the Policy
-score mechanism to expert/shard placement, ``sharding`` holds the
-rule-based PartitionSpec derivations for every model pytree, ``elastic``
-re-plans mesh + placement after device-count changes, ``straggler``
-re-balances micro-batches from observed step times, and ``hints`` carries
-the batch-sharding constraint helpers the model code calls unconditionally.
+score mechanism to expert/shard placement (including the capacity-pressure
+eviction cost shared with ``repro.runtime.memory``), ``sharding`` holds
+the rule-based PartitionSpec derivations for every model pytree plus the
+batch-sharding constraint helpers the model code calls unconditionally
+(formerly ``hints``, folded in now that the package is real), ``elastic``
+re-plans mesh + placement after device-count changes, and ``straggler``
+re-balances micro-batches from observed step times.
 """
-from . import elastic, hints, sched_bridge, sharding, straggler
+from . import elastic, sched_bridge, sharding, straggler
 
-__all__ = ["elastic", "hints", "sched_bridge", "sharding", "straggler"]
+__all__ = ["elastic", "sched_bridge", "sharding", "straggler"]

@@ -53,6 +53,10 @@ def plan_expert_placement(
     n_groups: int,
     prev_assignment: Optional[Sequence[int]] = None,
     alpha: float = 1.0,
+    expert_bytes: Optional[float] = None,
+    group_hbm_bytes: Optional[float] = None,
+    group_resident_bytes: Optional[Sequence[float]] = None,
+    mem_penalty: float = 1.0,
 ) -> ExpertPlacement:
     """Place experts on device groups from routing statistics.
 
@@ -63,6 +67,16 @@ def plan_expert_placement(
     free and moving cost ``alpha * mass`` — DADA's affinity phase, so
     mildly-changed loads keep most experts where their weights already
     are. ``alpha = 0`` ignores history entirely.
+
+    With ``expert_bytes`` and ``group_hbm_bytes`` the replan also prices
+    memory pressure with the simulator's eviction-cost formula
+    (:func:`repro.runtime.memory.predicted_eviction_bytes`): *moving* an
+    expert to group ``g`` forces ``predicted_eviction_bytes(resident_g,
+    expert_bytes, group_hbm_bytes)`` bytes of weights/activations out of
+    that group's HBM; staying put costs nothing. ``group_resident_bytes``
+    (default: experts currently assigned × ``expert_bytes``) is each
+    group's occupancy and ``mem_penalty`` scales evicted bytes into the
+    score's mass units.
     """
     mass = np.asarray(routing_mass, dtype=np.float64)
     E = len(mass)
@@ -83,6 +97,33 @@ def plan_expert_placement(
         scores += move_cost[:, None]
         valid = (prev >= 0) & (prev < n_groups)
         scores[np.nonzero(valid)[0], prev[valid]] = 0.0
+
+    if expert_bytes is not None and group_hbm_bytes is not None:
+        from repro.runtime.memory import predicted_eviction_bytes
+
+        if group_resident_bytes is not None:
+            resident = np.asarray(group_resident_bytes, dtype=np.float64)
+            if len(resident) != n_groups:
+                raise ValueError("group_resident_bytes length != n_groups")
+        elif prev is not None:
+            valid = (prev >= 0) & (prev < n_groups)
+            resident = np.bincount(
+                prev[valid], minlength=n_groups
+            ).astype(np.float64) * float(expert_bytes)
+        else:
+            resident = np.zeros(n_groups, dtype=np.float64)
+        # the same eviction cost the scheduler's pressure signal charges:
+        # bytes this expert's weights would push out of the target HBM
+        evict = predicted_eviction_bytes(
+            resident, float(expert_bytes), float(group_hbm_bytes)
+        )
+        pressure = np.broadcast_to(
+            mem_penalty * evict[None, :], (E, n_groups)
+        ).copy()
+        if prev is not None:
+            valid = (prev >= 0) & (prev < n_groups)
+            pressure[np.nonzero(valid)[0], prev[valid]] = 0.0  # staying is free
+        scores += pressure
 
     # heaviest-first (stable on ties) through the shared placement kernel
     order = np.lexsort((np.arange(E), -mass))

@@ -264,3 +264,59 @@ def to_named(mesh, spec_tree):
         spec_tree,
         is_leaf=lambda x: isinstance(x, P),
     )
+
+
+# ---------------------------------------------------------------------------
+# batch-sharding hints (folded in from the retired ``repro.dist.hints``)
+#
+# Model code calls :func:`constrain_batch` unconditionally (embedding
+# gathers and concatenations drop index sharding, so the batch dimension
+# must be re-pinned after them). Outside a configured mesh — unit tests,
+# single-host smoke runs — the helpers are identity functions, so the
+# model code never has to branch on "am I distributed?".
+
+_MESH = None
+_BATCH_AXES: Optional[Tuple[str, ...]] = None
+
+
+def set_hints(mesh, batch_axes: Sequence[str]) -> None:
+    """Install ``mesh`` and the axis names the batch dim shards over."""
+    global _MESH, _BATCH_AXES
+    _MESH = mesh
+    _BATCH_AXES = tuple(batch_axes)
+
+
+def clear_hints() -> None:
+    """Remove the active mesh; ``constrain_batch`` becomes the identity."""
+    global _MESH, _BATCH_AXES
+    _MESH = None
+    _BATCH_AXES = None
+
+
+def active_mesh():
+    return _MESH
+
+
+def batch_axes() -> Optional[Tuple[str, ...]]:
+    return _BATCH_AXES
+
+
+def constrain_batch(x):
+    """Constrain the leading (batch) dimension of ``x`` to the hinted axes.
+
+    Identity when no mesh is installed, when the array is rank-0, or when
+    the hinted axes do not divide the batch dimension (a smoke-size batch
+    on a production mesh must not fail lowering).
+    """
+    if _MESH is None or _BATCH_AXES is None:
+        return x
+    ndim = getattr(x, "ndim", None)
+    if not ndim:  # scalars (or non-arrays) pass through
+        return x
+    shard = 1
+    for ax in _BATCH_AXES:
+        shard *= dict(_MESH.shape).get(ax, 1)
+    if shard <= 1 or x.shape[0] % shard != 0:
+        return x
+    spec = P(_BATCH_AXES, *([None] * (ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_MESH, spec))

@@ -17,12 +17,13 @@ from repro.analysis.flops import cell_cost  # noqa: E402
 from repro.analysis.hlo import collective_bytes  # noqa: E402
 from repro.configs.registry import ARCH_IDS, get_config  # noqa: E402
 from repro.configs.shapes import SHAPES, applicable  # noqa: E402
-from repro.dist import hints  # noqa: E402
 from repro.dist.sharding import (  # noqa: E402
     batch_specs,
     cache_specs,
+    clear_hints,
     opt_specs,
     param_specs,
+    set_hints,
     to_named,
 )
 from repro.launch.input_specs import (  # noqa: E402
@@ -78,7 +79,7 @@ def build_and_compile(
         rec.update(status="skip", reason=reason)
         return rec
 
-    hints.set_hints(mesh, ("pod", "data") if multi_pod else ("data",))
+    set_hints(mesh, ("pod", "data") if multi_pod else ("data",))
     p_sds = params_sds(cfg)
     fsdp = True if shape.kind == "train" else decode_fsdp
     pspec = param_specs(cfg, p_sds, mesh, fsdp=fsdp, ep_pods=ep_pods)
@@ -142,7 +143,7 @@ def build_and_compile(
         lowered = jf.lower(*args)
 
     compiled = lowered.compile()
-    hints.clear_hints()
+    clear_hints()
     compile_s = time.time() - t0
 
     mem = compiled.memory_analysis()

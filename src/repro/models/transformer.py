@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.dist import hints
+from repro.dist.sharding import constrain_batch
 
 from . import attention as attn
 from . import mamba as mb
@@ -238,7 +238,7 @@ def encode(params: Dict, cfg: ModelConfig, enc_x: jnp.ndarray) -> jnp.ndarray:
     params = _cast_floats(params, _dtype(cfg.compute_dtype))
     if "frontend_proj" in params:
         enc_x = enc_x.astype(_dtype(cfg.compute_dtype)) @ params["frontend_proj"]
-    enc_x = hints.constrain_batch(enc_x.astype(_dtype(cfg.compute_dtype)))
+    enc_x = constrain_batch(enc_x.astype(_dtype(cfg.compute_dtype)))
     S = enc_x.shape[1]
     cos, sin = _rope_tables(cfg, jnp.arange(S))
 
@@ -299,8 +299,9 @@ def forward(
         if "frontend_proj" in params:
             pe = pe @ params["frontend_proj"]
         x = jnp.concatenate([pe.astype(cdt), x], axis=1)
-    # re-pin batch sharding: embedding gathers drop index sharding (dist/hints)
-    x = hints.constrain_batch(x)
+    # re-pin batch sharding: embedding gathers drop index sharding
+    # (dist/sharding batch hints)
+    x = constrain_batch(x)
     B, S, _ = x.shape
     if cache is None:
         positions = jnp.arange(S)

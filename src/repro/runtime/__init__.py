@@ -1,0 +1,59 @@
+"""``repro.runtime`` — the layered simulation engine.
+
+The monolithic ``repro.core.simulator`` has been decomposed into composable
+layers (each owning one concern, each independently testable):
+
+  * :mod:`~repro.runtime.events`    — the event heap and its tie-break clock;
+  * :mod:`~repro.runtime.queues`    — per-worker deques and the pop/push/
+    steal protocol (plus the :class:`WorkSteal` strategy, which is nothing
+    but that protocol);
+  * :mod:`~repro.runtime.transfers` — link groups, the per-data in-flight
+    index, prefetch and the host-hop routing of ``request_transfer``;
+  * :mod:`~repro.runtime.memory`    — NEW: capacity-bounded device memories
+    with LRU / affinity-aware eviction, dirty write-back, and the memory-
+    pressure signal policies consume;
+  * :mod:`~repro.runtime.engine`    — the event loop itself, now accepting
+    ``submit(graph)`` so many tenant DAGs interleave on one machine;
+  * :mod:`~repro.runtime.metrics`   — counters, intervals and
+    :class:`SimResult`.
+
+``repro.core.Simulator`` remains the single-graph facade over
+:class:`Engine` and is bit-for-bit identical to the pre-decomposition
+simulator when capacity is unbounded (``tests/test_equivalence*.py`` is
+the contract). Capacity limits, eviction and multi-graph streaming are
+opt-in via ``repro.sched.SchedConfig`` (``REPRO_SCHED_MEM_CAPACITY``,
+``REPRO_SCHED_EVICTION``) or the :class:`Engine` constructor.
+
+See ``docs/runtime_architecture.md`` for the layer diagram and the
+submit/eviction lifecycle.
+"""
+# Pre-register the core package before pulling in the engine: the layers
+# import repro.core submodules (dag/machine/perfmodel) while repro.core's
+# own __init__ imports the Simulator facade, which subclasses the Engine.
+# Starting the core package first lets both partial modules resolve each
+# other's submodules through sys.modules instead of re-entering a
+# half-initialized repro.runtime.engine.
+import repro.core  # noqa: F401  (deliberate cycle-breaking import)
+
+from .engine import Engine, GraphContext, Strategy
+from .events import EventQueue
+from .memory import MemoryManager, predicted_eviction_bytes
+from .metrics import Metrics, ScheduledInterval, SimResult
+from .queues import Worker, WorkSteal, eligible_victims
+from .transfers import TransferEngine
+
+__all__ = [
+    "Engine",
+    "EventQueue",
+    "GraphContext",
+    "MemoryManager",
+    "Metrics",
+    "ScheduledInterval",
+    "SimResult",
+    "Strategy",
+    "TransferEngine",
+    "Worker",
+    "WorkSteal",
+    "eligible_victims",
+    "predicted_eviction_bytes",
+]

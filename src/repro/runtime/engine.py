@@ -1,0 +1,612 @@
+"""The event-driven XKaapi-like runtime engine.
+
+Reproduces the paper's execution flow (§2.1-2.2):
+  * each worker owns a local ready-queue (pop / push / steal),
+  * completing a task triggers ``activate`` on its newly-ready successors —
+    this is where the scheduling strategy runs,
+  * idle workers emit steal requests to a randomly selected victim (enabled
+    per strategy; HEFT/DADA place every ready task explicitly),
+  * transfers to/from accelerator memories are prefetched when a task is
+    pushed, overlap with computation, and contend on shared PCIe-switch
+    links (FIFO per link group — :mod:`repro.runtime.transfers`),
+  * the runtime observes real (noisy) durations and feeds the history-based
+    performance model, which therefore calibrates online (§2.3).
+
+Beyond the monolithic simulator this engine adds:
+
+  * **multi-graph streams** — :meth:`Engine.submit` accepts any number of
+    task graphs, before or during the run (``at=`` posts the arrival as an
+    event), so many tenant DAGs interleave on one machine. Each graph gets
+    its own :class:`GraphContext` (residency, calibration caches, interval
+    timeline) and its own per-graph :class:`SimResult`;
+  * **capacity-bounded memories** — opt-in via ``REPRO_SCHED_MEM_CAPACITY``
+    / ``REPRO_SCHED_EVICTION`` (:mod:`repro.runtime.memory`): evictions,
+    dirty write-backs and the pressure signal policies consume;
+  * **stale-transfer cancellation** — opt-in via
+    ``REPRO_SCHED_CANCEL_STALE=1``: an in-flight copy of data that is
+    overwritten mid-flight no longer lands as a "valid" copy (the
+    historical behavior, preserved by default for equivalence, is a known
+    modeling artifact of the original simulator).
+
+Determinism: all randomness flows through one seeded numpy Generator (the
+per-task duration noise of each graph is drawn, in tid order, when the
+graph is submitted).
+
+With a single graph submitted and capacity unbounded, the engine is
+bit-for-bit identical to the monolithic simulator it replaced — the same
+event posting order, the same seeded stream consumption, the same IEEE
+operation order. ``repro.core.Simulator`` is the thin single-graph facade;
+``tests/test_equivalence*.py`` enforce the contract against the frozen
+scalar references.
+"""
+from __future__ import annotations
+
+import heapq
+from typing import Any, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.dag import GraphArrays, Task, TaskGraph
+from repro.core.machine import HOST_MEM, MachineModel, ResourceClass
+from repro.core.perfmodel import (
+    ClassPredictor,
+    HistoryPerfModel,
+    Residency,
+    TransferModel,
+)
+
+from .events import EventQueue
+from .memory import MemoryManager
+from .metrics import Metrics, ScheduledInterval, SimResult
+from .queues import Worker, eligible_victims
+from .transfers import TransferEngine
+
+
+class Strategy:
+    """Scheduling strategy interface: placement happens in ``activate``."""
+
+    name = "base"
+    allow_steal = False
+    owner_lifo = False
+
+    def init(self, sim) -> None:  # pragma: no cover - default
+        pass
+
+    def place(
+        self, sim, ready: List[Task], src: Optional[int]
+    ) -> None:  # pragma: no cover - interface
+        raise NotImplementedError
+
+
+class GraphContext:
+    """Per-submitted-graph state: one tenant DAG inside the engine."""
+
+    __slots__ = (
+        "gid", "graph", "arrays", "residency", "inflight", "waiting",
+        "noise_mult", "preds", "succ", "done", "n_done", "n_tasks",
+        "rid_static", "predictors", "submit_at", "finish", "intervals",
+        "data_version", "readers_left",
+    )
+
+    def __init__(self, gid: int, graph: TaskGraph) -> None:
+        self.gid = gid
+        self.graph = graph
+        self.arrays: GraphArrays = graph.arrays()
+        self.residency = Residency()
+        self.residency.attach(self.arrays)
+        # all application data starts in host memory (paper setup)
+        self.residency.initialize(self.arrays.data_names, HOST_MEM)
+        # in-flight transfers indexed per data name: name -> {dst_mem: t}
+        self.inflight: Dict[str, Dict[int, float]] = {}
+        self.waiting: Dict[tuple, List[int]] = {}  # (name, mem) -> worker rids
+        self.preds = [len(graph.pred[t.tid]) for t in graph.tasks]
+        self.succ = [graph.succ[t.tid] for t in graph.tasks]
+        self.done = [False] * len(graph)
+        self.n_done = 0
+        self.n_tasks = len(graph)
+        self.predictors: Dict[str, ClassPredictor] = {}
+        self.rid_static: List[List[float]] = []
+        self.noise_mult: Optional[List[float]] = None
+        self.submit_at = 0.0
+        self.finish = 0.0
+        self.intervals: List[ScheduledInterval] = []
+        self.data_version: Dict[str, int] = {}  # bumped per write (cancel-stale)
+        self.readers_left: List[int] = []  # per-did pending readers (bounded)
+
+
+class Engine:
+    """The composable event loop: events + queues + transfers + memory.
+
+    Strategies interact with the engine through the same surface the
+    monolithic ``Simulator`` exposed (``push``, ``load_ts``, ``now``,
+    ``predictor``, ``residency``, ``arrays``, ``graph``, ``machine``,
+    ``transfer_model``, ``model``, ``config``, ``memory``); during an
+    activation these views point at the graph whose tasks became ready.
+    """
+
+    def __init__(
+        self,
+        machine: MachineModel,
+        strategy,
+        seed: int = 0,
+        noise: float = 0.03,
+        transfer_model: Optional[TransferModel] = None,
+        config=None,
+        mem_capacity: Optional[int] = None,
+        eviction: Optional[str] = None,
+        cancel_stale: Optional[bool] = None,
+    ) -> None:
+        self.machine = machine
+        self.strategy = strategy
+        # the typed scheduling configuration (repro.sched.SchedConfig);
+        # strategies and instrumentation read engine.config instead of
+        # scattering os.environ lookups through hot paths
+        self._config = config
+        self.rng = np.random.default_rng(seed)
+        self.noise = noise
+        self.model = HistoryPerfModel()
+        self.transfer_model = transfer_model or TransferModel(
+            bandwidth=machine.link.bandwidth, latency=machine.link.latency
+        )
+
+        self.now = 0.0
+        self.events = EventQueue()
+        self._events = self.events.heap  # legacy alias (benchmarks reset it)
+        self.workers = [Worker(r.rid) for r in machine.resources]
+        # shared predicted-completion time-stamps (paper §2.3)
+        self.load_ts = [0.0] * len(self.workers)
+        # per-rid memory space / residency bit (avoids by_id() in hot paths)
+        self._mem_of = [r.mem for r in machine.resources]
+        self._bit_of = [1 << (r.mem + 1) for r in machine.resources]
+        self._steal_on = strategy.allow_steal
+        self._lifo = strategy.owner_lifo
+
+        self.metrics = Metrics(machine)
+        self.transfers = TransferEngine(
+            machine, self.transfer_model, self.events, self.metrics
+        )
+        self._link_free = self.transfers.link_free  # legacy alias
+
+        # opt-in layers: capacity-bounded memories + stale cancellation;
+        # explicit arguments win over the (env-derived) SchedConfig
+        cfg = self.config
+        if mem_capacity is None:
+            mem_capacity = cfg.mem_capacity
+        if eviction is None:
+            eviction = cfg.eviction
+        if cancel_stale is None:
+            cancel_stale = cfg.cancel_stale
+        self.memory = MemoryManager(machine, mem_capacity, eviction)
+        self.memory.transfers = self.transfers
+        self.transfers.memory = self.memory
+        self._bounded = self.memory.bounded
+        self._cancel_stale = bool(cancel_stale)
+        self.transfers.cancel_stale = self._cancel_stale
+
+        # submitted graphs
+        self._ctxs: List[GraphContext] = []
+        self._ctx_of: Dict[int, GraphContext] = {}  # id(task) -> context
+        self._cur: Optional[GraphContext] = None
+        self._pending: List[GraphContext] = []  # roots placed at run() start
+        self._running = False
+        # strategy-facing views of the current activation's graph
+        self.graph: Optional[TaskGraph] = None
+        self.arrays: Optional[GraphArrays] = None
+        self.residency: Optional[Residency] = None
+
+    # ------------------------------------------------------------------
+    @property
+    def config(self):
+        """The active ``repro.sched.SchedConfig`` for this engine."""
+        if self._config is None:
+            from repro.sched.config import current_config
+
+            self._config = current_config()
+        return self._config
+
+    # legacy metric views (the counters live on ``self.metrics``)
+    @property
+    def total_bytes(self) -> int:
+        return self.metrics.total_bytes
+
+    @property
+    def n_transfers(self) -> int:
+        return self.metrics.n_transfers
+
+    @property
+    def n_steals(self) -> int:
+        return self.metrics.n_steals
+
+    @property
+    def n_events(self) -> int:
+        return self.metrics.n_events
+
+    @property
+    def busy(self) -> Dict[int, float]:
+        return self.metrics.busy
+
+    @property
+    def intervals(self) -> List[ScheduledInterval]:
+        return self.metrics.intervals
+
+    # ------------------------------------------------------------------
+    def submit(self, graph: TaskGraph, at: Optional[float] = None) -> GraphContext:
+        """Add a task graph to the run (multi-tenant streaming).
+
+        Before ``run()`` the graph's roots are placed when the run starts;
+        with ``at`` (or mid-run) the arrival is an event at that simulated
+        time, so tenant DAGs stream into a live machine. Returns the
+        graph's :class:`GraphContext` (its per-graph result handle).
+        """
+        if graph.tasks and id(graph.tasks[0]) in self._ctx_of:
+            raise ValueError(
+                "this TaskGraph object is already submitted to the engine; "
+                "build a fresh graph per tenant (task identity keys the "
+                "per-graph state)"
+            )
+        ctx = GraphContext(len(self._ctxs), graph)
+        # One multiplicative noise factor per task (each task executes
+        # exactly once), drawn as a single batched normal at submit, in
+        # tid order. For the first graph of a fresh engine this consumes
+        # the seeded stream exactly like the monolithic simulator did.
+        if self.noise > 0 and len(graph) > 0:
+            ctx.noise_mult = np.exp(
+                self.rng.normal(0.0, self.noise, size=len(graph))
+            ).tolist()
+        ctx.rid_static = [
+            self._predictor(ctx, r.cls).static_list
+            for r in self.machine.resources
+        ]
+        self.memory.attach_ctx(ctx)
+        ctx_of = self._ctx_of
+        for t in graph.tasks:
+            ctx_of[id(t)] = ctx
+        self._ctxs.append(ctx)
+        if self._cur is None:
+            self._set_ctx(ctx)
+        if at is not None and at > self.now:
+            ctx.submit_at = at
+            self.events.post(at, "submit", ctx)
+        elif self._running:
+            ctx.submit_at = self.now
+            self._activate_roots(ctx)
+            if self._steal_on:
+                self._steal_round()
+        else:
+            ctx.submit_at = max(0.0, at if at is not None else 0.0)
+            self._pending.append(ctx)
+        return ctx
+
+    # ------------------------------------------------------------------
+    def _set_ctx(self, ctx: GraphContext) -> None:
+        self._cur = ctx
+        self.graph = ctx.graph
+        self.arrays = ctx.arrays
+        self.residency = ctx.residency
+
+    def _predictor(self, ctx: GraphContext, cls: ResourceClass) -> ClassPredictor:
+        p = ctx.predictors.get(cls.name)
+        if p is None:
+            p = ctx.predictors[cls.name] = ClassPredictor(
+                self.model, cls, ctx.arrays
+            )
+        return p
+
+    def predictor(self, cls: ResourceClass) -> ClassPredictor:
+        """Cached vectorized HistoryPerfModel.predict for ``cls`` (of the
+        current activation's graph)."""
+        return self._predictor(self._cur, cls)
+
+    # ------------------------------------------------------------------
+    # queue operations (pop / push / steal)
+    def push(self, task: Task, rid: int) -> None:
+        """Push ``task`` onto worker ``rid``'s queue (any worker may push
+        into any other worker's queue, §2.2)."""
+        w = self.workers[rid]
+        w.queue.append(task)
+        ctx = self._ctx_of[id(task)]
+        self.transfers.prefetch(
+            ctx, task, self._mem_of[rid], self._bit_of[rid], self.now
+        )
+        self._try_start(w)
+
+    def _steal(self, thief: Worker) -> bool:
+        victims = eligible_victims(self.workers, thief.rid)
+        if not victims:
+            return False
+        v = victims[int(self.rng.integers(len(victims)))]
+        task = v.queue.popleft()  # thief takes the oldest task
+        self.metrics.n_steals += 1
+        thief.queue.append(task)
+        ctx = self._ctx_of[id(task)]
+        self.transfers.prefetch(
+            ctx, task, self._mem_of[thief.rid], self._bit_of[thief.rid], self.now
+        )
+        return True
+
+    def _steal_round(self) -> None:
+        # callers guard on self._steal_on (strategy.allow_steal)
+        progress = True
+        while progress:
+            progress = False
+            for w in self.workers:
+                if w.running is None and not w.queue:
+                    if self._steal(w):
+                        self._try_start(w)
+                        progress = True
+
+    # ------------------------------------------------------------------
+    def _unpin_worker(self, w: Worker) -> None:
+        if w.pins is not None:
+            mem, dids, ctx = w.pins
+            unpin = self.memory.unpin
+            for did in dids:
+                unpin(ctx, did, mem)
+            w.pins = None
+
+    def _try_start(self, w: Worker) -> None:
+        if w.running is not None or not w.queue:
+            return
+        rid = w.rid
+        task = w.queue[-1] if self._lifo else w.queue[0]
+        ctx = self._ctx_of[id(task)]
+        # make sure inputs are (going to be) resident
+        mem = self._mem_of[rid]
+        bit = self._bit_of[rid]
+        mask_list = ctx.residency.mask_list
+        inflight = ctx.inflight
+        waiting = ctx.waiting
+        request = self.transfers.request
+        now = self.now
+        bounded = self._bounded
+        reads = ctx.arrays.task_reads[task.tid]
+        if bounded:
+            # re-pin this head's currently-resident inputs (and drop pins
+            # from a previous head evaluation)
+            self._unpin_worker(w)
+            pinned: List[int] = []
+            protect = frozenset(d for d, _, _ in reads)
+        missing = 0
+        for did, name, size in reads:
+            if not mask_list[did] & bit:
+                fl = inflight.get(name)
+                if fl is None or mem not in fl:
+                    request(ctx, name, size, mem, now,
+                            protect if bounded else None)
+                waiting.setdefault((name, mem), []).append(rid)
+                missing += 1
+            elif bounded and mem != HOST_MEM:
+                self.memory.pin(ctx, did, mem)
+                self.memory.touch(ctx, did, mem)
+                pinned.append(did)
+        if bounded and (pinned or missing):
+            w.pins = (mem, pinned, ctx)
+        if missing:
+            w.blocked_on = missing
+            return
+        # pop + execute
+        if self._lifo:
+            w.queue.pop()
+        else:
+            w.queue.popleft()
+        w.blocked_on = 0
+        tid = task.tid
+        # ground-truth duration: per-rid static flops/rate (the predictor's
+        # cached vector, identical to cls.exec_time incl. the 1e-7 floor)
+        # times the task's seeded noise factor
+        dur = ctx.rid_static[rid][tid]
+        if ctx.noise_mult is not None:
+            dur *= ctx.noise_mult[tid]
+        w.running = task
+        w.run_start = now
+        self.events.post(now + dur, "done", (rid, ctx, tid, dur))
+
+    # ------------------------------------------------------------------
+    def _complete(self, rid: int, ctx: GraphContext, tid: int, dur: float) -> None:
+        w = self.workers[rid]
+        res = self.machine.resources[rid]
+        task = ctx.graph.tasks[tid]
+        w.running = None
+        ctx.done[tid] = True
+        ctx.n_done += 1
+        metrics = self.metrics
+        metrics.busy[rid] += dur
+        iv = ScheduledInterval(tid, rid, w.run_start, self.now)
+        metrics.intervals.append(iv)
+        ctx.intervals.append(iv)
+        self.model.observe(task, res.cls, dur)
+        bit = self._bit_of[rid]
+        bounded = self._bounded
+        if bounded:
+            self._unpin_worker(w)
+            mem = self._mem_of[rid]
+            if mem != HOST_MEM:
+                # reserve space for the outputs this completion materializes
+                incoming = 0
+                mask_list = ctx.residency.mask_list
+                for did, _, size in ctx.arrays.task_writes[tid]:
+                    if not mask_list[did] & bit:
+                        incoming += size
+                if incoming:
+                    protect = frozenset(
+                        d for d, _, _ in ctx.arrays.task_writes[tid]
+                    ) | frozenset(d for d, _, _ in ctx.arrays.task_reads[tid])
+                    self.memory.ensure_capacity(
+                        mem, incoming, self.now, ctx, protect
+                    )
+        write_id = ctx.residency.write_id
+        inflight_pop = ctx.inflight.pop
+        cancel_stale = self._cancel_stale
+        versions = ctx.data_version
+        for did, name, size in ctx.arrays.task_writes[tid]:
+            write_id(did, name, bit)
+            # invalidate any stale dedup entries for this data (O(1): the
+            # in-flight table is indexed per data name)
+            inflight_pop(name, None)
+            if cancel_stale:
+                versions[name] = versions.get(name, 0) + 1
+        if bounded:
+            self.memory.note_task_done(ctx, tid)
+        # load time-stamp correction (§2.3: runtime corrects predictions)
+        if not w.queue:
+            self.load_ts[rid] = self.now
+
+        newly_ready: List[Task] = []
+        preds = ctx.preds
+        tasks = ctx.graph.tasks
+        for s in ctx.succ[tid]:
+            preds[s] -= 1
+            if preds[s] == 0:
+                newly_ready.append(tasks[s])
+        if ctx.n_done == ctx.n_tasks:
+            ctx.finish = self.now
+        if newly_ready:
+            # the *activate* operation — where scheduling decisions happen
+            self._set_ctx(ctx)
+            self.strategy.place(self, newly_ready, rid)
+        self._try_start(w)
+        if self._steal_on:
+            self._steal_round()
+
+    # ------------------------------------------------------------------
+    def _activate_roots(self, ctx: GraphContext) -> None:
+        roots = ctx.graph.roots()
+        if roots:
+            self._set_ctx(ctx)
+            self.strategy.place(self, roots, None)
+
+    def _run_loop(self) -> None:
+        self._running = True
+        self.strategy.init(self)
+        pending, self._pending = self._pending, []
+        for ctx in pending:
+            self._activate_roots(ctx)
+        if self._steal_on:
+            self._steal_round()
+        events = self.events.heap
+        heappop = heapq.heappop
+        workers = self.workers
+        steal_on = self._steal_on
+        bounded = self._bounded
+        cancel_stale = self._cancel_stale
+        n_events = 0
+        while events:
+            t, _, kind, payload = heappop(events)
+            self.now = t
+            n_events += 1
+            if kind == "xfer":
+                ctx, name, mem, ver = payload
+                inflight = ctx.inflight
+                flights = inflight.get(name)
+                if flights is not None:
+                    flights.pop(mem, None)
+                    if not flights:
+                        del inflight[name]
+                if bounded and mem != HOST_MEM:
+                    self.memory.release(ctx, name, mem)
+                if cancel_stale and ver != ctx.data_version.get(name, 0):
+                    # the data was overwritten while this copy was in
+                    # flight: the landing is stale and is dropped (the
+                    # blocked readers below re-request against the new
+                    # version)
+                    pass
+                else:
+                    # NOTE (pre-existing modeling artifact, preserved for
+                    # equivalence when cancel-stale is off): a transfer in
+                    # flight when its data was overwritten still lands as
+                    # a "valid" copy — the simulated runtime does not
+                    # cancel stale transfers unless REPRO_SCHED_CANCEL_STALE.
+                    if bounded and mem != HOST_MEM:
+                        did = ctx.arrays.name_to_id.get(name)
+                        if did is not None and not (
+                            ctx.residency.mask_list[did] & (1 << (mem + 1))
+                        ):
+                            self.memory.ensure_capacity(
+                                mem,
+                                ctx.residency._sizes[did],
+                                t,
+                                ctx,
+                                (did,),
+                            )
+                    ctx.residency.add_copy(name, mem)
+                waiters = ctx.waiting.pop((name, mem), None)
+                if waiters:
+                    if bounded and mem != HOST_MEM:
+                        did = ctx.arrays.name_to_id.get(name)
+                    for rid in waiters:
+                        w = workers[rid]
+                        if w.blocked_on > 0:
+                            w.blocked_on -= 1
+                            if (
+                                bounded
+                                and mem != HOST_MEM
+                                and did is not None
+                                and w.pins is not None
+                                and w.pins[0] == mem
+                                and w.pins[2] is ctx
+                                and w.blocked_on > 0
+                            ):
+                                # keep the freshly landed input of a
+                                # still-blocked head pinned until its next
+                                # head evaluation (only while the head is
+                                # still this graph's task — a steal/LIFO
+                                # re-head must not record the pin under
+                                # another graph's key, which unpin could
+                                # then never release)
+                                self.memory.pin(ctx, did, mem)
+                                w.pins[1].append(did)
+                            if w.blocked_on == 0:
+                                self._try_start(w)
+                if steal_on:
+                    self._steal_round()
+            elif kind == "done":
+                rid, ctx, tid, dur = payload
+                self._complete(rid, ctx, tid, dur)
+            else:  # "submit": a streamed graph arrives
+                ctx = payload
+                self._activate_roots(ctx)
+                if steal_on:
+                    self._steal_round()
+        self.metrics.n_events = n_events
+        self._check_complete()
+
+    def _check_complete(self) -> None:
+        for ctx in self._ctxs:
+            if ctx.n_done != ctx.n_tasks:
+                missing = [
+                    t.tid for t in ctx.graph.tasks if not ctx.done[t.tid]
+                ]
+                raise RuntimeError(
+                    f"simulation stalled: graph {ctx.gid} has "
+                    f"{len(missing)} tasks unfinished, e.g. {missing[:5]}"
+                    + (
+                        " (capacity-bounded run: check REPRO_SCHED_MEM_CAPACITY)"
+                        if self._bounded
+                        else ""
+                    )
+                )
+
+    # ------------------------------------------------------------------
+    def _graph_result(self, ctx: GraphContext) -> SimResult:
+        busy: Dict[int, float] = {r.rid: 0.0 for r in self.machine.resources}
+        for iv in ctx.intervals:
+            busy[iv.rid] += iv.end - iv.start
+        return SimResult(
+            makespan=ctx.finish - ctx.submit_at,
+            # transfer/steal counters are machine-global (links and queues
+            # are shared across tenant graphs)
+            total_bytes=self.metrics.total_bytes,
+            n_transfers=self.metrics.n_transfers,
+            n_steals=self.metrics.n_steals,
+            busy=busy,
+            intervals=ctx.intervals,
+            strategy=self.strategy.name,
+            total_flops=ctx.graph.total_flops(),
+            n_events=self.metrics.n_events,
+        )
+
+    def run(self) -> List[SimResult]:
+        """Run every submitted graph to completion; one result per graph
+        (submit order), with per-graph makespans and interval timelines."""
+        self._run_loop()
+        return [self._graph_result(ctx) for ctx in self._ctxs]

@@ -1,0 +1,44 @@
+"""Event heap + clock: the ordering backbone of the engine.
+
+Events are ``(time, seq, kind, payload)`` tuples on a binary heap. ``seq``
+is a strictly increasing posting counter, so ties in ``time`` resolve in
+posting order and payloads are never compared (they may hold arbitrary
+objects, e.g. a :class:`~repro.runtime.engine.GraphContext`).
+
+The counter is the engine's logical tie-break clock: preserving the exact
+posting order is part of the bit-for-bit contract with the frozen
+reference simulator — two events at the same simulated time must fire in
+the same order the monolithic simulator fired them.
+"""
+from __future__ import annotations
+
+import heapq
+from typing import Any, List, Tuple
+
+Event = Tuple[float, int, str, Any]
+
+
+class EventQueue:
+    """A seeded-tie-break event heap.
+
+    ``heap`` is exposed directly: the engine's run loop pops it with a
+    locally bound ``heapq.heappop`` (hot path), and the λ-probe benchmark
+    clears it between repetitions.
+    """
+
+    __slots__ = ("heap", "seq")
+
+    def __init__(self) -> None:
+        self.heap: List[Event] = []
+        self.seq = 0
+
+    def post(self, t: float, kind: str, payload: Any) -> None:
+        """Schedule ``(kind, payload)`` at simulated time ``t``."""
+        self.seq += 1
+        heapq.heappush(self.heap, (t, self.seq, kind, payload))
+
+    def __len__(self) -> int:
+        return len(self.heap)
+
+    def __bool__(self) -> bool:
+        return bool(self.heap)

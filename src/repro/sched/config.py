@@ -27,6 +27,8 @@ from typing import Mapping, Optional, Tuple
 SCHED_PREFIX = "REPRO_SCHED_"
 BENCH_PREFIX = "REPRO_BENCH_"
 
+from repro.runtime.memory import EVICTION_POLICIES
+
 BACKENDS = ("numpy", "jax")
 PALLAS_MODES = ("auto", "1", "0", "off", "false")
 
@@ -92,6 +94,13 @@ class SchedConfig:
     - ``lambda_depth``: speculative λ-bisection depth (``None`` = platform
       default: 1 on cpu, 5 on gpu/tpu), clamped to [1, 8].
     - ``pallas``: Pallas transfer-kernel mode (``auto``/``1``/``0``).
+    - ``mem_capacity``: device-memory capacity in bytes (0 = unbounded,
+      the default; see ``repro.runtime.memory``).
+    - ``eviction``: victim-selection policy under capacity pressure,
+      ``lru`` (default) or ``affinity`` (fewest pending readers first).
+    - ``cancel_stale``: drop in-flight copies of data overwritten
+      mid-flight instead of landing them as "valid" (off by default to
+      preserve bit-for-bit equivalence with the reference simulator).
     - ``bench_backends``: backends the overhead benchmark measures.
     - ``regression_tol`` / ``row_tol``: throughput-gate tolerances.
 
@@ -105,6 +114,9 @@ class SchedConfig:
     jax_min: int = 32
     lambda_depth: Optional[int] = None
     pallas: str = "auto"
+    mem_capacity: int = 0
+    eviction: str = "lru"
+    cancel_stale: bool = False
     bench_backends: Optional[Tuple[str, ...]] = None
     regression_tol: float = 0.25
     row_tol: float = 0.0
@@ -129,6 +141,11 @@ class SchedConfig:
             raise _err(
                 "REPRO_SCHED_PALLAS", self.pallas,
                 f"choose from {PALLAS_MODES}",
+            )
+        if self.eviction not in EVICTION_POLICIES:
+            raise _err(
+                "REPRO_SCHED_EVICTION", self.eviction,
+                f"choose from {EVICTION_POLICIES}",
             )
         if self.lambda_depth is not None:
             object.__setattr__(
@@ -190,6 +207,10 @@ _ENV_SCHEMA = {
     "REPRO_SCHED_LAMBDA_DEPTH": (
         "lambda_depth", lambda var, v: _parse_int(var, v)),
     "REPRO_SCHED_PALLAS": ("pallas", lambda var, v: v.lower()),
+    "REPRO_SCHED_MEM_CAPACITY": (
+        "mem_capacity", lambda var, v: _parse_int(var, v, lo=0)),
+    "REPRO_SCHED_EVICTION": ("eviction", lambda var, v: v.lower()),
+    "REPRO_SCHED_CANCEL_STALE": ("cancel_stale", _parse_flag),
     "REPRO_SCHED_BACKENDS": ("bench_backends", _parse_str_list),
     "REPRO_SCHED_REGRESSION_TOL": ("regression_tol", _parse_float),
     "REPRO_SCHED_ROW_TOL": (
@@ -199,8 +220,7 @@ _ENV_SCHEMA = {
     "REPRO_BENCH_GPUS": ("bench_gpus", _parse_int_list),
     "REPRO_BENCH_NT": ("bench_nt", lambda var, v: _parse_int_list(var, v, lo=1)),
     "REPRO_BENCH_JOBS": ("bench_jobs", lambda var, v: _parse_int(var, v, lo=1)),
-    "REPRO_BENCH_LAMBDA": (
-        "bench_lambda", lambda var, v: v != "0"),
+    "REPRO_BENCH_LAMBDA": ("bench_lambda", _parse_flag),
     "REPRO_BENCH_LAMBDA_NT": (
         "bench_lambda_nt", lambda var, v: _parse_int(var, v, lo=1)),
     "REPRO_BENCH_LAMBDA_REPS": (

@@ -26,7 +26,7 @@ from repro.core.dada import DADA, DualApprox
 from repro.core.dag import Task
 from repro.core.heft import HEFT
 from repro.core.simulator import Simulator
-from repro.core.worksteal import WorkSteal
+from repro.runtime.queues import WorkSteal
 
 from .policy import ScoreMatrixPolicy, class_duration_matrix
 from .registry import register
@@ -88,7 +88,10 @@ class LocalityPolicy(ScoreMatrixPolicy):
 def _heft_score_matrix(
     self: HEFT, sim: Simulator, ready: Sequence[Task]
 ) -> np.ndarray:
-    """Earliest-finish-time scores: start + transfer + duration."""
+    """Earliest-finish-time scores: start + transfer (+ memory pressure
+    under bounded capacity, as ``place`` folds it) + duration."""
+    from repro.runtime.memory import pressure_rows_for
+
     tids = [t.tid for t in ready]
     resources = sim.machine.resources
     X = np.asarray(
@@ -96,6 +99,9 @@ def _heft_score_matrix(
             sim.arrays, tids, [r.mem for r in resources], sim.residency
         )
     )
+    P = pressure_rows_for(sim, tids, resources)
+    if P is not None:
+        X = X + P
     dur = class_duration_matrix(sim, tids)
     start = np.array(
         [lt if lt > sim.now else sim.now for lt in sim.load_ts]
@@ -122,11 +128,17 @@ def _dada_score_matrix(
         np.asarray(p_cpu)[:, None],
     )
     if self.use_cp:
-        C = C + np.asarray(
+        from repro.runtime.memory import pressure_rows_for
+
+        X = np.asarray(
             sim.transfer_model.task_input_transfer_rows(
                 sim.arrays, tids, [r.mem for r in resources], sim.residency
             )
         )
+        P = pressure_rows_for(sim, tids, resources)
+        if P is not None:
+            X = X + P
+        C = C + X
     return C
 
 

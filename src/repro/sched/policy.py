@@ -144,6 +144,26 @@ class ScoreMatrixPolicy(Strategy):
     def score_matrix(self, sim: Simulator, ready: Sequence[Task]) -> np.ndarray:
         raise NotImplementedError
 
+    def pressure_matrix(
+        self, sim: Simulator, ready: Sequence[Task]
+    ) -> Optional[np.ndarray]:
+        """(ready × resources) memory-pressure penalty, in seconds.
+
+        ``None`` when device memories are unbounded (the default). Under a
+        capacity (``REPRO_SCHED_MEM_CAPACITY``) each entry is the
+        predicted eviction bytes placing the task there would force —
+        its non-resident working set beyond the memory's free space —
+        over the link bandwidth (see
+        :meth:`repro.runtime.memory.MemoryManager.pressure_rows`). The
+        generic driver adds it to every score matrix; override to weight
+        or suppress the signal.
+        """
+        from repro.runtime.memory import pressure_rows_for
+
+        return pressure_rows_for(
+            sim, [t.tid for t in ready], sim.machine.resources
+        )
+
     def place(self, sim: Simulator, ready: List[Task], src: Optional[int]) -> None:
         tids = [t.tid for t in ready]
         S = np.asarray(self.score_matrix(sim, ready), dtype=np.float64)
@@ -152,6 +172,9 @@ class ScoreMatrixPolicy(Strategy):
                 f"{self.name}: score matrix shape {S.shape} != "
                 f"(ready={len(ready)}, resources={len(sim.machine.resources)})"
             )
+        P = self.pressure_matrix(sim, ready)
+        if P is not None:
+            S = S + P
         if self.load_aware:
             now = sim.now
             offsets = np.array(

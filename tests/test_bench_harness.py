@@ -62,19 +62,31 @@ def test_sched_overhead_reports_events_per_sec(capsys, monkeypatch, tmp_path):
     out = capsys.readouterr().out
     assert "events_per_s=" in out
     assert all(r["events"] > 0 for r in rows)
-    assert {r["kernel"] for r in rows} == {"cholesky", "lu", "qr"}
+    assert {r["kernel"] for r in rows} == {
+        "cholesky", "lu", "qr", "cholesky-x4stream"
+    }
     # backend-free ws is measured once under the stable "none" label
     assert {r["backend"] for r in rows} == {"numpy", "none"}
     assert all(
         r["backend"] == "none" for r in rows if r["strategy"] == "ws"
     )
+    # the eviction path has its own capacity-bounded rows (gated by key)
+    cap_rows = [r for r in rows if r["capacity"]]
+    assert {r["strategy"] for r in cap_rows} == set(
+        so.CAPACITY_ROW_STRATEGIES
+    )
+    assert all(r["capacity"] == so.CAPACITY_ROW_BYTES for r in cap_rows)
+    # the 4-tenant streaming row reports per-graph makespans
+    (stream,) = [r for r in rows if r["kernel"] == "cholesky-x4stream"]
+    assert len(stream["per_graph_makespans"]) == 4
+    assert all(m > 0 for m in stream["per_graph_makespans"])
     # machine-readable perf trajectory (BENCH_sched.json satellite)
     doc = json.loads(out_json.read_text())
     sec = doc["sched_overhead"]
     assert sec["calibration_score"] > 0
     assert len(sec["whole_sim"]) == len(rows)
-    assert {"kernel", "strategy", "backend", "nt", "events_per_s",
-            "wall_s"} <= set(sec["whole_sim"][0])
+    assert {"kernel", "strategy", "backend", "nt", "capacity",
+            "events_per_s", "wall_s"} <= set(sec["whole_sim"][0])
 
 
 def test_sched_regression_gate(monkeypatch, tmp_path, capsys):

@@ -155,3 +155,214 @@ def test_graph_arrays_csr_matches_tasks():
     assert g.arrays() is arr
     g.add_task("kind0", [(datas[0], Mode.R)])
     assert g.arrays() is not arr
+
+
+# ---------------------------------------------------------------------------
+# eviction support: drop_copy against an independently tracked ground truth
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    st.lists(
+        st.tuples(
+            st.integers(0, 3),  # 3 = drop_copy
+            st.sampled_from(NAMES),
+            st.sampled_from(MEMS),
+        ),
+        max_size=50,
+    )
+)
+def test_drop_copy_matches_set_semantics(ops):
+    """``drop_copy`` (the eviction primitive) is the exact inverse of
+    ``add_copy``: against a plain dict-of-sets ground truth, every query
+    agrees after any interleaving of add/write/init/drop."""
+    res = Residency()
+    truth = {}
+    for op, name, mem in ops:
+        if op == 0:
+            res.add_copy(name, mem)
+            truth.setdefault(name, set()).add(mem)
+        elif op == 1:
+            res.write(name, mem)
+            truth[name] = {mem}
+        elif op == 2:
+            res.initialize([name], mem)
+            truth[name] = {mem}
+        else:
+            res.drop_copy(name, mem)
+            truth.setdefault(name, set()).discard(mem)
+    for n in NAMES:
+        assert res.locations(n) == truth.get(n, set())
+        assert res.has_any(n) == bool(truth.get(n))
+
+
+def test_drop_copy_updates_incremental_bytes():
+    g = _graph_over(NAMES)
+    res = Residency()
+    res.attach(g.arrays())
+    res.initialize(NAMES, HOST_MEM)
+    res.add_copy("d0", 1)
+    res.add_copy("d1", 1)
+    assert res.bytes_resident(1) == 100 + 101
+    res.drop_copy("d0", 1)
+    assert res.bytes_resident(1) == 101
+    assert res.is_resident("d0", HOST_MEM)  # other copies untouched
+    res.drop_copy("d0", 1)  # idempotent
+    assert res.bytes_resident(1) == 101
+
+
+def test_observer_sees_every_mask_change():
+    g = _graph_over(NAMES)
+    res = Residency()
+    res.attach(g.arrays())
+    seen = []
+    res.observer = lambda did, name, old, new: seen.append((name, old, new))
+    res.add_copy("d2", 0)
+    res.write("d2", 1)
+    res.drop_copy("d2", 1)
+    assert [(n, bool(o), bool(w)) for n, o, w in seen] == [
+        ("d2", False, True), ("d2", True, True), ("d2", True, False)
+    ]
+    # no-op changes do not fire
+    seen.clear()
+    res.drop_copy("d2", 5)
+    assert seen == []
+
+
+# ---------------------------------------------------------------------------
+# the capacity-bounded memory layer (repro.runtime.memory): resident bytes
+# never exceed capacity, dirty evictions write back before invalidation,
+# and an unbounded single-graph engine run is interval-identical to the
+# Simulator facade
+
+
+def _random_graph(seed: int, n_tasks: int = 40, n_data: int = 10):
+    from repro.core import DataObject, Mode, TaskGraph
+
+    rng = np.random.default_rng(seed)
+    # sizes bounded so a 3-access working set always fits the 500 kB test
+    # capacity (the manager rejects capacities below one task's needs)
+    datas = [
+        DataObject(f"x{i}", int(rng.integers(1_000, 150_000)))
+        for i in range(n_data)
+    ]
+    g = TaskGraph()
+    for _ in range(n_tasks):
+        k = int(rng.integers(1, 4))
+        picks = rng.choice(n_data, size=k, replace=False)
+        accesses = []
+        for j, di in enumerate(picks):
+            mode = Mode.RW if j == 0 else (
+                Mode.R if rng.random() < 0.6 else Mode.W
+            )
+            accesses.append((datas[di], mode))
+        g.add_task(
+            f"kind{int(rng.integers(3))}", accesses,
+            flops=float(rng.uniform(1e6, 1e8)),
+        )
+    return g
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    st.integers(0, 10_000),
+    st.sampled_from(["lru", "affinity"]),
+    st.sampled_from(["heft", "dada?alpha=0.5&use_cp=1", "locality"]),
+)
+def test_capacity_never_exceeded_and_dirty_written_back(seed, policy, spec):
+    """Under a tight capacity every device memory's resident bytes stay
+    within bounds at all times (high-water mark), every run still
+    completes, and any evicted sole copy was written back to host before
+    invalidation (it must be re-readable — completion proves it, and the
+    write-back traffic is accounted)."""
+    from repro.configs.paper_machine import paper_machine
+    from repro.core import Simulator
+    from repro.sched import resolve
+
+    g = _random_graph(seed)
+    cap = 500_000  # a few data objects worth: forces eviction
+    sim = Simulator(
+        g, paper_machine(3), resolve(spec), seed=seed,
+        mem_capacity=cap, eviction=policy,
+    )
+    res = sim.run()
+    assert sorted(iv.tid for iv in res.intervals) == list(range(len(g)))
+    for mem, high in sim.memory.max_resident.items():
+        assert high <= cap, (mem, high, cap)
+    # residency stayed coherent: every object still has a valid copy
+    for name in sim.arrays.data_names:
+        assert sim.residency.has_any(name)
+    if sim.metrics.n_writebacks:
+        assert sim.metrics.writeback_bytes > 0
+        # write-back traffic is real traffic: accounted in total_bytes
+        assert res.total_bytes >= sim.metrics.writeback_bytes
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    st.integers(0, 10_000),
+    st.sampled_from(["heft", "dada?alpha=0.5&use_cp=1", "ws"]),
+)
+def test_unbounded_engine_interval_identical_to_simulator(seed, spec):
+    """A single graph submitted to a bare Engine with capacity unbounded
+    replays the Simulator facade bit-for-bit: same intervals, same
+    transfer totals, same event count."""
+    from repro.configs.paper_machine import paper_machine
+    from repro.core import Simulator
+    from repro.runtime import Engine
+    from repro.sched import resolve
+
+    machine = paper_machine(2)
+    sim = Simulator(_random_graph(seed), machine, resolve(spec), seed=seed)
+    a = sim.run()
+    eng = Engine(machine, resolve(spec), seed=seed)
+    eng.submit(_random_graph(seed))
+    (b,) = eng.run()
+    assert [
+        (iv.tid, iv.rid, iv.start, iv.end) for iv in a.intervals
+    ] == [(iv.tid, iv.rid, iv.start, iv.end) for iv in b.intervals]
+    assert a.total_bytes == b.total_bytes
+    assert a.n_transfers == b.n_transfers
+    assert a.n_steals == b.n_steals
+    assert a.n_events == b.n_events
+
+
+def test_write_back_preserves_sole_copy():
+    """Deterministic dirty-eviction scenario: data written on a GPU (sole
+    copy) must be written back to host when evicted, not lost."""
+    from repro.configs.paper_machine import paper_machine
+    from repro.core import DataObject, Mode, Simulator, TaskGraph
+    from repro.sched import resolve
+
+    g = TaskGraph()
+    mb = 1024 * 1024
+    # t0 writes a (sole copy lands on the GPU); filler tasks then flood the
+    # GPU memory so `a` is evicted; t_last re-reads `a`
+    a = DataObject("a", 4 * mb)
+    fillers = [DataObject(f"f{i}", 4 * mb) for i in range(4)]
+    g.add_task("w", [(a, Mode.W)], flops=1e9)
+    for f in fillers:
+        g.add_task("w", [(f, Mode.RW)], flops=1e9)
+    g.add_task("r", [(a, Mode.R)], flops=1e9)
+
+    class PinGpu:
+        name = "pin0"
+        allow_steal = False
+        owner_lifo = False
+
+        def init(self, sim):
+            self.gpu = sim.machine.gpus[0].rid
+
+        def place(self, sim, ready, src):
+            for t in ready:
+                sim.push(t, self.gpu)
+
+    sim = Simulator(
+        g, paper_machine(1), PinGpu(), seed=0, noise=0.0,
+        mem_capacity=10 * mb, eviction="lru",
+    )
+    res = sim.run()
+    assert sorted(iv.tid for iv in res.intervals) == list(range(len(g)))
+    assert sim.metrics.n_evictions > 0
+    assert sim.metrics.n_writebacks > 0  # `a` (and fillers) were dirty
+    assert sim.metrics.writeback_bytes >= 4 * mb
