@@ -52,7 +52,10 @@ RESULTS = Path(__file__).resolve().parent / "results"
 CURRENT = RESULTS / "BENCH_sched.json"
 BASELINE = RESULTS / "BENCH_sched_baseline.json"
 
-KEY_FIELDS = ("kernel", "strategy", "backend", "nt", "n_gpus", "capacity")
+KEY_FIELDS = (
+    "kernel", "strategy", "backend", "nt", "n_gpus", "capacity",
+    "churn", "fault_mode",
+)
 
 
 def _rows_by_key(section: dict) -> dict:

@@ -10,9 +10,10 @@ cost along two axes:
     and reports wall-clock, simulator events/sec and tasks/sec. Two extra
     row families gate the layered runtime: a **capacity-bounded** pass
     (32 MB device memories, affinity eviction — the eviction/write-back/
-    pressure path) and a **multi-graph streaming** row (four tenant DAGs
+    pressure path), a **multi-graph streaming** row (four tenant DAGs
     interleaving on one ``repro.runtime.Engine``, with per-graph
-    makespans);
+    makespans), and a **churned** row family (seeded GPU detach/attach at
+    ``CHURN_RATE`` under both recovery modes — the fault-handling path);
   * **λ-probe placement** — one wide ready wave of an NT=64 Cholesky on
     the 32-resource scaled machine, timed through ``DADA.place`` per
     backend: this is the (ready × resources × λ-probes) scoring kernel the
@@ -159,6 +160,7 @@ def whole_sim_rows(nts, n_gpus: int, n_runs: int, backends) -> list:
                     row = dict(
                         kernel=kernel, strategy=label, backend=backend,
                         nt=nt, n_gpus=n_gpus, runs=n_runs, capacity=capacity,
+                        churn=0.0, fault_mode="drain",
                         wall_s=round(dt, 4), events=events,
                         events_per_s=round(events / dt, 1) if dt > 0 else 0.0,
                         tasks_per_s=round(tasks / dt, 1) if dt > 0 else 0.0,
@@ -218,6 +220,7 @@ def streaming_rows(nt: int, n_gpus: int, n_runs: int, n_graphs: int = 4) -> list
     row = dict(
         kernel=f"cholesky-x{n_graphs}stream", strategy="dada(a)+cp",
         backend="numpy", nt=nt, n_gpus=n_gpus, runs=n_runs, capacity=0,
+        churn=0.0, fault_mode="drain",
         n_graphs=n_graphs, wall_s=round(dt, 4), events=events,
         events_per_s=round(events / dt, 1) if dt > 0 else 0.0,
         tasks_per_s=round(tasks / dt, 1) if dt > 0 else 0.0,
@@ -229,6 +232,66 @@ def streaming_rows(nt: int, n_gpus: int, n_runs: int, n_graphs: int = 4) -> list
         f"per_graph_makespans={per_graph}"
     )
     return [row]
+
+
+# ---------------------------------------------------------------------------
+# fault-injected (churned) throughput
+
+
+# seeded accelerator churn at this rate over the NT=16 Cholesky trace
+# yields a handful of detach/attach cycles per run — enough to keep the
+# recovery paths (requeue, evacuation, epoch invalidation) on the measured
+# critical path without drowning the scheduler signal in fault handling
+CHURN_RATE = 150.0
+CHURN_STRATEGIES = ("heft", "dada(a)+cp")
+
+
+def churn_rows(nt: int, n_gpus: int, n_runs: int) -> list:
+    """Events/sec with seeded GPU churn live, for both recovery modes —
+    regression-gates the fault path (detach/attach handling, kill-and-
+    requeue, dirty-data evacuation) the same way the capacity row gates
+    eviction. The scoring path is numpy: the fused jax path disengages
+    while any resource is dead, so it would measure the wrong thing."""
+    machine = machine_for(n_gpus)
+    gfac = graphs_for(nt)["cholesky"]
+    graphs = [gfac() for _ in range(n_runs)]
+    strats = strategies("numpy")
+    rows = []
+    for mode in ("drain", "kill"):
+        for label in CHURN_STRATEGIES:
+            sfac = strats[label]
+            dt = float("inf")
+            faults = None
+            for _rep in range(2):
+                events = tasks = 0
+                t0 = time.perf_counter()
+                for i, g in enumerate(graphs):
+                    sim = Simulator(
+                        g, machine, sfac(), seed=1234 + i,
+                        churn=CHURN_RATE, fault_mode=mode,
+                    )
+                    res = sim.run()
+                    events += res.n_events
+                    tasks += len(g)
+                    faults = res.faults
+                dt = min(dt, time.perf_counter() - t0)
+            row = dict(
+                kernel="cholesky", strategy=label, backend="numpy",
+                nt=nt, n_gpus=n_gpus, runs=n_runs, capacity=0,
+                churn=CHURN_RATE, fault_mode=mode,
+                wall_s=round(dt, 4), events=events,
+                events_per_s=round(events / dt, 1) if dt > 0 else 0.0,
+                tasks_per_s=round(tasks / dt, 1) if dt > 0 else 0.0,
+                n_detaches=faults["n_detaches"] if faults else 0,
+            )
+            rows.append(row)
+            print(
+                f"sched_overhead/cholesky/{label}/gpus{n_gpus}/nt{nt}/"
+                f"numpy/churn{CHURN_RATE:g}-{mode},{dt / n_runs * 1e6:.1f},"
+                f"events_per_s={row['events_per_s']};"
+                f"n_detaches={row['n_detaches']}"
+            )
+    return rows
 
 
 # ---------------------------------------------------------------------------
@@ -384,6 +447,7 @@ def main() -> list:
     rows = whole_sim_rows(nts, n_gpus, n_runs, backends)
     if nts:  # REPRO_BENCH_NT="" is a valid empty sweep
         rows += streaming_rows(nts[0], n_gpus, n_runs)
+        rows += churn_rows(nts[0], n_gpus, n_runs)
     total_ev = sum(r["events"] for r in rows)
     total_s = sum(r["wall_s"] for r in rows)
     if total_s > 0:

@@ -104,17 +104,35 @@ class DADA(ScoringBackendMixin, Strategy):
 
         # memory-pressure penalty under +CP (capacity-bounded memories):
         # predicted eviction seconds folded into the transfer matrix on
-        # the numpy and jax scoring paths alike
+        # the numpy and jax scoring paths alike. fault_mask=False: DADA
+        # handles detached resources by filtering its placement pools
+        # below — an +inf fold would blow up `upper` (the λ search's
+        # feasibility anchor) and every probe's load updates
         from repro.runtime.memory import fold_pressure, pressure_rows_for
 
-        P = pressure_rows_for(sim, tids, resources) if self.use_cp else None
+        P = (
+            pressure_rows_for(sim, tids, resources, fault_mask=False)
+            if self.use_cp
+            else None
+        )
+
+        # detached resources (repro.runtime.faults): excluded from every
+        # placement pool and load update; with no resource detached the
+        # sets below are unchanged and the fused path stays available
+        faults = getattr(sim, "faults", None)
+        dead = (
+            faults.dead_rids
+            if faults is not None and faults.any_dead
+            else frozenset()
+        )
 
         # accelerated fused scoring (wide activations, jax backend): C, X
         # and the affinity matrix come out of one jitted dispatch, bit-equal
-        # to the numpy formulas below
+        # to the numpy formulas below (skipped under active faults — the
+        # backend kernels do not model liveness)
         be = self._scoring_backend()
         fused = None
-        if be is not None and n >= be.min_wide:
+        if be is not None and n >= be.min_wide and not dead:
             fused = be.score_matrices(
                 sim, tids, resources,
                 p_cpu=p_cpu, p_gpu=p_gpu,
@@ -158,6 +176,12 @@ class DADA(ScoringBackendMixin, Strategy):
             lt - sim.now if lt - sim.now > 0.0 else 0.0
             for lt in (sim.load_ts[r.rid] for r in resources)
         ]
+        if dead:
+            # dead resources receive no load and contribute no backlog
+            # (their stale load_ts must not gate the λ feasibility test)
+            for j, r in enumerate(resources):
+                if r.rid in dead:
+                    offsets[j] = 0.0
 
         # affinity preferences per task, with the placement cost prefetched
         pref: List[Tuple[float, int, int, float]] = []  # (score, tid, rid, cost)
@@ -203,6 +227,8 @@ class DADA(ScoringBackendMixin, Strategy):
                         continue  # all-zero (C-level falsy) row: no preference
                     best_score, best_rid = 0.0, -1
                     for rid in range(n_res):
+                        if rid in dead:
+                            continue  # affinity to a vanished memory is void
                         s = row[rid]
                         if s > best_score + _TINY:
                             best_score, best_rid = s, rid
@@ -215,12 +241,14 @@ class DADA(ScoringBackendMixin, Strategy):
         # speedup sort keys for the flexible phase (λ-independent)
         skey = [-(pc / max(pg, _TINY)) for pc, pg in zip(p_cpu, p_gpu)]
 
-        cpu_rids = [r.rid for r in cpus]
-        gpu_rids = [r.rid for r in gpus]
+        cpu_rids = [r.rid for r in cpus if r.rid not in dead]
+        gpu_rids = [r.rid for r in gpus if r.rid not in dead]
         any_rids = cpu_rids or gpu_rids
-        have_both = bool(cpus and gpus)
-        no_cpus = not cpus
-        no_gpus = not gpus
+        if not any_rids:
+            raise RuntimeError("DADA: every resource is detached")
+        have_both = bool(cpu_rids and gpu_rids)
+        no_cpus = not cpu_rids
+        no_gpus = not gpu_rids
 
         if self.area_bound:
             area = sum(min(pc, pg) for pc, pg in zip(p_cpu, p_gpu))
@@ -241,6 +269,7 @@ class DADA(ScoringBackendMixin, Strategy):
         two_alpha = 2.0 + alpha
         area_bound = self.area_bound
         max_off = max(offsets, default=0.0)
+        n_res_alive = n_res - len(dead)
 
         # ------------------------------------------------------------------
         def try_build(lam: float) -> Optional[Tuple[Dict[int, int], List[float]]]:
@@ -252,7 +281,7 @@ class DADA(ScoringBackendMixin, Strategy):
             if max_off > cap:
                 return None
             if area_bound:
-                capacity = lam * n_res - off_total
+                capacity = lam * n_res_alive - off_total
                 if area > capacity + _TINY:
                     return None  # certificate: no λ-schedule exists
             loads = offsets.copy()

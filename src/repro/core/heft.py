@@ -82,17 +82,25 @@ class HEFT(ScoringBackendMixin, Strategy):
                 cls_times[r.cls.name] = col
             cols.append(col)
 
-        # memory-pressure penalty (capacity-bounded memories only):
-        # predicted eviction seconds folded into the transfer matrix, on
-        # the numpy and jax scoring paths alike
+        # memory-pressure penalty (capacity-bounded memories, plus the
+        # +inf mask over detached resources): predicted eviction seconds
+        # folded into the transfer matrix, on the numpy and jax scoring
+        # paths alike
         from repro.runtime.memory import fold_pressure, pressure_rows_for
 
         P = pressure_rows_for(sim, tids, resources)
 
+        # under active faults the scalar path runs (dead columns carry
+        # +inf, which the fused backend's kernels do not model); with no
+        # resource detached the fused path is untouched, preserving
+        # cross-backend equivalence
+        faults = getattr(sim, "faults", None)
+        any_dead = faults is not None and faults.any_dead
+
         # accelerated path (wide activations, jax backend): fused transfer
         # matrix + jitted sequential EFT scan, bit-identical placements
         be = self._scoring_backend()
-        if be is not None and n >= be.min_wide:
+        if be is not None and n >= be.min_wide and not any_dead:
             fused = be.score_matrices(
                 sim, tids, resources, use_cp=True, x_rows=True, x_bias=P
             )

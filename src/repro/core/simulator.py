@@ -46,6 +46,9 @@ class Simulator(Engine):
         mem_capacity: Optional[int] = None,
         eviction: Optional[str] = None,
         cancel_stale: Optional[bool] = None,
+        churn: Optional[float] = None,
+        fault_mode: Optional[str] = None,
+        fault_trace: Optional[str] = None,
     ) -> None:
         super().__init__(
             machine,
@@ -57,6 +60,9 @@ class Simulator(Engine):
             mem_capacity=mem_capacity,
             eviction=eviction,
             cancel_stale=cancel_stale,
+            churn=churn,
+            fault_mode=fault_mode,
+            fault_trace=fault_trace,
         )
         self._primary: GraphContext = self.submit(graph)
         # legacy aliases (instrumentation and benchmarks reset these
@@ -88,4 +94,5 @@ class Simulator(Engine):
             strategy=self.strategy.name,
             total_flops=self._primary.graph.total_flops(),
             n_events=m.n_events,
+            faults=m.fault_summary() if self._faults_on else None,
         )

@@ -6,8 +6,10 @@ eviction cost shared with ``repro.runtime.memory``), ``sharding`` holds
 the rule-based PartitionSpec derivations for every model pytree plus the
 batch-sharding constraint helpers the model code calls unconditionally
 (formerly ``hints``, folded in now that the package is real), ``elastic``
-re-plans mesh + placement after device-count changes, and ``straggler``
-re-balances micro-batches from observed step times.
+re-plans mesh + placement after device-count changes (and, via
+``ElasticReplanner``, follows a live fault-injected engine's
+detach/attach stream), and ``straggler`` re-balances micro-batches from
+observed step times with preempted shards taken out of rotation.
 """
 from . import elastic, sched_bridge, sharding, straggler
 

@@ -23,6 +23,12 @@ class StragglerPlanner:
     estimate (exponential moving average, ``ema`` weight on the new
     sample), and subsequent plans allocate proportionally to shard speed
     (largest-remainder rounding keeps the total exact).
+
+    Shards lost to preemption are taken out of rotation with
+    :meth:`deactivate` (their allocation drops to zero and their cost
+    estimate freezes) and rejoin with :meth:`reactivate`, resuming from
+    the frozen estimate — the planner-level mirror of the runtime's
+    detach/attach (``repro.runtime.faults``).
     """
 
     def __init__(
@@ -41,7 +47,38 @@ class StragglerPlanner:
         self.ema = ema
         # relative per-microbatch cost per shard; uniform until observed
         self._cost = np.ones(n_shards, dtype=np.float64)
+        self._active = np.ones(n_shards, dtype=bool)
         self.n_observations = 0
+
+    # ------------------------------------------------------------------
+    def _check_shard(self, i: int) -> int:
+        i = int(i)
+        if not 0 <= i < self.n_shards:
+            raise ValueError(f"shard {i} out of range [0, {self.n_shards})")
+        return i
+
+    def deactivate(self, i: int) -> None:
+        """Take shard ``i`` out of rotation (idempotent). Its cost
+        estimate freezes at the last observed value."""
+        i = self._check_shard(i)
+        self._active[i] = False
+        if not self._active.any():
+            self._active[i] = True
+            raise ValueError("cannot deactivate the last active shard")
+
+    def reactivate(self, i: int) -> None:
+        """Return shard ``i`` to rotation (idempotent), resuming from
+        its frozen cost estimate."""
+        self._active[self._check_shard(i)] = True
+
+    @property
+    def active(self) -> np.ndarray:
+        """Boolean active mask (copy)."""
+        return self._active.copy()
+
+    @property
+    def n_active(self) -> int:
+        return int(np.count_nonzero(self._active))
 
     # ------------------------------------------------------------------
     def observe(
@@ -59,8 +96,18 @@ class StragglerPlanner:
 
     # ------------------------------------------------------------------
     def plan(self) -> np.ndarray:
-        """Integer micro-batch allocation ∝ shard speed, summing exactly."""
-        speed = 1.0 / np.maximum(self._cost, 1e-12)
+        """Integer micro-batch allocation ∝ shard speed, summing exactly.
+
+        Only active shards receive work (inactive allocations are 0);
+        the total must still cover one micro-batch per active shard.
+        """
+        act = np.flatnonzero(self._active)
+        if self.total < act.size:
+            raise ValueError(
+                "need at least one micro-batch per active shard "
+                f"(active={act.size}, total={self.total})"
+            )
+        speed = 1.0 / np.maximum(self._cost[act], 1e-12)
         raw = self.total * speed / speed.sum()
         base = np.floor(raw).astype(np.int64)
         # every shard keeps at least one micro-batch: a starved shard
@@ -89,7 +136,9 @@ class StragglerPlanner:
                     surplus += 1
                     if surplus == 0:
                         break
-        return base
+        out = np.zeros(self.n_shards, dtype=np.int64)
+        out[act] = base
+        return out
 
     # ------------------------------------------------------------------
     def expected_makespan(self, plan: Sequence[int]) -> float:

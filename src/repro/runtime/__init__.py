@@ -14,8 +14,13 @@ layers (each owning one concern, each independently testable):
     pressure signal policies consume;
   * :mod:`~repro.runtime.engine`    — the event loop itself, now accepting
     ``submit(graph)`` so many tenant DAGs interleave on one machine;
-  * :mod:`~repro.runtime.metrics`   — counters, intervals and
-    :class:`SimResult`.
+  * :mod:`~repro.runtime.faults`    — NEW: resource dynamics — detach/
+    attach events, drain vs kill-and-requeue recovery, dirty-data
+    evacuation, seeded churn;
+  * :mod:`~repro.runtime.traces`    — NEW: JSONL preemption-trace replay
+    (the varuna-style spot-instance shape);
+  * :mod:`~repro.runtime.metrics`   — counters, intervals,
+    :class:`SimResult` and the recovery report.
 
 ``repro.core.Simulator`` remains the single-graph facade over
 :class:`Engine` and is bit-for-bit identical to the pre-decomposition
@@ -37,14 +42,20 @@ import repro.core  # noqa: F401  (deliberate cycle-breaking import)
 
 from .engine import Engine, GraphContext, Strategy
 from .events import EventQueue
+from .faults import FaultManager
 from .memory import MemoryManager, predicted_eviction_bytes
-from .metrics import Metrics, ScheduledInterval, SimResult
+from .metrics import Metrics, ScheduledInterval, SimResult, recovery_report
 from .queues import Worker, WorkSteal, eligible_victims
+from .traces import FAULT_EVENTS, FAULT_MODES, FaultEvent, load_trace, save_trace
 from .transfers import TransferEngine
 
 __all__ = [
     "Engine",
     "EventQueue",
+    "FAULT_EVENTS",
+    "FAULT_MODES",
+    "FaultEvent",
+    "FaultManager",
     "GraphContext",
     "MemoryManager",
     "Metrics",
@@ -55,5 +66,8 @@ __all__ = [
     "Worker",
     "WorkSteal",
     "eligible_victims",
+    "load_trace",
     "predicted_eviction_bytes",
+    "recovery_report",
+    "save_trace",
 ]

@@ -56,9 +56,11 @@ from repro.core.perfmodel import (
 )
 
 from .events import EventQueue
+from .faults import FaultManager
 from .memory import MemoryManager
 from .metrics import Metrics, ScheduledInterval, SimResult
 from .queues import Worker, eligible_victims
+from .traces import FAULT_EVENTS, FAULT_MODES, load_trace
 from .transfers import TransferEngine
 
 
@@ -85,7 +87,7 @@ class GraphContext:
         "gid", "graph", "arrays", "residency", "inflight", "waiting",
         "noise_mult", "preds", "succ", "done", "n_done", "n_tasks",
         "rid_static", "predictors", "submit_at", "finish", "intervals",
-        "data_version", "readers_left",
+        "data_version", "readers_left", "attempt",
     )
 
     def __init__(self, gid: int, graph: TaskGraph) -> None:
@@ -112,6 +114,10 @@ class GraphContext:
         self.intervals: List[ScheduledInterval] = []
         self.data_version: Dict[str, int] = {}  # bumped per write (cancel-stale)
         self.readers_left: List[int] = []  # per-did pending readers (bounded)
+        # per-task execution attempt, bumped when a kill-mode detach aborts
+        # the running task: the already-posted "done" event of the aborted
+        # execution is recognized as stale by its recorded attempt
+        self.attempt: List[int] = [0] * len(graph)
 
 
 class Engine:
@@ -135,6 +141,9 @@ class Engine:
         mem_capacity: Optional[int] = None,
         eviction: Optional[str] = None,
         cancel_stale: Optional[bool] = None,
+        churn: Optional[float] = None,
+        fault_mode: Optional[str] = None,
+        fault_trace: Optional[str] = None,
     ) -> None:
         self.machine = machine
         self.strategy = strategy
@@ -182,6 +191,25 @@ class Engine:
         self._bounded = self.memory.bounded
         self._cancel_stale = bool(cancel_stale)
         self.transfers.cancel_stale = self._cancel_stale
+
+        # resource dynamics: detach/attach faults (repro.runtime.faults).
+        # The manager is always present but inert until a fault source
+        # registers — hot paths check `_faults_on` once, preserving the
+        # zero-fault bit-for-bit equivalence contract.
+        if fault_mode is None:
+            fault_mode = cfg.fault_mode
+        self.faults = FaultManager(machine, mode=fault_mode)
+        self.transfers.faults = self.faults
+        self._faults_on = False
+        if churn is None:
+            churn = cfg.churn
+        if churn:
+            self.faults.enable_churn(churn, seed=seed, mode=fault_mode)
+            self._faults_on = True
+        if fault_trace is None:
+            fault_trace = cfg.fault_trace
+        if fault_trace:
+            self.replay_trace(fault_trace)
 
         # submitted graphs
         self._ctxs: List[GraphContext] = []
@@ -298,10 +326,54 @@ class Engine:
         return self._predictor(self._cur, cls)
 
     # ------------------------------------------------------------------
+    # fault injection (repro.runtime.faults)
+    def inject(
+        self,
+        event: str,
+        rid: int,
+        at: Optional[float] = None,
+        mode: Optional[str] = None,
+    ) -> None:
+        """Schedule a ``"detach"``/``"attach"`` fault for resource ``rid``.
+
+        ``at`` is simulated time (default: now; past times clamp to now —
+        simulated time never rewinds). ``mode`` selects the recovery mode
+        for a detach (``"drain"``/``"kill"``; default: the engine's
+        ``fault_mode``). The fault fires as an event inside the run loop,
+        interleaving deterministically with transfers and completions.
+        """
+        if event not in FAULT_EVENTS:
+            raise ValueError(
+                f"fault event must be one of {FAULT_EVENTS}, got {event!r}"
+            )
+        if mode is not None and mode not in FAULT_MODES:
+            raise ValueError(
+                f"fault mode must be one of {FAULT_MODES}, got {mode!r}"
+            )
+        self.faults._check_rid(rid)
+        at = self.now if at is None else max(float(at), self.now)
+        self.faults.active = True
+        self._faults_on = True
+        self.events.post(at, "fault", (event, int(rid), mode))
+
+    def replay_trace(self, trace) -> None:
+        """Inject every event of a JSONL preemption trace — a path for
+        :func:`repro.runtime.traces.load_trace`, or an iterable of
+        :class:`~repro.runtime.traces.FaultEvent`."""
+        events = load_trace(trace) if isinstance(trace, str) else trace
+        for ev in events:
+            self.inject(ev.event, ev.rid, at=ev.t, mode=ev.mode)
+
+    # ------------------------------------------------------------------
     # queue operations (pop / push / steal)
     def push(self, task: Task, rid: int) -> None:
         """Push ``task`` onto worker ``rid``'s queue (any worker may push
         into any other worker's queue, §2.2)."""
+        if self._faults_on and not self.faults.alive[rid]:
+            # backstop for fault-oblivious strategies (ws pushes to the
+            # completing worker, score policies to an argmin): work aimed
+            # at a dead worker lands on the next alive one instead
+            rid = self.faults.redirect(rid)
         w = self.workers[rid]
         w.queue.append(task)
         ctx = self._ctx_of[id(task)]
@@ -327,10 +399,13 @@ class Engine:
     def _steal_round(self) -> None:
         # callers guard on self._steal_on (strategy.allow_steal)
         progress = True
+        faults_on = self._faults_on
         while progress:
             progress = False
             for w in self.workers:
                 if w.running is None and not w.queue:
+                    if faults_on and not self.faults.alive[w.rid]:
+                        continue  # dead workers do not steal
                     if self._steal(w):
                         self._try_start(w)
                         progress = True
@@ -348,6 +423,8 @@ class Engine:
         if w.running is not None or not w.queue:
             return
         rid = w.rid
+        if self._faults_on and not self.faults.alive[rid]:
+            return  # the engine never dispatches to a detached device
         task = w.queue[-1] if self._lifo else w.queue[0]
         ctx = self._ctx_of[id(task)]
         # make sure inputs are (going to be) resident
@@ -399,7 +476,7 @@ class Engine:
             dur *= ctx.noise_mult[tid]
         w.running = task
         w.run_start = now
-        self.events.post(now + dur, "done", (rid, ctx, tid, dur))
+        self.events.post(now + dur, "done", (rid, ctx, tid, dur, ctx.attempt[tid]))
 
     # ------------------------------------------------------------------
     def _complete(self, rid: int, ctx: GraphContext, tid: int, dur: float) -> None:
@@ -417,10 +494,19 @@ class Engine:
         self.model.observe(task, res.cls, dur)
         bit = self._bit_of[rid]
         bounded = self._bounded
+        # a drained worker finishing after its detach: its memory is gone,
+        # so the outputs are written back to host inside the preemption
+        # notice window (charged on the memory's link) instead of landing
+        # on the vanished device
+        dead_mem = None
+        if self._faults_on and not self.faults.alive[rid]:
+            m = self._mem_of[rid]
+            if m != HOST_MEM and m in self.faults.dead_mems:
+                dead_mem = m
         if bounded:
             self._unpin_worker(w)
             mem = self._mem_of[rid]
-            if mem != HOST_MEM:
+            if mem != HOST_MEM and dead_mem is None:
                 # reserve space for the outputs this completion materializes
                 incoming = 0
                 mask_list = ctx.residency.mask_list
@@ -439,7 +525,15 @@ class Engine:
         cancel_stale = self._cancel_stale
         versions = ctx.data_version
         for did, name, size in ctx.arrays.task_writes[tid]:
-            write_id(did, name, bit)
+            if dead_mem is not None:
+                self.transfers.one_hop(
+                    size, self.transfers.mem_link.get(dead_mem), self.now
+                )
+                metrics.n_evacuations += 1
+                metrics.evacuated_bytes += size
+                write_id(did, name, 1)  # sole valid copy lands on host
+            else:
+                write_id(did, name, bit)
             # invalidate any stale dedup entries for this data (O(1): the
             # in-flight table is indexed per data name)
             inflight_pop(name, None)
@@ -478,6 +572,7 @@ class Engine:
     def _run_loop(self) -> None:
         self._running = True
         self.strategy.init(self)
+        self.faults.schedule_churn(self)
         pending, self._pending = self._pending, []
         for ctx in pending:
             self._activate_roots(ctx)
@@ -489,13 +584,15 @@ class Engine:
         steal_on = self._steal_on
         bounded = self._bounded
         cancel_stale = self._cancel_stale
+        faults = self.faults
+        faults_on = self._faults_on
         n_events = 0
         while events:
             t, _, kind, payload = heappop(events)
             self.now = t
             n_events += 1
             if kind == "xfer":
-                ctx, name, mem, ver = payload
+                ctx, name, mem, ver, epoch = payload
                 inflight = ctx.inflight
                 flights = inflight.get(name)
                 if flights is not None:
@@ -504,7 +601,16 @@ class Engine:
                         del inflight[name]
                 if bounded and mem != HOST_MEM:
                     self.memory.release(ctx, name, mem)
-                if cancel_stale and ver != ctx.data_version.get(name, 0):
+                if faults_on and mem != HOST_MEM and (
+                    mem in faults.dead_mems
+                    or epoch != faults.mem_epoch.get(mem, 0)
+                ):
+                    # the destination device detached while this copy was
+                    # in flight: the DMA died with it — drop the landing
+                    # (the memory was salvaged and its waiters scrubbed at
+                    # detach; a re-attached device must not resurrect it)
+                    pass
+                elif cancel_stale and ver != ctx.data_version.get(name, 0):
                     # the data was overwritten while this copy was in
                     # flight: the landing is stale and is dropped (the
                     # blocked readers below re-request against the new
@@ -560,8 +666,16 @@ class Engine:
                 if steal_on:
                     self._steal_round()
             elif kind == "done":
-                rid, ctx, tid, dur = payload
-                self._complete(rid, ctx, tid, dur)
+                rid, ctx, tid, dur, att = payload
+                # a stale attempt is an execution aborted by a kill-mode
+                # detach: the task was re-activated elsewhere, this event
+                # is the ghost of its first run
+                if att == ctx.attempt[tid]:
+                    self._complete(rid, ctx, tid, dur)
+            elif kind == "fault":
+                action, rid, mode = payload
+                faults_on = True
+                faults.handle(self, action, rid, mode)
             else:  # "submit": a streamed graph arrives
                 ctx = payload
                 self._activate_roots(ctx)
@@ -603,6 +717,9 @@ class Engine:
             strategy=self.strategy.name,
             total_flops=ctx.graph.total_flops(),
             n_events=self.metrics.n_events,
+            faults=(
+                self.metrics.fault_summary() if self._faults_on else None
+            ),
         )
 
     def run(self) -> List[SimResult]:

@@ -51,25 +51,46 @@ def predicted_eviction_bytes(resident_bytes, incoming_bytes, capacity):
     return np.maximum(0.0, np.asarray(incoming_bytes, dtype=np.float64) - free)
 
 
-def pressure_rows_for(sim, tids: Sequence[int], resources) -> Optional[np.ndarray]:
+def pressure_rows_for(
+    sim, tids: Sequence[int], resources, fault_mask: bool = True
+) -> Optional[np.ndarray]:
     """The (ready × resources) memory-pressure penalty for a simulation,
-    or ``None`` when its device memories are unbounded.
+    or ``None`` when its device memories are unbounded and no resource is
+    detached.
 
     The one shared lookup every consumer goes through — the
     ``ScoreMatrixPolicy.pressure_matrix`` hook, HEFT/DADA's transfer-row
     fold, and the attached ``score_matrix`` introspection views — so the
     signal cannot drift between them.
+
+    Detached resources (``repro.runtime.faults``) surface here too: their
+    columns mask to +inf, so every score-matrix consumer avoids dead
+    devices through the channel it already reads. ``fault_mask=False``
+    opts out for consumers that handle liveness explicitly (DADA filters
+    its placement pools — an +inf cost row would poison its λ search).
     """
     memory = getattr(sim, "memory", None)
-    if memory is None or not memory.bounded:
-        return None
-    return memory.pressure_rows(
-        sim.arrays,
-        tids,
-        [r.mem for r in resources],
-        sim.residency,
-        sim.transfer_model,
-    )
+    rows = None
+    if memory is not None and memory.bounded:
+        rows = memory.pressure_rows(
+            sim.arrays,
+            tids,
+            [r.mem for r in resources],
+            sim.residency,
+            sim.transfer_model,
+        )
+    if fault_mask:
+        faults = getattr(sim, "faults", None)
+        if faults is not None and faults.any_dead:
+            if rows is None:
+                rows = np.zeros(
+                    (len(tids), len(resources)), dtype=np.float64
+                )
+            dead = faults.dead_rids
+            for j, r in enumerate(resources):
+                if r.rid in dead:
+                    rows[:, j] = np.inf
+    return rows
 
 
 def fold_pressure(X, P: Optional[np.ndarray]):
@@ -235,6 +256,15 @@ class MemoryManager:
         size = self._reservations.pop((ctx, name, mem), None)
         if size is not None:
             self._reserved[mem] -= size
+
+    def drop_mem(self, mem: int) -> None:
+        """Forget every reservation targeting ``mem`` (the memory's device
+        detached: pending copies toward it will be dropped at landing, so
+        their space claims must not survive into a re-attach)."""
+        for key in [k for k in self._reservations if k[2] == mem]:
+            del self._reservations[key]
+        if mem in self._reserved:
+            self._reserved[mem] = 0
 
     # ------------------------------------------------------------------
     # eviction

@@ -10,7 +10,7 @@ multi-tenant streams.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 from repro.core.machine import MachineModel
 
@@ -34,6 +34,9 @@ class SimResult:
     strategy: str
     total_flops: float
     n_events: int = 0
+    # fault/recovery counters (None for runs with no fault source active;
+    # see Metrics.fault_summary and repro.runtime.faults)
+    faults: Optional[Dict[str, float]] = None
 
     @property
     def gflops(self) -> float:
@@ -52,6 +55,8 @@ class Metrics:
     __slots__ = (
         "total_bytes", "n_transfers", "n_steals", "n_events",
         "busy", "intervals", "n_evictions", "n_writebacks", "writeback_bytes",
+        "n_detaches", "n_attaches", "n_killed", "n_requeued",
+        "n_evacuations", "evacuated_bytes", "wasted_s",
     )
 
     def __init__(self, machine: MachineModel) -> None:
@@ -65,3 +70,48 @@ class Metrics:
         self.n_evictions = 0
         self.n_writebacks = 0
         self.writeback_bytes = 0
+        # fault/recovery counters (repro.runtime.faults)
+        self.n_detaches = 0
+        self.n_attaches = 0
+        self.n_killed = 0  # running tasks aborted (kill-and-requeue)
+        self.n_requeued = 0  # tasks re-activated off dead workers
+        self.n_evacuations = 0  # dirty data salvaged to host at detach
+        self.evacuated_bytes = 0
+        self.wasted_s = 0.0  # partial execution discarded by kills
+
+    def fault_summary(self) -> Dict[str, float]:
+        """The fault counters as a plain dict (``SimResult.faults``)."""
+        return {
+            "n_detaches": self.n_detaches,
+            "n_attaches": self.n_attaches,
+            "n_killed": self.n_killed,
+            "n_requeued": self.n_requeued,
+            "n_evacuations": self.n_evacuations,
+            "evacuated_bytes": self.evacuated_bytes,
+            "wasted_s": self.wasted_s,
+        }
+
+
+def recovery_report(faulted: SimResult, baseline: SimResult) -> Dict[str, float]:
+    """Recovery metrics of a faulted run against its clairvoyant no-fault
+    baseline (same graph/machine/strategy/seed, no detach/attach events).
+
+    ``recovery_makespan`` is the headline number (claim C8): the makespan
+    the faults cost on top of the undisturbed schedule. ``extra_bytes``
+    includes both evacuation traffic and the re-transfers that rebuilding
+    affinity on the survivors required.
+    """
+    out: Dict[str, float] = {
+        "makespan": faulted.makespan,
+        "baseline_makespan": baseline.makespan,
+        "recovery_makespan": faulted.makespan - baseline.makespan,
+        "slowdown": (
+            faulted.makespan / baseline.makespan
+            if baseline.makespan > 0
+            else float("inf")
+        ),
+        "extra_bytes": faulted.total_bytes - baseline.total_bytes,
+    }
+    if faulted.faults:
+        out.update(faulted.faults)
+    return out

@@ -1,0 +1,115 @@
+"""JSONL preemption traces: replayable detach/attach schedules.
+
+Spot-instance preemption logs (the varuna-style shape: one JSON object
+per line, ``{"t": <seconds>, "event": "detach"|"attach", "rid": <id>}``)
+drive the fault layer directly, so a recorded real-world churn timeline
+can be replayed against the simulator deterministically. The optional
+``"mode"`` field selects the recovery mode per event (``"drain"`` or
+``"kill"``); omitted, the engine's default applies.
+
+Schema (documented in ``docs/runtime_architecture.md``):
+
+  * ``t``     — simulated seconds (non-negative number), required;
+  * ``event`` — ``"detach"`` or ``"attach"``, required;
+  * ``rid``   — resource id on the simulated machine (non-negative int),
+    required;
+  * ``mode``  — ``"drain"`` or ``"kill"``, optional, detach events only.
+
+Malformed lines raise ``ValueError`` naming the file and line number —
+the same fail-at-the-edge contract as ``repro.sched.SchedConfig``.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+from typing import Iterable, List, Optional, Sequence, Union
+
+FAULT_EVENTS = ("detach", "attach")
+FAULT_MODES = ("drain", "kill")
+
+
+@dataclass(frozen=True)
+class FaultEvent:
+    """One preemption-trace entry: (when, what, which resource)."""
+
+    t: float
+    event: str
+    rid: int
+    mode: Optional[str] = None
+
+    def __post_init__(self) -> None:
+        if self.event not in FAULT_EVENTS:
+            raise ValueError(
+                f"fault event must be one of {FAULT_EVENTS}, got {self.event!r}"
+            )
+        if self.mode is not None and self.mode not in FAULT_MODES:
+            raise ValueError(
+                f"fault mode must be one of {FAULT_MODES}, got {self.mode!r}"
+            )
+        if not (self.t >= 0.0):
+            raise ValueError(f"fault time must be >= 0, got {self.t!r}")
+        if self.rid < 0:
+            raise ValueError(f"fault rid must be >= 0, got {self.rid!r}")
+
+
+def _parse_entry(obj, where: str) -> FaultEvent:
+    if not isinstance(obj, dict):
+        raise ValueError(f"{where}: expected a JSON object, got {type(obj).__name__}")
+    unknown = set(obj) - {"t", "event", "rid", "mode"}
+    if unknown:
+        raise ValueError(f"{where}: unknown trace field(s) {sorted(unknown)}")
+    try:
+        t = obj["t"]
+        event = obj["event"]
+        rid = obj["rid"]
+    except KeyError as e:
+        raise ValueError(f"{where}: missing required field {e.args[0]!r}") from None
+    if isinstance(t, bool) or not isinstance(t, (int, float)):
+        raise ValueError(f"{where}: 't' must be a number, got {t!r}")
+    if isinstance(rid, bool) or not isinstance(rid, int):
+        raise ValueError(f"{where}: 'rid' must be an integer, got {rid!r}")
+    try:
+        return FaultEvent(float(t), event, rid, obj.get("mode"))
+    except ValueError as e:
+        raise ValueError(f"{where}: {e}") from None
+
+
+def load_trace(path: str) -> List[FaultEvent]:
+    """Parse a JSONL preemption trace, sorted by time (stable).
+
+    Raises ``ValueError`` with the file and line number on the first
+    malformed line — a truncated or hand-edited trace must not silently
+    replay half a schedule.
+    """
+    events: List[FaultEvent] = []
+    with open(path, "r", encoding="utf-8") as fh:
+        for lineno, line in enumerate(fh, start=1):
+            line = line.strip()
+            if not line or line.startswith("#"):
+                continue
+            where = f"{path}:{lineno}"
+            try:
+                obj = json.loads(line)
+            except json.JSONDecodeError as e:
+                raise ValueError(f"{where}: invalid JSON ({e.msg})") from None
+            events.append(_parse_entry(obj, where))
+    events.sort(key=lambda e: e.t)
+    return events
+
+
+def save_trace(
+    events: Iterable[Union[FaultEvent, Sequence]], path: str
+) -> None:
+    """Write fault events as a JSONL trace (the load_trace inverse).
+
+    Accepts :class:`FaultEvent` instances or ``(t, event, rid[, mode])``
+    sequences (e.g. a :class:`~repro.runtime.faults.FaultManager` history).
+    """
+    with open(path, "w", encoding="utf-8") as fh:
+        for ev in events:
+            if not isinstance(ev, FaultEvent):
+                ev = FaultEvent(*ev)
+            obj = {"t": ev.t, "event": ev.event, "rid": ev.rid}
+            if ev.mode is not None:
+                obj["mode"] = ev.mode
+            fh.write(json.dumps(obj) + "\n")

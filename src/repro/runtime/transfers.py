@@ -33,7 +33,7 @@ class TransferEngine:
     __slots__ = (
         "machine", "model", "events", "metrics", "memory",
         "mem_link", "link_free", "_plain_link", "_link_lat", "_link_bw",
-        "cancel_stale",
+        "cancel_stale", "faults",
     )
 
     def __init__(
@@ -48,6 +48,7 @@ class TransferEngine:
         self.events = events
         self.metrics = metrics
         self.memory = None  # MemoryManager, wired by the engine
+        self.faults = None  # FaultManager, wired by the engine
         self.cancel_stale = False
         self.link_free: Dict[int, float] = {}
         # accelerator memory -> link group (first resource on that memory)
@@ -110,6 +111,16 @@ class TransferEngine:
             # on the link ahead of this copy
             memory.reserve(ctx, name, size, dst_mem, now, protect)
         ver = ctx.data_version.get(name, 0) if self.cancel_stale else 0
+        # the destination memory's detach epoch (repro.runtime.faults):
+        # a landing posted before a detach carries a stale epoch and is
+        # dropped — the DMA died with the device. 0 whenever faults are
+        # inactive (host memory never detaches, so host hops stay 0).
+        faults = self.faults
+        epoch = (
+            faults.mem_epoch.get(dst_mem, 0)
+            if faults is not None and faults.active
+            else 0
+        )
         mem_link = self.mem_link
         post = self.events.post
         if (mask & 1) and dst_mem != HOST_MEM:
@@ -128,12 +139,12 @@ class TransferEngine:
                 if flights is None:
                     flights = inflight[name] = {}
                 flights[HOST_MEM] = mid
-                post(mid, "xfer", (ctx, name, HOST_MEM, ver))
+                post(mid, "xfer", (ctx, name, HOST_MEM, ver, 0))
             done = self.one_hop(size, mem_link.get(dst_mem), mid)
         if flights is None:
             flights = inflight[name] = {}
         flights[dst_mem] = done
-        post(done, "xfer", (ctx, name, dst_mem, ver))
+        post(done, "xfer", (ctx, name, dst_mem, ver, epoch))
         return done
 
     # ------------------------------------------------------------------

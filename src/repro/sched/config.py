@@ -28,6 +28,7 @@ SCHED_PREFIX = "REPRO_SCHED_"
 BENCH_PREFIX = "REPRO_BENCH_"
 
 from repro.runtime.memory import EVICTION_POLICIES
+from repro.runtime.traces import FAULT_MODES
 
 BACKENDS = ("numpy", "jax")
 PALLAS_MODES = ("auto", "1", "0", "off", "false")
@@ -82,6 +83,21 @@ def _parse_str_list(var: str, value: str) -> Tuple[str, ...]:
     return tuple(p.strip() for p in value.split(",") if p.strip())
 
 
+def _parse_rate(var: str, value: str) -> float:
+    rate = _parse_float(var, value)
+    if rate < 0:
+        raise _err(var, value, "expected a rate >= 0")
+    return rate
+
+
+def _parse_trace_path(var: str, value: str) -> Optional[str]:
+    if not value:
+        return None  # empty = unset (no trace replay)
+    if not os.path.isfile(value):
+        raise _err(var, value, "expected a path to an existing JSONL trace file")
+    return value
+
+
 @dataclass(frozen=True)
 class SchedConfig:
     """Every scheduling/benchmark knob, parsed and validated once.
@@ -101,6 +117,12 @@ class SchedConfig:
     - ``cancel_stale``: drop in-flight copies of data overwritten
       mid-flight instead of landing them as "valid" (off by default to
       preserve bit-for-bit equivalence with the reference simulator).
+    - ``churn``: seeded random detach/attach rate in events per simulated
+      second (0 = no churn, the default; see ``repro.runtime.faults``).
+    - ``fault_mode``: recovery mode for detaches, ``drain`` (default) or
+      ``kill`` (kill-and-requeue).
+    - ``fault_trace``: path to a JSONL preemption trace replayed into
+      every engine (``repro.runtime.traces``); must exist at parse time.
     - ``bench_backends``: backends the overhead benchmark measures.
     - ``regression_tol`` / ``row_tol``: throughput-gate tolerances.
 
@@ -117,6 +139,9 @@ class SchedConfig:
     mem_capacity: int = 0
     eviction: str = "lru"
     cancel_stale: bool = False
+    churn: float = 0.0
+    fault_mode: str = "drain"
+    fault_trace: Optional[str] = None
     bench_backends: Optional[Tuple[str, ...]] = None
     regression_tol: float = 0.25
     row_tol: float = 0.0
@@ -146,6 +171,16 @@ class SchedConfig:
             raise _err(
                 "REPRO_SCHED_EVICTION", self.eviction,
                 f"choose from {EVICTION_POLICIES}",
+            )
+        if self.churn < 0:
+            raise _err(
+                "REPRO_SCHED_CHURN", str(self.churn),
+                "expected a rate >= 0",
+            )
+        if self.fault_mode not in FAULT_MODES:
+            raise _err(
+                "REPRO_SCHED_FAULT_MODE", self.fault_mode,
+                f"choose from {FAULT_MODES}",
             )
         if self.lambda_depth is not None:
             object.__setattr__(
@@ -211,6 +246,9 @@ _ENV_SCHEMA = {
         "mem_capacity", lambda var, v: _parse_int(var, v, lo=0)),
     "REPRO_SCHED_EVICTION": ("eviction", lambda var, v: v.lower()),
     "REPRO_SCHED_CANCEL_STALE": ("cancel_stale", _parse_flag),
+    "REPRO_SCHED_CHURN": ("churn", _parse_rate),
+    "REPRO_SCHED_FAULT_MODE": ("fault_mode", lambda var, v: v.lower()),
+    "REPRO_SCHED_FAULT_TRACE": ("fault_trace", _parse_trace_path),
     "REPRO_SCHED_BACKENDS": ("bench_backends", _parse_str_list),
     "REPRO_SCHED_REGRESSION_TOL": ("regression_tol", _parse_float),
     "REPRO_SCHED_ROW_TOL": (

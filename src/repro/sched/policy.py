@@ -149,14 +149,17 @@ class ScoreMatrixPolicy(Strategy):
     ) -> Optional[np.ndarray]:
         """(ready × resources) memory-pressure penalty, in seconds.
 
-        ``None`` when device memories are unbounded (the default). Under a
-        capacity (``REPRO_SCHED_MEM_CAPACITY``) each entry is the
-        predicted eviction bytes placing the task there would force —
-        its non-resident working set beyond the memory's free space —
-        over the link bandwidth (see
-        :meth:`repro.runtime.memory.MemoryManager.pressure_rows`). The
-        generic driver adds it to every score matrix; override to weight
-        or suppress the signal.
+        ``None`` when device memories are unbounded (the default) and no
+        resource is detached. Under a capacity
+        (``REPRO_SCHED_MEM_CAPACITY``) each entry is the predicted
+        eviction bytes placing the task there would force — its
+        non-resident working set beyond the memory's free space — over
+        the link bandwidth (see
+        :meth:`repro.runtime.memory.MemoryManager.pressure_rows`).
+        Detached resources (``repro.runtime.faults``) mask their columns
+        to +inf, so every score policy avoids dead devices through this
+        one channel. The generic driver adds it to every score matrix;
+        override to weight or suppress the signal.
         """
         from repro.runtime.memory import pressure_rows_for
 

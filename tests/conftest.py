@@ -1,0 +1,26 @@
+"""Shared pytest setup: hypothesis profiles.
+
+The property suites (test_property_sim, test_residency_property,
+test_faults_property) run under the "ci" profile on the dedicated CI
+leg (``HYPOTHESIS_PROFILE=ci``): more examples, no per-example deadline
+(simulation examples are heavier than the 200 ms default allows, and CI
+machines jitter). The default profile keeps local runs fast.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))
+
+try:
+    from hypothesis import HealthCheck, settings
+except ModuleNotFoundError:
+    pass
+else:
+    settings.register_profile(
+        "ci",
+        max_examples=50,
+        deadline=None,
+        suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+        print_blob=True,
+    )
+    settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "default"))

@@ -80,6 +80,15 @@ def test_sched_overhead_reports_events_per_sec(capsys, monkeypatch, tmp_path):
     (stream,) = [r for r in rows if r["kernel"] == "cholesky-x4stream"]
     assert len(stream["per_graph_makespans"]) == 4
     assert all(m > 0 for m in stream["per_graph_makespans"])
+    # the fault path has its own churned rows: both recovery modes, keyed
+    # apart from the fault-free rows by the (churn, fault_mode) fields
+    churned = [r for r in rows if r["churn"]]
+    assert {(r["strategy"], r["fault_mode"]) for r in churned} == {
+        (s, m) for s in so.CHURN_STRATEGIES for m in ("drain", "kill")
+    }
+    assert all(r["churn"] == so.CHURN_RATE for r in churned)
+    assert all(r["fault_mode"] == "drain" and r["churn"] == 0.0
+               for r in rows if r not in churned)
     # machine-readable perf trajectory (BENCH_sched.json satellite)
     doc = json.loads(out_json.read_text())
     sec = doc["sched_overhead"]

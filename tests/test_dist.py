@@ -165,3 +165,73 @@ def test_straggler_planner_shifts_work():
     assert plan2.sum() == 32
     assert plan2[3] < 8  # slow shard sheds work
     assert p.expected_makespan(plan2) < p.expected_makespan(plan) * 0.95
+
+
+def test_straggler_zero_cost_microbatches_do_not_blow_up():
+    """A shard reporting ~zero time per micro-batch (cache artifact,
+    clock skew) must not swallow the whole budget or divide by zero."""
+    p = StragglerPlanner(n_shards=3, total_microbatches=12)
+    plan = p.plan()
+    p.observe(np.array([0.0, 4.0, 4.0]), plan)
+    plan2 = p.plan()
+    assert plan2.sum() == 12
+    assert (plan2 >= 1).all()  # the others still get their minimum
+    assert np.isfinite(p.expected_makespan(plan2))
+
+
+def test_straggler_single_surviving_shard_takes_everything():
+    p = StragglerPlanner(n_shards=3, total_microbatches=9)
+    p.deactivate(0)
+    p.deactivate(2)
+    assert p.plan().tolist() == [0, 9, 0]
+    with pytest.raises(ValueError, match="last active"):
+        p.deactivate(1)
+    assert p.active.tolist() == [False, True, False]  # state unchanged
+    p.reactivate(0)
+    plan = p.plan()
+    assert plan[2] == 0 and plan.sum() == 9 and plan[0] >= 1
+
+
+def test_straggler_deactivated_shard_cost_freezes():
+    """EMA stops updating for a shard that reports nothing (plan == 0):
+    on reactivation it resumes from its last observed cost, not from a
+    corrupted one."""
+    p = StragglerPlanner(n_shards=3, total_microbatches=12, ema=1.0)
+    plan = p.plan()
+    p.observe(np.array([1.0, 8.0, 1.0]) / 12 * 3 * plan, plan)
+    slow_cost = p._cost[1]
+    p.deactivate(1)
+    for _ in range(3):
+        plan = p.plan()
+        assert plan[1] == 0
+        # a dead shard reports zero time: must not be taken as "fast"
+        times = plan * np.array([0.5, 0.0, 0.5])
+        p.observe(times, plan)
+    assert p._cost[1] == slow_cost  # frozen through the outage
+    p.reactivate(1)
+    plan = p.plan()
+    assert plan[1] >= 1
+    assert plan[1] < plan[0]  # still remembered as the straggler
+
+
+def test_straggler_ema_when_observations_stop_mid_run():
+    """With partial EMA weight, shards that keep reporting converge while
+    a silent shard's estimate stays put."""
+    p = StragglerPlanner(n_shards=2, total_microbatches=8, ema=0.5)
+    plan = p.plan()
+    p.observe(np.array([2.0, 2.0]) * plan / 4, plan)
+    frozen = p._cost[1]
+    for _ in range(5):
+        p.observe(np.array([1.0 * plan[0], 0.0]), np.array([plan[0], 0]))
+    assert p._cost[1] == frozen
+    assert p._cost[0] != frozen  # the reporting shard kept calibrating
+
+
+def test_straggler_total_must_cover_active_shards():
+    p = StragglerPlanner(n_shards=4, total_microbatches=4)
+    assert p.plan().tolist() == [1, 1, 1, 1]
+    with pytest.raises(ValueError, match="shard 7 out of range"):
+        p.deactivate(7)
+    p.deactivate(3)
+    plan = p.plan()  # 4 micro-batches over 3 shards still fine
+    assert plan.sum() == 4 and plan[3] == 0

@@ -1,0 +1,428 @@
+"""Fault-injected runtime: detach/attach, drain vs kill-and-requeue,
+dirty-data evacuation, trace replay, seeded churn, and the config knobs.
+
+The zero-fault bit-for-bit contract (no fault machinery may perturb a
+run without faults) is covered both here (no-op injection, churn=0) and
+by the unchanged tests/test_equivalence*.py suites.
+"""
+import math
+import os
+import tempfile
+
+import pytest
+
+from repro.configs.paper_machine import paper_machine
+from repro.core.machine import HOST_MEM
+from repro.core.simulator import Simulator
+from repro.linalg.cholesky import cholesky_graph
+from repro.runtime import (
+    FAULT_MODES,
+    FaultEvent,
+    load_trace,
+    recovery_report,
+    save_trace,
+)
+from repro.sched import resolve
+from repro.sched.config import SchedConfig
+
+MB = 1024 * 1024
+
+
+def _graph(nt=6):
+    return cholesky_graph(nt, 256, with_fns=False)
+
+
+def _fp(res):
+    return (
+        res.makespan,
+        res.total_bytes,
+        tuple((iv.tid, iv.rid, iv.start, iv.end) for iv in res.intervals),
+    )
+
+
+def _baseline(spec="heft", nt=6, n=4, seed=0):
+    return Simulator(
+        _graph(nt), paper_machine(n), resolve(spec), seed=seed, noise=0.0
+    ).run()
+
+
+def _dead_windows(history):
+    """rid -> list of [detach, attach) intervals from a fault history."""
+    out = {}
+    open_at = {}
+    for e in history:
+        if e.event == "detach":
+            open_at[e.rid] = e.t
+        elif e.event == "attach" and e.rid in open_at:
+            out.setdefault(e.rid, []).append((open_at.pop(e.rid), e.t))
+    for rid, t in open_at.items():
+        out.setdefault(rid, []).append((t, math.inf))
+    return out
+
+
+def _assert_no_start_while_dead(res, history):
+    windows = _dead_windows(history)
+    for iv in res.intervals:
+        for lo, hi in windows.get(iv.rid, ()):
+            assert not (lo <= iv.start < hi), (
+                f"task {iv.tid} started on rid {iv.rid} at {iv.start} "
+                f"inside dead window [{lo}, {hi})"
+            )
+
+
+def _assert_all_complete_once(res, nt=6):
+    n_tasks = len(_graph(nt).tasks)
+    assert sorted(iv.tid for iv in res.intervals) == list(range(n_tasks))
+
+
+# ---------------------------------------------------------------------------
+# injection API
+
+
+def test_inject_validates_event_mode_and_rid():
+    sim = Simulator(_graph(), paper_machine(2), resolve("heft"), seed=0)
+    with pytest.raises(ValueError, match="event"):
+        sim.inject("explode", 0, at=0.0)
+    with pytest.raises(ValueError, match="mode"):
+        sim.inject("detach", 0, at=0.0, mode="panic")
+    with pytest.raises(TypeError):
+        sim.inject("detach", "gpu0", at=0.0)
+    with pytest.raises(ValueError):
+        sim.inject("detach", 99, at=0.0)
+
+
+def test_detaching_last_worker_rejected():
+    # detach every worker but one, then the last detach must be refused
+    # at fire time — a machine with no resource cannot make progress
+    sim = Simulator(_graph(4), paper_machine(1), resolve("heft"), seed=0)
+    rids = [r.rid for r in sim.machine.resources]
+    for rid in rids[:-1]:
+        sim.inject("detach", rid, at=0.0, mode="drain")
+    sim.inject("detach", rids[-1], at=0.0, mode="drain")
+    with pytest.raises(RuntimeError, match="last alive"):
+        sim.run()
+
+
+def test_zero_fault_run_has_no_fault_summary():
+    res = _baseline()
+    assert res.faults is None
+
+
+# ---------------------------------------------------------------------------
+# drain vs kill
+
+
+@pytest.mark.parametrize("spec", ["heft", "dada?alpha=0.5&use_cp=1", "ws"])
+@pytest.mark.parametrize("mode", FAULT_MODES)
+def test_detach_reattach_all_tasks_complete_once(spec, mode):
+    base = _baseline(spec)
+    m = paper_machine(4)
+    gpus = [r.rid for r in m.gpus]
+    sim = Simulator(_graph(), m, resolve(spec), seed=0, noise=0.0)
+    sim.inject("detach", gpus[0], at=base.makespan * 0.25, mode=mode)
+    sim.inject("detach", gpus[1], at=base.makespan * 0.4, mode=mode)
+    sim.inject("attach", gpus[0], at=base.makespan * 0.6)
+    res = sim.run()
+    _assert_all_complete_once(res)
+    _assert_no_start_while_dead(res, sim.faults.history)
+    assert res.faults["n_detaches"] == 2
+    assert res.faults["n_attaches"] == 1
+
+
+def test_drain_lets_running_task_finish_on_dead_worker():
+    """Drain: a task already running at detach time completes where it is;
+    its interval belongs to the dead worker and ends inside the window."""
+    base = _baseline("heft")
+    # pick a task mid-execution on a GPU around 30% of the baseline run
+    probe = next(
+        iv for iv in base.intervals
+        if iv.rid in {r.rid for r in paper_machine(4).gpus}
+        and iv.end - iv.start > 1e-6
+    )
+    cut = (probe.start + probe.end) / 2
+    sim = Simulator(_graph(), paper_machine(4), resolve("heft"), seed=0, noise=0.0)
+    sim.inject("detach", probe.rid, at=cut, mode="drain")
+    res = sim.run()
+    _assert_all_complete_once(res)
+    survivor = next(iv for iv in res.intervals if iv.tid == probe.tid)
+    assert survivor.rid == probe.rid
+    assert survivor.start < cut <= survivor.end
+    assert res.faults["n_killed"] == 0
+    assert res.faults["wasted_s"] == 0.0
+
+
+def test_kill_aborts_and_requeues_running_task():
+    """Kill-and-requeue: the running task is aborted (wasted work is
+    accounted) and completes later on a survivor."""
+    base = _baseline("heft")
+    probe = next(
+        iv for iv in base.intervals
+        if iv.rid in {r.rid for r in paper_machine(4).gpus}
+        and iv.end - iv.start > 1e-6
+    )
+    cut = (probe.start + probe.end) / 2
+    sim = Simulator(_graph(), paper_machine(4), resolve("heft"), seed=0, noise=0.0)
+    sim.inject("detach", probe.rid, at=cut, mode="kill")
+    res = sim.run()
+    _assert_all_complete_once(res)
+    survivor = next(iv for iv in res.intervals if iv.tid == probe.tid)
+    assert survivor.rid != probe.rid  # never reattached: must move
+    assert survivor.start >= cut
+    assert res.faults["n_killed"] >= 1
+    assert res.faults["wasted_s"] > 0.0
+    assert res.faults["n_requeued"] >= 1
+
+
+@pytest.mark.parametrize("mode", FAULT_MODES)
+def test_dirty_data_evacuated_to_host(mode):
+    """Sole copies on a detached memory are written back to the host —
+    no data is lost with either recovery mode."""
+    base = _baseline("heft")
+    m = paper_machine(4)
+    gpu = m.gpus[0].rid
+    sim = Simulator(_graph(), m, resolve("heft"), seed=0, noise=0.0)
+    sim.inject("detach", gpu, at=base.makespan * 0.3, mode=mode)
+    res = sim.run()
+    _assert_all_complete_once(res)
+    assert res.faults["n_evacuations"] > 0
+    assert res.faults["evacuated_bytes"] > 0
+    # evacuation traffic is visible in the byte ledger
+    nofault = _baseline("heft")
+    assert res.total_bytes >= nofault.total_bytes
+
+
+@pytest.mark.parametrize(
+    "spec", ["heft", "dada?alpha=0.5&use_cp=1", "ws", "locality", "random"]
+)
+def test_never_dispatch_to_detached_any_policy(spec):
+    base = _baseline("heft")
+    m = paper_machine(4)
+    gpus = [r.rid for r in m.gpus]
+    sim = Simulator(_graph(), m, resolve(spec), seed=2, noise=0.0)
+    sim.inject("detach", gpus[0], at=base.makespan * 0.2, mode="kill")
+    sim.inject("detach", gpus[1], at=base.makespan * 0.35, mode="drain")
+    res = sim.run()
+    _assert_all_complete_once(res)
+    _assert_no_start_while_dead(res, sim.faults.history)
+
+
+def test_attach_rejoins_and_takes_work():
+    """A worker detached early and reattached at mid-run picks up tasks
+    again — affinity-cold but alive."""
+    base = _baseline("heft", nt=8)
+    m = paper_machine(4)
+    gpu = m.gpus[0].rid
+    sim = Simulator(_graph(8), m, resolve("heft"), seed=0, noise=0.0)
+    sim.inject("detach", gpu, at=base.makespan * 0.1, mode="kill")
+    sim.inject("attach", gpu, at=base.makespan * 0.5)
+    res = sim.run()
+    _assert_all_complete_once(res, nt=8)
+    rejoined = [iv for iv in res.intervals if iv.rid == gpu and iv.start >= base.makespan * 0.5]
+    assert rejoined, "reattached worker never received a task"
+
+
+# ---------------------------------------------------------------------------
+# zero-fault equivalence of the guarded paths
+
+
+def test_noop_attach_of_alive_worker_is_behavior_neutral():
+    """Injecting an attach of an already-alive worker flips the fault
+    machinery on but must not change a single placement or timestamp."""
+    plain = _baseline("heft")
+    sim = Simulator(_graph(), paper_machine(4), resolve("heft"), seed=0, noise=0.0)
+    sim.inject("attach", 0, at=plain.makespan * 0.5)
+    res = sim.run()
+    assert _fp(res) == _fp(plain)
+    assert res.faults is not None  # machinery was live, just event-free
+
+
+def test_zero_churn_rate_is_identical_to_no_churn():
+    plain = _baseline("dada?alpha=0.5&use_cp=1", seed=3)
+    zero = Simulator(
+        _graph(), paper_machine(4), resolve("dada?alpha=0.5&use_cp=1"),
+        seed=3, noise=0.0, churn=0.0,
+    ).run()
+    assert _fp(zero) == _fp(plain)
+
+
+# ---------------------------------------------------------------------------
+# traces
+
+
+def test_trace_save_load_roundtrip():
+    evs = [
+        FaultEvent(0.5, "detach", 3, "kill"),
+        FaultEvent(0.1, "detach", 1, "drain"),
+        FaultEvent(0.9, "attach", 3),
+    ]
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "t.jsonl")
+        save_trace(evs, path)
+        back = load_trace(path)
+    assert [e.t for e in back] == sorted(e.t for e in evs)  # sorted by t
+    assert back[0] == FaultEvent(0.1, "detach", 1, "drain")
+    assert back[2].mode is None
+
+
+def test_trace_rejects_malformed_lines():
+    cases = [
+        ('{"t": 1.0, "event": "detach"}', "rid"),           # missing rid
+        ('{"t": 1.0, "event": "melt", "rid": 0}', "event"),  # unknown event
+        ('{"t": "soon", "event": "attach", "rid": 0}', "t"),  # wrong type
+        ('{"t": 1.0, "event": "attach", "rid": 0, "x": 1}', "x"),  # unknown
+        ("not json", r"bad\.jsonl:1"),
+    ]
+    for line, needle in cases:
+        with tempfile.TemporaryDirectory() as d:
+            path = os.path.join(d, "bad.jsonl")
+            with open(path, "w") as f:
+                f.write(line + "\n")
+            with pytest.raises(ValueError, match=needle):
+                load_trace(path)
+
+
+def test_trace_skips_blank_and_comment_lines():
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "t.jsonl")
+        with open(path, "w") as f:
+            f.write("# preemption log\n\n")
+            f.write('{"t": 0.5, "event": "detach", "rid": 2, "mode": "drain"}\n')
+        evs = load_trace(path)
+    assert evs == [FaultEvent(0.5, "detach", 2, "drain")]
+
+
+def test_trace_replay_matches_programmatic_injection():
+    """Replaying a recorded trace is bit-identical to injecting the same
+    events by hand (the replay contract; note it is *not* required to
+    match the churn run that produced the trace, whose sampler perturbs
+    event-queue sequence numbers)."""
+    m = paper_machine(4)
+    sim = Simulator(
+        _graph(), m, resolve("heft"), seed=1, noise=0.0,
+        churn=150.0, fault_mode="kill",
+    )
+    sim.run()
+    hist = sim.faults.history
+    assert hist, "churn produced no events; raise the rate"
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "trace.jsonl")
+        save_trace(hist, path)
+        replayed = Simulator(
+            _graph(), paper_machine(4), resolve("heft"), seed=1, noise=0.0,
+            fault_trace=path,
+        ).run()
+    prog = Simulator(_graph(), paper_machine(4), resolve("heft"), seed=1, noise=0.0)
+    for e in hist:
+        prog.inject(e.event, e.rid, at=e.t, mode=e.mode)
+    assert _fp(replayed) == _fp(prog.run())
+
+
+# ---------------------------------------------------------------------------
+# churn
+
+
+def test_churn_same_seed_is_deterministic():
+    def run():
+        sim = Simulator(
+            _graph(), paper_machine(4), resolve("heft"),
+            seed=7, noise=0.02, churn=200.0, fault_mode="kill",
+        )
+        res = sim.run()
+        return _fp(res), [(e.t, e.event, e.rid) for e in sim.faults.history]
+
+    assert run() == run()
+
+
+def test_churn_run_is_safe():
+    sim = Simulator(
+        _graph(8), paper_machine(4), resolve("dada?alpha=0.5&use_cp=1"),
+        seed=11, noise=0.0, churn=300.0, fault_mode="kill",
+    )
+    res = sim.run()
+    _assert_all_complete_once(res, nt=8)
+    _assert_no_start_while_dead(res, sim.faults.history)
+    assert res.faults["n_detaches"] == sum(
+        1 for e in sim.faults.history if e.event == "detach"
+    )
+
+
+# ---------------------------------------------------------------------------
+# config knobs
+
+
+def test_churn_env_knob_parses_and_validates():
+    cfg = SchedConfig.from_env({"REPRO_SCHED_CHURN": "2.5"})
+    assert cfg.churn == 2.5
+    with pytest.raises(ValueError, match="REPRO_SCHED_CHURN"):
+        SchedConfig.from_env({"REPRO_SCHED_CHURN": "banana"})
+    with pytest.raises(ValueError, match="REPRO_SCHED_CHURN"):
+        SchedConfig.from_env({"REPRO_SCHED_CHURN": "-1"})
+
+
+def test_fault_mode_env_knob_validates():
+    assert SchedConfig.from_env({"REPRO_SCHED_FAULT_MODE": "KILL"}).fault_mode == "kill"
+    with pytest.raises(ValueError, match="REPRO_SCHED_FAULT_MODE"):
+        SchedConfig.from_env({"REPRO_SCHED_FAULT_MODE": "banana"})
+
+
+def test_fault_trace_env_knob_requires_existing_file():
+    with pytest.raises(ValueError, match="REPRO_SCHED_FAULT_TRACE"):
+        SchedConfig.from_env({"REPRO_SCHED_FAULT_TRACE": "/nonexistent/t.jsonl"})
+    with tempfile.NamedTemporaryFile(suffix=".jsonl") as f:
+        cfg = SchedConfig.from_env({"REPRO_SCHED_FAULT_TRACE": f.name})
+        assert cfg.fault_trace == f.name
+    assert SchedConfig.from_env({"REPRO_SCHED_FAULT_TRACE": ""}).fault_trace is None
+
+
+def test_churn_env_knob_drives_simulator(monkeypatch):
+    monkeypatch.setenv("REPRO_SCHED_CHURN", "250")
+    monkeypatch.setenv("REPRO_SCHED_FAULT_MODE", "kill")
+    sim = Simulator(_graph(), paper_machine(4), resolve("heft"), seed=5, noise=0.0)
+    res = sim.run()
+    _assert_all_complete_once(res)
+    assert res.faults is not None
+
+
+# ---------------------------------------------------------------------------
+# recovery metrics + the elastic bridge
+
+
+def test_recovery_report_fields():
+    base = _baseline("heft")
+    sim = Simulator(_graph(), paper_machine(4), resolve("heft"), seed=0, noise=0.0)
+    sim.inject("detach", paper_machine(4).gpus[0].rid,
+               at=base.makespan * 0.3, mode="kill")
+    faulted = sim.run()
+    rep = recovery_report(faulted, base)
+    assert rep["baseline_makespan"] == base.makespan
+    assert rep["makespan"] == faulted.makespan
+    assert rep["recovery_makespan"] == pytest.approx(
+        faulted.makespan - base.makespan
+    )
+    assert rep["slowdown"] == pytest.approx(faulted.makespan / base.makespan)
+    assert rep["extra_bytes"] == faulted.total_bytes - base.total_bytes
+    assert rep["n_detaches"] == 1
+
+
+def test_elastic_replanner_follows_engine_faults():
+    from repro.dist.elastic import ElasticReplanner
+
+    base = _baseline("heft")
+    m = paper_machine(4)
+    gpus = [r.rid for r in m.gpus]
+    sim = Simulator(_graph(), m, resolve("heft"), seed=0, noise=0.0)
+    rp = ElasticReplanner(
+        devices_per_worker=16, n_experts=32, model_axis=16
+    ).attach_to(sim)
+    sim.inject("detach", gpus[0], at=base.makespan * 0.25, mode="drain")
+    sim.inject("attach", gpus[0], at=base.makespan * 0.6)
+    sim.run()
+    events = [(ev, nd) for _, ev, nd, _ in rp.history]
+    n_gpus = len(gpus)
+    assert events == [
+        ("init", 16 * n_gpus),
+        ("detach", 16 * (n_gpus - 1)),
+        ("attach", 16 * n_gpus),
+    ]
+    assert rp.current is not None
+    assert rp.current.mesh_shape[1] == 16

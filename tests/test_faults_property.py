@@ -1,0 +1,177 @@
+"""Property-based fault-injection invariants (hypothesis-gated).
+
+For any fault schedule (random detach/attach sequences, either recovery
+mode, or seeded churn):
+
+  * every task completes exactly once — kill-and-requeue never loses or
+    duplicates work;
+  * no task interval starts on a worker inside its dead window;
+  * no dirty byte is lost — every data object ends with at least one
+    valid copy, and never only on a detached memory;
+  * the run terminates (the engine drains its heap).
+
+Each property also has a fixed-parameter smoke test so the checker
+logic itself runs in environments without hypothesis (where @given
+turns into a skip).
+"""
+import math
+
+from _hypothesis_compat import given, settings, st
+
+from repro.configs.paper_machine import paper_machine
+from repro.core.simulator import Simulator
+from repro.linalg.cholesky import cholesky_graph
+from repro.sched import resolve
+
+NT = 6
+
+
+def _dead_windows(history):
+    out = {}
+    open_at = {}
+    for e in history:
+        if e.event == "detach":
+            open_at[e.rid] = e.t
+        elif e.event == "attach" and e.rid in open_at:
+            out.setdefault(e.rid, []).append((open_at.pop(e.rid), e.t))
+    for rid, t in open_at.items():
+        out.setdefault(rid, []).append((t, math.inf))
+    return out
+
+
+def _check_invariants(sim, res):
+    graph = cholesky_graph(NT, 256, with_fns=False)
+    # 1. every task completes exactly once
+    assert sorted(iv.tid for iv in res.intervals) == list(
+        range(len(graph.tasks))
+    ), "a task was lost or completed twice"
+    # 2. no interval starts inside its worker's dead window
+    windows = _dead_windows(sim.faults.history)
+    for iv in res.intervals:
+        for lo, hi in windows.get(iv.rid, ()):
+            assert not (lo <= iv.start < hi), (
+                f"task {iv.tid} dispatched to rid {iv.rid} at {iv.start} "
+                f"inside dead window [{lo}, {hi})"
+            )
+    # 3. no data lost: every object has >=1 copy, none only on dead memory
+    dead_mems = sim.faults.dead_mems
+    for name in sim.arrays.data_names:
+        locs = sim.residency.locations(name)
+        assert locs, f"data {name!r} has no valid copy after recovery"
+        assert locs - dead_mems, (
+            f"data {name!r} survives only on detached memory {locs}"
+        )
+    # 4. workers never double-booked despite requeues
+    per_worker = {}
+    for iv in res.intervals:
+        per_worker.setdefault(iv.rid, []).append((iv.start, iv.end))
+    for rid, ivs in per_worker.items():
+        ivs.sort()
+        for (s1, e1), (s2, e2) in zip(ivs, ivs[1:]):
+            assert e1 <= s2 + 1e-9, f"worker {rid} double-booked"
+
+
+def _run_schedule(spec, schedule, seed=0):
+    """schedule: [(frac_of_baseline_makespan, event, gpu_index, mode)]."""
+    m = paper_machine(4)
+    base = Simulator(
+        cholesky_graph(NT, 256, with_fns=False), paper_machine(4),
+        resolve(spec), seed=seed, noise=0.0,
+    ).run()
+    sim = Simulator(
+        cholesky_graph(NT, 256, with_fns=False), m, resolve(spec),
+        seed=seed, noise=0.0,
+    )
+    gpus = [r.rid for r in m.gpus]
+    down = set()
+    for frac, event, gi, mode in schedule:
+        rid = gpus[gi % len(gpus)]
+        # keep the schedule self-consistent: detach only alive workers
+        # (and never the whole machine — CPUs stay up), attach only dead
+        if event == "detach":
+            if rid in down:
+                continue
+            down.add(rid)
+        else:
+            if rid not in down:
+                continue
+            down.discard(rid)
+        sim.inject(event, rid, at=base.makespan * frac, mode=mode)
+    res = sim.run()
+    _check_invariants(sim, res)
+    return sim, res
+
+
+_EVENT = st.tuples(
+    st.floats(min_value=0.02, max_value=1.5),
+    st.sampled_from(["detach", "attach"]),
+    st.integers(min_value=0, max_value=3),
+    st.sampled_from(["drain", "kill"]),
+)
+
+
+@given(
+    spec=st.sampled_from(["heft", "dada?alpha=0.5&use_cp=1", "ws"]),
+    schedule=st.lists(_EVENT, min_size=1, max_size=6),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+@settings(max_examples=15)
+def test_random_fault_schedules_preserve_invariants(spec, schedule, seed):
+    _run_schedule(spec, sorted(schedule, key=lambda e: e[0]), seed=seed)
+
+
+@given(
+    rate=st.floats(min_value=50.0, max_value=500.0),
+    seed=st.integers(min_value=0, max_value=2**16),
+    mode=st.sampled_from(["drain", "kill"]),
+)
+@settings(max_examples=15)
+def test_seeded_churn_preserves_invariants(rate, seed, mode):
+    sim = Simulator(
+        cholesky_graph(NT, 256, with_fns=False), paper_machine(4),
+        resolve("heft"), seed=seed, noise=0.01, churn=rate, fault_mode=mode,
+    )
+    res = sim.run()
+    _check_invariants(sim, res)
+
+
+@given(
+    schedule=st.lists(_EVENT, min_size=1, max_size=4),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+@settings(max_examples=10)
+def test_kill_and_requeue_conserves_completed_work(schedule, seed):
+    """Exactly-once completion under pure kill-mode schedules: the sum of
+    completed flops equals the graph's total regardless of aborts."""
+    kill_only = [
+        (frac, ev, gi, "kill") for frac, ev, gi, _ in
+        sorted(schedule, key=lambda e: e[0])
+    ]
+    sim, res = _run_schedule("heft", kill_only, seed=seed)
+    graph = cholesky_graph(NT, 256, with_fns=False)
+    assert res.total_flops == graph.total_flops
+
+
+# ---------------------------------------------------------------------------
+# fixed-parameter smoke tests: validate the checkers without hypothesis
+
+
+def test_invariant_checker_smoke_programmatic():
+    _run_schedule(
+        "dada?alpha=0.5&use_cp=1",
+        [
+            (0.2, "detach", 0, "kill"),
+            (0.3, "detach", 1, "drain"),
+            (0.55, "attach", 0, "drain"),
+            (0.7, "detach", 2, "kill"),
+        ],
+    )
+
+
+def test_invariant_checker_smoke_churn():
+    sim = Simulator(
+        cholesky_graph(NT, 256, with_fns=False), paper_machine(4),
+        resolve("heft"), seed=9, noise=0.0, churn=250.0, fault_mode="kill",
+    )
+    res = sim.run()
+    _check_invariants(sim, res)
