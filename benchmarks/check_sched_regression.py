@@ -54,14 +54,19 @@ BASELINE = RESULTS / "BENCH_sched_baseline.json"
 
 KEY_FIELDS = (
     "kernel", "strategy", "backend", "nt", "n_gpus", "capacity",
-    "churn", "fault_mode",
+    "churn", "fault_mode", "exact",
 )
 
 
 def _rows_by_key(section: dict) -> dict:
     out = {}
     for row in section.get("whole_sim", []):
-        out[tuple(row.get(f) for f in KEY_FIELDS)] = row
+        # rows recorded before the surrogate engine existed are exact
+        key = tuple(
+            row.get(f, True) if f == "exact" else row.get(f)
+            for f in KEY_FIELDS
+        )
+        out[key] = row
     return out
 
 

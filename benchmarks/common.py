@@ -118,6 +118,69 @@ def _sweep_config(graph_factory, machine, sfac, n_runs: int) -> Summary:
     return run_many(graph_factory, machine, sfac, n_runs=n_runs, n_jobs=1)
 
 
+def spec_of(sfac) -> str:
+    """Recover the registry spec string from a ``partial(resolve, spec)``.
+
+    The batched surrogate path needs the *spec*, not a constructed policy
+    object: strategy parameters become batch axes, so the episode engine
+    re-derives (α, use_cp, ws) from the string."""
+    if isinstance(sfac, partial) and sfac.func is resolve and sfac.args:
+        return sfac.args[0]
+    raise ValueError(
+        "batched sweep (REPRO_SCHED_EXACT=0) needs partial(resolve, spec) "
+        f"strategy factories, got {sfac!r}; run it on the exact path"
+    )
+
+
+def _ci95(xs) -> float:
+    import math
+
+    import numpy as np
+
+    if len(xs) < 2:
+        return 0.0
+    return 1.96 * float(np.std(xs, ddof=1)) / math.sqrt(len(xs))
+
+
+def _sweep_batched(configs, graph_factory, n_runs: int) -> List[Summary]:
+    """Surrogate path: the whole figure sweep as a handful of dispatches.
+
+    Every (strategy × GPU-count × seed) cell becomes one row of a
+    ``run_batch`` call — seeds and strategy parameters are batch axes of
+    a single compiled episode, so the sweep cost is a few ``lax.scan``
+    dispatches instead of |configs| × n_runs Python event loops.
+    """
+    from repro.core import cached_graph, run_batch
+
+    graph = cached_graph(graph_factory)
+    machines = {}
+    items = []
+    for n_gpus, label, sfac in configs:
+        m = machines.setdefault(n_gpus, machine_for(n_gpus))
+        spec = spec_of(sfac)
+        for i in range(n_runs):
+            items.append(
+                {"graph": graph, "machine": m, "strategy": spec,
+                 "seed": 1234 + i, "noise": 0.03}
+            )
+    results = run_batch(items)
+    summaries = []
+    for k, (n_gpus, label, sfac) in enumerate(configs):
+        rs = results[k * n_runs : (k + 1) * n_runs]
+        gf = [r.gflops for r in rs]
+        gb = [r.gbytes for r in rs]
+        summaries.append(
+            Summary(
+                strategy=label, n=n_runs,
+                gflops_mean=float(sum(gf) / len(gf)), gflops_ci95=_ci95(gf),
+                gbytes_mean=float(sum(gb) / len(gb)), gbytes_ci95=_ci95(gb),
+                makespan_mean=float(sum(r.makespan for r in rs) / len(rs)),
+                steals_mean=0.0,
+            )
+        )
+    return summaries
+
+
 def sweep(
     fig: str,
     kernel: str,
@@ -154,10 +217,16 @@ def sweep(
         for n_gpus in gpu_counts
         for label, sfac in strategies.items()
     ]
-    summaries: List[Summary]
+
+    from repro.sched import current_config
+
+    batched = not current_config().exact
+    summaries: List[Summary] = (
+        _sweep_batched(configs, graph_factory, n_runs) if batched else []
+    )
     n_jobs = default_jobs(len(configs))
     futs = None
-    if n_jobs > 1 and len(configs) > 1:
+    if not batched and n_jobs > 1 and len(configs) > 1:
         try:
             import pickle
 
@@ -173,7 +242,9 @@ def sweep(
             futs = None  # non-picklable factories: run serially below
 
     for k, (n_gpus, label, sfac) in enumerate(configs):
-        if futs is not None:
+        if batched:
+            s = summaries[k]
+        elif futs is not None:
             s = futs[k].result()
         else:
             s = _sweep_config(graph_factory, paper_machine(n_gpus), sfac, n_runs)

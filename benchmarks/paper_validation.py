@@ -311,11 +311,15 @@ def main() -> bool:
 
     cfg = current_config()
     update_bench_json(
-        "paper_validation",
+        # the surrogate run owns its own section so the trajectory file
+        # keeps both walls (exact oracle vs REPRO_SCHED_EXACT=0) side by
+        # side for the speedup record
+        "paper_validation" if cfg.exact else "paper_validation_surrogate",
         dict(
             wall_s=round(wall, 2),
             backend=cfg.backend,
             fast=cfg.bench_fast,
+            exact=cfg.exact,
             claims=[
                 dict(claim=c["claim"], passed=bool(c["passed"]),
                      measured=c["measured"])

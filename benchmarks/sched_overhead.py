@@ -13,7 +13,12 @@ cost along two axes:
     pressure path), a **multi-graph streaming** row (four tenant DAGs
     interleaving on one ``repro.runtime.Engine``, with per-graph
     makespans), and a **churned** row family (seeded GPU detach/attach at
-    ``CHURN_RATE`` under both recovery modes — the fault-handling path);
+    ``CHURN_RATE`` under both recovery modes — the fault-handling path),
+    and a **batched-sweep** row family (``exact=False``): whole strategy ×
+    GPU-count × seed sweeps through ``repro.core.run_batch`` — the
+    ``REPRO_SCHED_EXACT=0`` surrogate engine — reporting configs/sec,
+    per-dispatch batch size and the speedup over the same configurations
+    replayed through the exact engine;
   * **λ-probe placement** — one wide ready wave of an NT=64 Cholesky on
     the 32-resource scaled machine, timed through ``DADA.place`` per
     backend: this is the (ready × resources × λ-probes) scoring kernel the
@@ -160,7 +165,7 @@ def whole_sim_rows(nts, n_gpus: int, n_runs: int, backends) -> list:
                     row = dict(
                         kernel=kernel, strategy=label, backend=backend,
                         nt=nt, n_gpus=n_gpus, runs=n_runs, capacity=capacity,
-                        churn=0.0, fault_mode="drain",
+                        churn=0.0, fault_mode="drain", exact=True,
                         wall_s=round(dt, 4), events=events,
                         events_per_s=round(events / dt, 1) if dt > 0 else 0.0,
                         tasks_per_s=round(tasks / dt, 1) if dt > 0 else 0.0,
@@ -220,7 +225,7 @@ def streaming_rows(nt: int, n_gpus: int, n_runs: int, n_graphs: int = 4) -> list
     row = dict(
         kernel=f"cholesky-x{n_graphs}stream", strategy="dada(a)+cp",
         backend="numpy", nt=nt, n_gpus=n_gpus, runs=n_runs, capacity=0,
-        churn=0.0, fault_mode="drain",
+        churn=0.0, fault_mode="drain", exact=True,
         n_graphs=n_graphs, wall_s=round(dt, 4), events=events,
         events_per_s=round(events / dt, 1) if dt > 0 else 0.0,
         tasks_per_s=round(tasks / dt, 1) if dt > 0 else 0.0,
@@ -278,7 +283,7 @@ def churn_rows(nt: int, n_gpus: int, n_runs: int) -> list:
             row = dict(
                 kernel="cholesky", strategy=label, backend="numpy",
                 nt=nt, n_gpus=n_gpus, runs=n_runs, capacity=0,
-                churn=CHURN_RATE, fault_mode=mode,
+                churn=CHURN_RATE, fault_mode=mode, exact=True,
                 wall_s=round(dt, 4), events=events,
                 events_per_s=round(events / dt, 1) if dt > 0 else 0.0,
                 tasks_per_s=round(tasks / dt, 1) if dt > 0 else 0.0,
@@ -291,6 +296,83 @@ def churn_rows(nt: int, n_gpus: int, n_runs: int) -> list:
                 f"events_per_s={row['events_per_s']};"
                 f"n_detaches={row['n_detaches']}"
             )
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# batched surrogate sweep throughput (REPRO_SCHED_EXACT=0 engine)
+
+
+BATCHED_SWEEP_SPECS = (
+    "heft", "ws", "dada?alpha=0", "dada?alpha=0.5", "dada?alpha=0.5&use_cp=1",
+)
+
+
+def batched_sweep_rows(nt: int, n_gpus: int, n_runs: int) -> list:
+    """Configs/sec of whole sweeps through ``run_batch`` vs the exact engine.
+
+    One strategy × GPU-count × seed sweep per kernel runs as a handful of
+    compiled episode dispatches (the ``REPRO_SCHED_EXACT=0`` path), then
+    the *same* configurations replay through ``run_simulation`` — the
+    exact-vs-surrogate speedup is the number the batched engine exists
+    for. Rows carry ``exact=False`` (the regression key separates the two
+    engines) and the per-dispatch batch size.
+    """
+    try:
+        import jax  # noqa: F401
+    except Exception:
+        print("note: jax unavailable — batched-sweep rows skipped")
+        return []
+    from repro.core import cached_graph, run_batch, run_simulation
+    from repro.sched import current_config
+
+    cfg = current_config()
+    gpu_counts = sorted({2, n_gpus})
+    machines = {g: machine_for(g) for g in gpu_counts}
+    rows = []
+    for kernel, gfac in graphs_for(nt).items():
+        graph = cached_graph(gfac)
+        items = [
+            {"graph": graph, "machine": machines[g], "strategy": spec,
+             "seed": 1234 + i, "noise": 0.03}
+            for g in gpu_counts
+            for spec in BATCHED_SWEEP_SPECS
+            for i in range(n_runs)
+        ]
+        run_batch(items, config=cfg)  # warm-up: compile once, measure dispatch
+        dt = float("inf")
+        for _rep in range(2):
+            t0 = time.perf_counter()
+            results = run_batch(items, config=cfg)
+            dt = min(dt, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        for it in items:
+            run_simulation(
+                it["graph"], it["machine"], resolve(it["strategy"]),
+                seed=it["seed"], noise=it["noise"],
+            )
+        dt_exact = time.perf_counter() - t0
+        n_cfg = len(items)
+        batch = min(max(1, int(cfg.batch)), 16)
+        row = dict(
+            kernel=kernel, strategy="sweep-mix", backend="jax",
+            nt=nt, n_gpus=n_gpus, runs=n_runs, capacity=0,
+            churn=0.0, fault_mode="drain", exact=False,
+            batch=batch, n_configs=n_cfg,
+            wall_s=round(dt, 4), events=0, events_per_s=0.0,
+            tasks_per_s=round(n_cfg * len(graph) / dt, 1) if dt > 0 else 0.0,
+            configs_per_s=round(n_cfg / dt, 2) if dt > 0 else 0.0,
+            exact_wall_s=round(dt_exact, 4),
+            speedup_vs_exact=round(dt_exact / dt, 2) if dt > 0 else 0.0,
+        )
+        rows.append(row)
+        print(
+            f"sched_overhead/{kernel}/sweep-mix/gpus{n_gpus}/nt{nt}/"
+            f"jax/batched,{dt / n_cfg * 1e6:.1f},"
+            f"configs_per_s={row['configs_per_s']};"
+            f"speedup_vs_exact={row['speedup_vs_exact']};batch={batch}"
+        )
+        del results
     return rows
 
 
@@ -448,8 +530,10 @@ def main() -> list:
     if nts:  # REPRO_BENCH_NT="" is a valid empty sweep
         rows += streaming_rows(nts[0], n_gpus, n_runs)
         rows += churn_rows(nts[0], n_gpus, n_runs)
-    total_ev = sum(r["events"] for r in rows)
-    total_s = sum(r["wall_s"] for r in rows)
+        if "jax" in backends:
+            rows += batched_sweep_rows(nts[0], n_gpus, n_runs)
+    total_ev = sum(r["events"] for r in rows if r.get("exact", True))
+    total_s = sum(r["wall_s"] for r in rows if r.get("exact", True))
     if total_s > 0:
         print(
             f"sched_overhead/total,{total_s * 1e6:.1f},"

@@ -6,10 +6,13 @@ work stealing).
 """
 from .affinity import AFFINITY_FUNCTIONS, AFFINITY_MATRIX_FUNCTIONS
 from .api import (
+    BatchResult,
     Summary,
+    cached_graph,
     default_jobs,
     get_pool,
     make_strategy,
+    run_batch,
     run_many,
     run_simulation,
 )
@@ -39,11 +42,12 @@ from repro.runtime.queues import WorkSteal
 from repro import sched as _sched  # noqa: E402  (deliberate tail import)
 
 __all__ = [
-    "AFFINITY_FUNCTIONS", "AFFINITY_MATRIX_FUNCTIONS", "Access", "ClassPredictor",
-    "DADA", "DataObject", "DualApprox", "GraphArrays",
+    "AFFINITY_FUNCTIONS", "AFFINITY_MATRIX_FUNCTIONS", "Access", "BatchResult",
+    "ClassPredictor", "DADA", "DataObject", "DualApprox", "GraphArrays",
     "HEFT", "HOST_MEM", "HistoryPerfModel", "LinkModel", "MachineModel",
     "Mode", "Residency", "Resource", "ResourceClass", "SimResult",
     "Simulator", "Strategy", "Summary", "Task", "TaskGraph", "TransferModel",
-    "WorkSteal", "backend_name", "default_jobs", "get_backend", "get_pool",
-    "make_machine", "make_strategy", "run_many", "run_simulation",
+    "WorkSteal", "backend_name", "cached_graph", "default_jobs", "get_backend",
+    "get_pool", "make_machine", "make_strategy", "run_batch", "run_many",
+    "run_simulation",
 ]

@@ -11,6 +11,7 @@ import os
 import pickle
 import threading
 import warnings
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -99,13 +100,16 @@ class Summary:
 _GRAPH_CACHE: Dict[tuple, TaskGraph] = {}
 
 
-def _cached_graph(factory) -> TaskGraph:
+def cached_graph(factory) -> TaskGraph:
     """Memoize graphs built by ``functools.partial`` factories.
 
     A sweep runs many (strategy × machine) configurations over the *same*
-    kernel graph; within one (worker) process the graph and its
-    structure-of-arrays view are built once per distinct factory signature
-    instead of once per configuration. Non-partial factories (closures,
+    kernel graph; within one process the graph and its structure-of-arrays
+    view are built once per distinct factory signature instead of once per
+    configuration. Eviction is LRU one-at-a-time — a full-cache clear used
+    to drop *every* graph the moment a 17th signature appeared, which made
+    large sweeps (NT=64 interleaved with small kernels) rebuild identical
+    multi-second graphs mid-flight. Non-partial factories (closures,
     lambdas) are not memoized.
     """
     try:
@@ -115,10 +119,17 @@ def _cached_graph(factory) -> TaskGraph:
         return factory()
     g = _GRAPH_CACHE.get(key)
     if g is None:
-        if len(_GRAPH_CACHE) >= 16:
-            _GRAPH_CACHE.clear()
+        while len(_GRAPH_CACHE) >= 16:
+            _GRAPH_CACHE.pop(next(iter(_GRAPH_CACHE)))
         _GRAPH_CACHE[key] = g = factory()
+    else:
+        # refresh recency so steady sweep graphs outlive one-off builds
+        _GRAPH_CACHE.pop(key)
+        _GRAPH_CACHE[key] = g
     return g
+
+
+_cached_graph = cached_graph  # historical private name
 
 
 def _run_chunk(
@@ -270,3 +281,175 @@ def run_many(
         makespan_mean=float(np.mean(mk)),
         steals_mean=float(np.mean(st)),
     )
+
+# ---------------------------------------------------------------------------
+# batched surrogate episodes (REPRO_SCHED_EXACT=0)
+
+
+@dataclass(frozen=True)
+class BatchResult:
+    """One configuration's surrogate-episode outcome.
+
+    Mirrors the :class:`SimResult` metric surface (``gflops`` / ``gbytes``
+    derived the same way) so sweep code can consume either engine's
+    results through one row schema.
+    """
+
+    strategy: str
+    seed: int
+    makespan: float
+    total_bytes: float
+    total_flops: float
+    n_steals: int = 0
+
+    @property
+    def gflops(self) -> float:
+        if self.makespan <= 0:
+            return 0.0
+        return self.total_flops / self.makespan / 1e9
+
+    @property
+    def gbytes(self) -> float:
+        return self.total_bytes / 1e9
+
+
+def run_batch(configs: Sequence[dict], config=None) -> List[BatchResult]:
+    """Run a batch of scheduling configurations as a few compiled dispatches.
+
+    Each item of ``configs`` is a mapping::
+
+        {"graph": TaskGraph | partial-factory, "machine": MachineModel,
+         "strategy": "dada?alpha=0.5&use_cp=1",  # heft | ws | dada | dual
+         "seed": 1234, "noise": 0.03, "capacity": 0}
+
+    Items are grouped by (graph, machine template) — machine *shapes*
+    (GPU counts), strategy parameters, seeds and capacities are batch
+    axes inside a group — then each group runs through the surrogate
+    episode engine (:mod:`repro.core.episode`) in chunks of at most
+    ``SchedConfig.batch`` (``REPRO_SCHED_BATCH``) configurations per
+    dispatch. Results come back in input order.
+
+    This is the approximate engine: placements relax the oracle's
+    tie-breaking (see the module docstring of ``repro.core.episode``),
+    so use it for sweeps and searches, and the exact engine
+    (:func:`run_simulation` / :func:`run_many`) for verification. It
+    requires the jax backend; a numpy-only environment raises instead
+    of silently falling back to the exact path.
+    """
+    from repro.core import episode as ep
+
+    if config is None:
+        from repro.sched.config import current_config
+
+        config = current_config()
+    try:
+        import jax  # noqa: F401
+    except Exception as exc:  # pragma: no cover - jax baked into CI images
+        raise RuntimeError(
+            "run_batch needs the jax backend for the batched surrogate "
+            "engine; install jax or use run_many on the exact path"
+        ) from exc
+
+    # resolve graphs and group by (graph, machine template)
+    items = []
+    for i, c in enumerate(configs):
+        g = c["graph"]
+        if not isinstance(g, TaskGraph):
+            g = cached_graph(g)
+        items.append((i, g, c))
+
+    groups: Dict[tuple, list] = {}
+    for i, g, c in items:
+        m: MachineModel = c["machine"]
+        cpu = next((r.cls for r in m.resources if not r.is_accelerator), None)
+        gpu = next((r.cls for r in m.resources if r.is_accelerator), None)
+        key = (
+            id(g), len(m.resources),
+            cpu.name if cpu else None, gpu.name if gpu else None,
+            m.link.bandwidth, m.link.latency,
+        )
+        groups.setdefault(key, []).append((i, g, c))
+
+    out: List[Optional[BatchResult]] = [None] * len(items)
+    chunk_cap = max(1, int(config.batch))
+    for group in groups.values():
+        g = group[0][1]
+        machines = {}
+        max_mem = -1
+        for _, _, c in group:
+            m = c["machine"]
+            if id(m) not in machines:
+                machines[id(m)] = m
+            max_mem = max(
+                max_mem,
+                max((r.mem for r in m.resources if r.is_accelerator), default=-1),
+            )
+        plan = ep.build_plan(g, group[0][2]["machine"], n_u=max_mem + 2)
+        axes = {
+            mid: ep.machine_axes(m, plan.n_res) for mid, m in machines.items()
+        }
+        # One dispatch shape for the whole group: episode cost is linear
+        # in the batch axis (no fixed-overhead amortisation from bigger
+        # batches), so split into same-shaped chunks — one compile per
+        # (kernel, shape) key — and fan the dispatches out over threads
+        # (XLA drops the GIL during execution).
+        from repro.core.backend import _bucket
+
+        # 16 rows per dispatch: episode cost per config is flat across
+        # B∈{16..256} on CPU, so narrow chunks minimise padding waste and
+        # let every group share one compiled shape; REPRO_SCHED_BATCH
+        # caps it lower for memory-constrained runs
+        n_workers = min(8, os.cpu_count() or 1)
+        size = min(chunk_cap, 16)
+        pad_to = _bucket(min(size, len(group)), lo=8)
+        chunks = [group[lo : lo + size] for lo in range(0, len(group), size)]
+
+        def dispatch(chunk):
+            isg, val, mc, lg = [], [], [], []
+            al, cp, ws, nz, cap = [], [], [], [], []
+            for _, _, c in chunk:
+                a, u, w = ep.surrogate_params(c["strategy"])
+                ig, vl, m_c, l_g = axes[id(c["machine"])]
+                isg.append(ig)
+                val.append(vl)
+                mc.append(m_c)
+                lg.append(l_g)
+                al.append(a)
+                cp.append(u)
+                ws.append(w)
+                nz.append(
+                    ep.noise_factors(
+                        int(c.get("seed", 0)), float(c.get("noise", 0.03)),
+                        plan.n, plan.n_pad,
+                    )
+                )
+                capacity = float(c.get("capacity", 0) or 0)
+                cap.append(capacity if capacity > 0 else np.inf)
+            batch = ep.EpisodeBatch(
+                is_gpu=np.stack(isg), valid_res=np.stack(val),
+                mem_col=np.stack(mc), link_grp=np.stack(lg),
+                alpha=np.array(al),
+                use_cp=np.array(cp), ws_pref=np.array(ws, dtype=bool),
+                noise=np.stack(nz), cap=np.array(cap),
+            )
+            return ep.run_episodes(plan, batch, config=config, pad_to=pad_to)
+
+        if len(chunks) > 1 and n_workers > 1:
+            # warm the compile on the first chunk, then dispatch the rest
+            # concurrently against the cached executable
+            results = [dispatch(chunks[0])]
+            with ThreadPoolExecutor(max_workers=n_workers) as tp:
+                results += list(tp.map(dispatch, chunks[1:]))
+        else:
+            results = [dispatch(ch) for ch in chunks]
+
+        for chunk, res in zip(chunks, results):
+            for j, (i, _, c) in enumerate(chunk):
+                out[i] = BatchResult(
+                    strategy=c["strategy"],
+                    seed=int(c.get("seed", 0)),
+                    makespan=float(res["makespan"][j]),
+                    total_bytes=float(res["total_bytes"][j]),
+                    total_flops=plan.total_flops,
+                )
+    return out  # type: ignore[return-value]

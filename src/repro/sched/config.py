@@ -123,6 +123,14 @@ class SchedConfig:
       ``kill`` (kill-and-requeue).
     - ``fault_trace``: path to a JSONL preemption trace replayed into
       every engine (``repro.runtime.traces``); must exist at parse time.
+    - ``exact``: simulation engine selector. ``True`` (default) runs the
+      exact Python event loop — the verification oracle. ``0`` opts into
+      the batched surrogate episode engine (``repro.core.episode``),
+      which requires the jax backend; ranking fidelity, not bit
+      equality (see docs/runtime_architecture.md).
+    - ``batch``: per-dispatch batch-size cap for the surrogate engine
+      (``api.run_batch`` splits larger sweeps into chunks of this many
+      configurations).
     - ``bench_backends``: backends the overhead benchmark measures.
     - ``regression_tol`` / ``row_tol``: throughput-gate tolerances.
 
@@ -142,6 +150,8 @@ class SchedConfig:
     churn: float = 0.0
     fault_mode: str = "drain"
     fault_trace: Optional[str] = None
+    exact: bool = True
+    batch: int = 256
     bench_backends: Optional[Tuple[str, ...]] = None
     regression_tol: float = 0.25
     row_tol: float = 0.0
@@ -181,6 +191,15 @@ class SchedConfig:
             raise _err(
                 "REPRO_SCHED_FAULT_MODE", self.fault_mode,
                 f"choose from {FAULT_MODES}",
+            )
+        if not self.exact and self.backend != "jax":
+            # the surrogate episode engine is a jax program; a silent
+            # fall-back to the exact path would invert the knob's meaning
+            raise ValueError(
+                "invalid scheduling configuration: REPRO_SCHED_EXACT=0 "
+                "(the batched surrogate engine) requires "
+                "REPRO_SCHED_BACKEND=jax, got "
+                f"REPRO_SCHED_BACKEND={self.backend!r}"
             )
         if self.lambda_depth is not None:
             object.__setattr__(
@@ -249,6 +268,8 @@ _ENV_SCHEMA = {
     "REPRO_SCHED_CHURN": ("churn", _parse_rate),
     "REPRO_SCHED_FAULT_MODE": ("fault_mode", lambda var, v: v.lower()),
     "REPRO_SCHED_FAULT_TRACE": ("fault_trace", _parse_trace_path),
+    "REPRO_SCHED_EXACT": ("exact", _parse_flag),
+    "REPRO_SCHED_BATCH": ("batch", lambda var, v: _parse_int(var, v, lo=1)),
     "REPRO_SCHED_BACKENDS": ("bench_backends", _parse_str_list),
     "REPRO_SCHED_REGRESSION_TOL": ("regression_tol", _parse_float),
     "REPRO_SCHED_ROW_TOL": (
