@@ -24,6 +24,11 @@ Machines differ in raw speed, so both files carry a ``calibration_score``
 — a fixed scheduler-independent, interpreter-bound workload — and all
 baseline numbers are rescaled by the calibration ratio first.
 
+Additionally, every audited row (``sched_overhead.audit_rows``) carries
+an in-run ``audit_overhead`` ratio — audited pass over the paired
+uninstrumented pass on the same graphs — that is bounded by
+``AUDIT_OVERHEAD_LIMIT`` with no baseline or calibration involved.
+
 Usage (CI runs this right after ``sched_overhead.py``)::
 
     python benchmarks/sched_overhead.py
@@ -54,20 +59,45 @@ BASELINE = RESULTS / "BENCH_sched_baseline.json"
 
 KEY_FIELDS = (
     "kernel", "strategy", "backend", "nt", "n_gpus", "capacity",
-    "churn", "fault_mode", "exact",
+    "churn", "fault_mode", "exact", "audit",
 )
+
+# hard bound on the measured slowdown of REPRO_SCHED_AUDIT=1 over the
+# paired uninstrumented pass (sched_overhead.audit_rows measures both in
+# one run, so the ratio is machine-speed-independent and needs no
+# calibration scaling or committed baseline)
+AUDIT_OVERHEAD_LIMIT = 3.0
 
 
 def _rows_by_key(section: dict) -> dict:
     out = {}
     for row in section.get("whole_sim", []):
-        # rows recorded before the surrogate engine existed are exact
+        # rows recorded before the surrogate engine existed are exact;
+        # rows recorded before the audit log existed are unaudited
         key = tuple(
-            row.get(f, True) if f == "exact" else row.get(f)
+            row.get(f, True) if f == "exact" else
+            row.get(f, False) if f == "audit" else row.get(f)
             for f in KEY_FIELDS
         )
         out[key] = row
     return out
+
+
+def _check_audit_overhead(cur: dict) -> bool:
+    """True when every audited row's in-run overhead ratio is in bounds."""
+    ok = True
+    for row in cur.get("whole_sim", []):
+        ratio = row.get("audit_overhead")
+        if ratio is None:
+            continue
+        mark = "ok  " if ratio <= AUDIT_OVERHEAD_LIMIT else "FAIL"
+        print(
+            f"  [{mark}] audit overhead {row['kernel']}/{row['strategy']}/"
+            f"nt{row['nt']}: {ratio:.2f}x (limit {AUDIT_OVERHEAD_LIMIT:.1f}x)"
+        )
+        if ratio > AUDIT_OVERHEAD_LIMIT:
+            ok = False
+    return ok
 
 
 def main() -> int:
@@ -79,10 +109,18 @@ def main() -> int:
     if not CURRENT.exists():
         print(f"no current results at {CURRENT}; run sched_overhead.py first")
         return 1
-    if not BASELINE.exists():
-        print(f"no committed baseline at {BASELINE}; gate skipped")
-        return 0
     cur = json.loads(CURRENT.read_text()).get("sched_overhead", {})
+    # the audit-overhead bound is in-run (paired instrumented vs plain
+    # pass), so it applies even without a committed baseline
+    audit_ok = _check_audit_overhead(cur)
+    if not audit_ok:
+        print(
+            f"audit instrumentation slower than {AUDIT_OVERHEAD_LIMIT:.1f}x "
+            "the uninstrumented run — gate FAILED"
+        )
+    if not BASELINE.exists():
+        print(f"no committed baseline at {BASELINE}; baseline gate skipped")
+        return 0 if audit_ok else 1
     base = json.loads(BASELINE.read_text()).get("sched_overhead", {})
     cal_cur = cur.get("calibration_score") or 0.0
     cal_base = base.get("calibration_score") or 0.0
@@ -122,13 +160,13 @@ def main() -> int:
             collapsed.append(key)
     if not log_ratios:
         print("no overlapping configurations between run and baseline")
-        return 0
+        return 0 if audit_ok else 1
     geo = math.exp(sum(log_ratios) / len(log_ratios))
     print(
         f"\naggregate events/sec vs baseline: {geo - 1.0:+.1%} "
         f"(geometric mean over {len(log_ratios)} configurations)"
     )
-    failed = False
+    failed = not audit_ok
     if geo < 1.0 - tol:
         print(f"aggregate drop exceeds {tol:.0%} — gate FAILED")
         failed = True

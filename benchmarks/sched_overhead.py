@@ -14,6 +14,9 @@ cost along two axes:
     interleaving on one ``repro.runtime.Engine``, with per-graph
     makespans), and a **churned** row family (seeded GPU detach/attach at
     ``CHURN_RATE`` under both recovery modes — the fault-handling path),
+    an **audited** row family (``audit=True``: the schedule-verifier's
+    audit log live, with the measured ``audit_overhead`` ratio over the
+    paired uninstrumented pass — gated by ``AUDIT_OVERHEAD_LIMIT``),
     and a **batched-sweep** row family (``exact=False``): whole strategy ×
     GPU-count × seed sweeps through ``repro.core.run_batch`` — the
     ``REPRO_SCHED_EXACT=0`` surrogate engine — reporting configs/sec,
@@ -300,6 +303,68 @@ def churn_rows(nt: int, n_gpus: int, n_runs: int) -> list:
 
 
 # ---------------------------------------------------------------------------
+# audited (schedule-verifier instrumented) throughput
+
+
+AUDIT_STRATEGIES = ("heft", "dada(a)+cp")
+# audit instrumentation is append-only record keeping on the event loop;
+# anything past this factor over the uninstrumented run means the audit
+# path grew real work (allocation storms, eager serialization) and the
+# "free when off, cheap when on" contract broke
+AUDIT_OVERHEAD_LIMIT = 3.0
+
+
+def audit_rows(nt: int, n_gpus: int, n_runs: int) -> list:
+    """Events/sec with ``REPRO_SCHED_AUDIT``-style instrumentation live,
+    paired with an uninstrumented pass on the same graphs — the
+    ``audit_overhead`` ratio regression-gates the audit log's cost the
+    way the capacity/churn rows gate eviction and fault handling. The
+    pairing is in-run, so the ratio is immune to machine speed."""
+    machine = machine_for(n_gpus)
+    gfac = graphs_for(nt)["cholesky"]
+    graphs = [gfac() for _ in range(n_runs)]
+    strats = strategies("numpy")
+    rows = []
+    for label in AUDIT_STRATEGIES:
+        sfac = strats[label]
+        walls = {}
+        events = tasks = 0
+        for audit in (False, True):
+            dt = float("inf")
+            for _rep in range(2):
+                events = tasks = 0
+                t0 = time.perf_counter()
+                for i, g in enumerate(graphs):
+                    sim = Simulator(
+                        g, machine, sfac(), seed=1234 + i, audit=audit
+                    )
+                    res = sim.run()
+                    events += res.n_events
+                    tasks += len(g)
+                dt = min(dt, time.perf_counter() - t0)
+            walls[audit] = dt
+        dt = walls[True]
+        overhead = round(dt / walls[False], 3) if walls[False] > 0 else 0.0
+        row = dict(
+            kernel="cholesky", strategy=label, backend="numpy",
+            nt=nt, n_gpus=n_gpus, runs=n_runs, capacity=0,
+            churn=0.0, fault_mode="drain", exact=True, audit=True,
+            wall_s=round(dt, 4), events=events,
+            events_per_s=round(events / dt, 1) if dt > 0 else 0.0,
+            tasks_per_s=round(tasks / dt, 1) if dt > 0 else 0.0,
+            audit_overhead=overhead,
+        )
+        rows.append(row)
+        print(
+            f"sched_overhead/cholesky/{label}/gpus{n_gpus}/nt{nt}/"
+            f"numpy/audit,{dt / n_runs * 1e6:.1f},"
+            f"events_per_s={row['events_per_s']};"
+            f"audit_overhead={overhead}"
+        )
+    return rows
+
+
+# ---------------------------------------------------------------------------
 # batched surrogate sweep throughput (REPRO_SCHED_EXACT=0 engine)
 
 
@@ -530,6 +595,7 @@ def main() -> list:
     if nts:  # REPRO_BENCH_NT="" is a valid empty sweep
         rows += streaming_rows(nts[0], n_gpus, n_runs)
         rows += churn_rows(nts[0], n_gpus, n_runs)
+        rows += audit_rows(nts[0], n_gpus, n_runs)
         if "jax" in backends:
             rows += batched_sweep_rows(nts[0], n_gpus, n_runs)
     total_ev = sum(r["events"] for r in rows if r.get("exact", True))

@@ -68,7 +68,22 @@ def run_simulation(
 
         strategy = resolve(strategy)
     sim = Simulator(graph, machine, strategy, seed=seed, noise=noise, config=config)
-    return sim.run()
+    res = sim.run()
+    if sim.audit is not None:
+        # REPRO_SCHED_AUDIT=1: every simulation is re-checked by the
+        # independent verifier (repro.verify) — precedence, hazards,
+        # capacity, byte conservation, fault windows — and a violation is
+        # a hard failure, not a benchmark footnote
+        from repro.verify import errors as _verify_errors
+        from repro.verify import verify_audit
+
+        errs = _verify_errors(verify_audit(sim.audit))
+        if errs:
+            detail = "; ".join(f"{f.code}: {f.message}" for f in errs[:5])
+            raise RuntimeError(
+                f"schedule verification failed ({len(errs)} error(s)): {detail}"
+            )
+    return res
 
 
 @dataclass

@@ -323,7 +323,8 @@ def _enable_disk_cache() -> None:
     The episode jit compiles in ~1-2s per (kernel, shape) — the dominant
     cost of a cold fast-validation run. The persistent cache makes every
     later process start warm. Respects an explicit
-    ``JAX_COMPILATION_CACHE_DIR``; best-effort otherwise.
+    ``JAX_COMPILATION_CACHE_DIR`` (read through ``SchedConfig`` — this
+    module does not touch ``os.environ``); best-effort otherwise.
     """
     global _DISK_CACHE_SET
     if _DISK_CACHE_SET:
@@ -335,11 +336,12 @@ def _enable_disk_cache() -> None:
     try:
         import jax
 
-        if not os.environ.get("JAX_COMPILATION_CACHE_DIR"):
-            jax.config.update(
-                "jax_compilation_cache_dir",
-                os.path.join(tempfile.gettempdir(), "repro-jax-cache"),
-            )
+        from repro.sched.config import current_config
+
+        cache_dir = current_config().jax_cache_dir
+        if not cache_dir:
+            cache_dir = os.path.join(tempfile.gettempdir(), "repro-jax-cache")
+        jax.config.update("jax_compilation_cache_dir", cache_dir)
         jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.2)
     except Exception:
         pass  # older jax or read-only tmp: compiles stay in-process only
@@ -369,7 +371,7 @@ def _build_episode_fn(shape_key: tuple):
     )
 
     (B, n_pad, r_pad, w_pad, s_pad, R, n_u, nd1, n_steps,
-     use_cap, use_pallas, interpret) = shape_key
+     use_cap, use_pallas, interpret, emit) = shape_key
 
     def xfer_rows(masks, per_read, col_bits, host_col):
         if use_pallas:
@@ -412,6 +414,7 @@ def _build_episode_fn(shape_key: tuple):
         def step(carry, k):
             (load, tcount, pready, ready_t, indeg, res_mask, touch, resbytes,
              writer, link_free, total_b, mk, npl) = carry
+            tb_in = total_b  # for the emitted per-step eviction bytes
 
             # pready carries the ready set directly: prio where ready,
             # -inf otherwise. max + first-match iota-min instead of argmax:
@@ -588,10 +591,20 @@ def _build_episode_fn(shape_key: tuple):
                     0, _K_EVICT, evict, (res_mask, resbytes, total_b)
                 )
 
+            # schedule emission (audit schema for repro.verify): the
+            # chosen task/resource and its timeline per step. Off by
+            # default — emit changes the compiled shape, so it is part of
+            # the cache key and costs nothing when disabled.
+            if emit:
+                evict_b = total_b - tb_in - jnp.where(act, xfer_b, 0.0)
+                ys = (t, r_sel, act, start, xfer_t, fin,
+                      jnp.where(act, xfer_b, 0.0), evict_b)
+            else:
+                ys = None
             return (
                 (load, tcount, pready, ready_t, indeg, res_mask, touch,
                  resbytes, writer, link_free, total_b, mk, npl),
-                None,
+                ys,
             )
 
         f32 = jnp.float32
@@ -613,10 +626,12 @@ def _build_episode_fn(shape_key: tuple):
             jnp.zeros((B,), f32),
             jnp.zeros((B,), jnp.int32),
         )
-        carry, _ = jax.lax.scan(
+        carry, ys = jax.lax.scan(
             step, carry0, jnp.arange(n_steps, dtype=jnp.int32)
         )
         total_b, mk, npl = carry[-3], carry[-2], carry[-1]
+        if emit:
+            return mk, total_b, npl, ys
         return mk, total_b, npl
 
     return jax.jit(episode)
@@ -629,6 +644,7 @@ def run_episodes(
     config=None,
     extra_steps: int = 0,
     pad_to: Optional[int] = None,
+    emit_schedule: bool = False,
 ) -> Dict[str, np.ndarray]:
     """Run every configuration of ``batch`` through one compiled episode.
 
@@ -636,6 +652,12 @@ def run_episodes(
     with the batch. ``extra_steps`` and ``pad_to`` (batch-axis padding)
     exist for the padding-invariance property suite: padded steps and
     padded batch rows are provably no-ops.
+
+    ``emit_schedule`` additionally returns a ``"schedule"`` dict of
+    (B, n_steps) arrays — per-step chosen task/resource and timeline in
+    the audit schema (see :func:`episode_audit_logs`). It is part of the
+    compile-cache key, so the default path's compiled episode is
+    unchanged.
     """
     import jax
     import jax.numpy as jnp
@@ -662,7 +684,7 @@ def run_episodes(
     shape_key = (
         B_pad, plan.n_pad, plan.r_pad, plan.w_pad, plan.s_pad,
         plan.n_res, plan.n_u, plan.n_data + 1, n_steps,
-        use_cap, use_pallas, interpret,
+        use_cap, use_pallas, interpret, bool(emit_schedule),
     )
     fn = _EPISODE_CACHE.get(shape_key)
     if fn is None:
@@ -671,7 +693,7 @@ def run_episodes(
     # the surrogate runs in f32: it reports *rankings* and relative error,
     # and halving the scan's state traffic is most of its speed advantage
     f32 = np.float32
-    mk, total_b, n_placed = fn(
+    res = fn(
         jnp.asarray(plan.read_ids), jnp.asarray(plan.read_t, dtype=f32),
         jnp.asarray(plan.read_sz, dtype=f32), jnp.asarray(plan.write_ids),
         jnp.asarray(plan.write_sz, dtype=f32), jnp.asarray(plan.succ_ids),
@@ -692,8 +714,80 @@ def run_episodes(
         jnp.asarray(padb(batch.cap, fill=np.inf), dtype=f32),
         jnp.asarray(plan.bandwidth, dtype=f32),
     )
-    return {
+    mk, total_b, n_placed = res[0], res[1], res[2]
+    out = {
         "makespan": np.asarray(mk)[:B].astype(np.float64),
         "total_bytes": np.asarray(total_b)[:B].astype(np.float64),
         "n_placed": np.asarray(n_placed)[:B],
     }
+    if emit_schedule:
+        # scan stacks along the step axis: (n_steps, B) -> (B, n_steps)
+        names = ("tid", "rid", "act", "start", "xfer_t", "fin", "xfer_b",
+                 "evict_b")
+        out["schedule"] = {
+            name: np.asarray(col)[:, :B].T for name, col in zip(names, res[3])
+        }
+    return out
+
+
+def episode_audit_logs(graph, batch: EpisodeBatch, out: Dict[str, np.ndarray]):
+    """Convert an ``emit_schedule`` run into per-configuration audit logs.
+
+    Each batch row becomes one ``repro.verify.audit.AuditLog`` with
+    ``engine="surrogate"``: per-step placements as exec records (start
+    after the step's transfer time, end at the step's finish), demand
+    transfers and capacity write-backs as hop records, and the episode's
+    claimed makespan/total-bytes as the result footer — the same schema
+    the exact engine emits, so ``repro.verify.verify_audit`` re-checks
+    surrogate schedules with no engine-specific code.
+    """
+    from repro.verify.audit import AuditLog, graph_accesses
+
+    sched = out["schedule"]
+    accesses = graph_accesses(graph)
+    n = len(accesses)
+    n_res = batch.mem_col.shape[1]
+    logs = []
+    for b in range(len(batch)):
+        log = AuditLog(engine="surrogate")
+        log.machine = {
+            "host_mem": 0,
+            "resources": [
+                {
+                    "rid": r,
+                    "mem": int(batch.mem_col[b, r]),
+                    "valid": bool(batch.valid_res[b, r]),
+                    "link": int(batch.link_grp[b, r]),
+                }
+                for r in range(n_res)
+            ],
+        }
+        log.graphs[0] = {"submit_at": 0.0, "tasks": accesses}
+        for k in range(sched["tid"].shape[1]):
+            if not sched["act"][b, k]:
+                continue
+            tid = int(sched["tid"][b, k])
+            if tid >= n:
+                continue  # padded step ids never activate; defensive
+            rid = int(sched["rid"][b, k])
+            start = float(sched["start"][b, k])
+            xt = float(sched["xfer_t"][b, k])
+            xb = float(sched["xfer_b"][b, k])
+            eb = float(sched["evict_b"][b, k])
+            fin = float(sched["fin"][b, k])
+            log.log_exec(0, tid, rid, int(batch.mem_col[b, rid]), start + xt, fin)
+            grp = int(batch.link_grp[b, rid])
+            if xb > 0:
+                log.log_hop("copy", int(round(xb)), grp, start, start + xt)
+            if eb > 0:
+                log.log_hop("writeback", int(round(eb)), grp, start, fin)
+        log.result = {
+            "total_bytes": float(out["total_bytes"][b]),
+            "n_transfers": None,
+            "makespan": float(out["makespan"][b]),
+            "per_graph": {
+                0: {"finish": float(out["makespan"][b]), "submit_at": 0.0}
+            },
+        }
+        logs.append(log)
+    return logs

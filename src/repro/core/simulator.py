@@ -49,6 +49,7 @@ class Simulator(Engine):
         churn: Optional[float] = None,
         fault_mode: Optional[str] = None,
         fault_trace: Optional[str] = None,
+        audit: Optional[bool] = None,
     ) -> None:
         super().__init__(
             machine,
@@ -63,6 +64,7 @@ class Simulator(Engine):
             churn=churn,
             fault_mode=fault_mode,
             fault_trace=fault_trace,
+            audit=audit,
         )
         self._primary: GraphContext = self.submit(graph)
         # legacy aliases (instrumentation and benchmarks reset these

@@ -1,8 +1,18 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
-# The two lines above MUST run before any jax import: jax locks the device
-# count at first initialization (see MULTI-POD DRY-RUN spec).
+# Merge, don't clobber: the user's own XLA_FLAGS (dump paths, autotune
+# knobs) must survive; only the host-device-count flag is replaced — the
+# dry-run's mesh math requires exactly 512 host devices. MUST run before
+# any jax import: jax locks the device count at first initialization
+# (see MULTI-POD DRY-RUN spec).
+_flags = [
+    f
+    for f in os.environ.get("XLA_FLAGS", "").split()
+    if not f.startswith("--xla_force_host_platform_device_count")
+]
+_flags.append("--xla_force_host_platform_device_count=512")
+os.environ["XLA_FLAGS"] = " ".join(_flags)
+del _flags
 
 import argparse  # noqa: E402
 import json  # noqa: E402

@@ -144,6 +144,7 @@ class Engine:
         churn: Optional[float] = None,
         fault_mode: Optional[str] = None,
         fault_trace: Optional[str] = None,
+        audit: Optional[bool] = None,
     ) -> None:
         self.machine = machine
         self.strategy = strategy
@@ -210,6 +211,30 @@ class Engine:
             fault_trace = cfg.fault_trace
         if fault_trace:
             self.replay_trace(fault_trace)
+
+        # opt-in structured audit log (repro.verify): placements, hops,
+        # landing decisions, evictions and fault windows recorded for the
+        # independent schedule verifier. Every hook is behind an
+        # `is not None` check, so audit-off runs stay bit-for-bit
+        # identical to uninstrumented behavior.
+        if audit is None:
+            audit = cfg.audit
+        self.audit = None
+        if audit:
+            from repro.verify.audit import AuditLog
+
+            self.audit = AuditLog(engine="exact")
+            self.audit.log_machine(
+                machine,
+                host_mem=HOST_MEM,
+                capacity=self.memory.capacity if self._bounded else 0,
+                eviction=eviction,
+                cancel_stale=self._cancel_stale,
+                fault_mode=fault_mode,
+                seed=seed,
+                noise=noise,
+            )
+        self.transfers.audit = self.audit
 
         # submitted graphs
         self._ctxs: List[GraphContext] = []
@@ -303,6 +328,8 @@ class Engine:
         else:
             ctx.submit_at = max(0.0, at if at is not None else 0.0)
             self._pending.append(ctx)
+        if self.audit is not None:
+            self.audit.log_graph(ctx.gid, ctx.submit_at, graph)
         return ctx
 
     # ------------------------------------------------------------------
@@ -527,7 +554,10 @@ class Engine:
         for did, name, size in ctx.arrays.task_writes[tid]:
             if dead_mem is not None:
                 self.transfers.one_hop(
-                    size, self.transfers.mem_link.get(dead_mem), self.now
+                    size,
+                    self.transfers.mem_link.get(dead_mem),
+                    self.now,
+                    kind="evacuate",
                 )
                 metrics.n_evacuations += 1
                 metrics.evacuated_bytes += size
@@ -539,6 +569,19 @@ class Engine:
             inflight_pop(name, None)
             if cancel_stale:
                 versions[name] = versions.get(name, 0) + 1
+        if self.audit is not None:
+            # logged after the write loop so eviction records emitted by
+            # ensure_capacity above carry smaller seq than the write
+            # effects the verifier applies at this record
+            self.audit.log_exec(
+                ctx.gid,
+                tid,
+                rid,
+                self._mem_of[rid],
+                w.run_start,
+                self.now,
+                wrote_host=dead_mem is not None,
+            )
         if bounded:
             self.memory.note_task_done(ctx, tid)
         # load time-stamp correction (§2.3: runtime corrects predictions)
@@ -586,6 +629,7 @@ class Engine:
         cancel_stale = self._cancel_stale
         faults = self.faults
         faults_on = self._faults_on
+        audit = self.audit
         n_events = 0
         while events:
             t, _, kind, payload = heappop(events)
@@ -609,13 +653,15 @@ class Engine:
                     # in flight: the DMA died with it — drop the landing
                     # (the memory was salvaged and its waiters scrubbed at
                     # detach; a re-attached device must not resurrect it)
-                    pass
+                    if audit is not None:
+                        audit.log_landing(ctx.gid, name, mem, t, False, "dead")
                 elif cancel_stale and ver != ctx.data_version.get(name, 0):
                     # the data was overwritten while this copy was in
                     # flight: the landing is stale and is dropped (the
                     # blocked readers below re-request against the new
                     # version)
-                    pass
+                    if audit is not None:
+                        audit.log_landing(ctx.gid, name, mem, t, False, "stale")
                 else:
                     # NOTE (pre-existing modeling artifact, preserved for
                     # equivalence when cancel-stale is off): a transfer in
@@ -635,6 +681,8 @@ class Engine:
                                 (did,),
                             )
                     ctx.residency.add_copy(name, mem)
+                    if audit is not None:
+                        audit.log_landing(ctx.gid, name, mem, t, True, "ok")
                 waiters = ctx.waiting.pop((name, mem), None)
                 if waiters:
                     if bounded and mem != HOST_MEM:
@@ -682,6 +730,8 @@ class Engine:
                 if steal_on:
                     self._steal_round()
         self.metrics.n_events = n_events
+        if audit is not None:
+            audit.finalize(self)
         self._check_complete()
 
     def _check_complete(self) -> None:

@@ -202,6 +202,8 @@ class FaultManager:
         now = engine.now
         self._mark(rid, False)
         self.history.append(FaultEvent(now, "detach", rid, mode))
+        if engine.audit is not None:
+            engine.audit.log_fault(now, "detach", rid, mode)
         metrics = engine.metrics
         metrics.n_detaches += 1
 
@@ -297,6 +299,8 @@ class FaultManager:
         now = engine.now
         self._mark(rid, True)
         self.history.append(FaultEvent(now, "attach", rid, None))
+        if engine.audit is not None:
+            engine.audit.log_fault(now, "attach", rid, None)
         engine.metrics.n_attaches += 1
         mem = engine._mem_of[rid]
         self.dead_mems.discard(mem)
@@ -339,7 +343,7 @@ class FaultManager:
                     # sole valid copy lives here: dirty w.r.t. host —
                     # write back over this memory's link (the preemption
                     # notice window), charged as real transfer traffic
-                    transfers.one_hop(sizes[did], group, now)
+                    transfers.one_hop(sizes[did], group, now, kind="evacuate")
                     residency.add_copy(name, HOST_MEM)
                     metrics.n_evacuations += 1
                     metrics.evacuated_bytes += sizes[did]

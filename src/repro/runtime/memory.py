@@ -334,7 +334,8 @@ class MemoryManager:
         size = residency._sizes[did]
         bit = 1 << (mem + 1)
         metrics = self.transfers.metrics
-        if residency.mask_list[did] == bit:
+        dirty = residency.mask_list[did] == bit
+        if dirty:
             # sole valid copy (dirty w.r.t. host): write back before
             # invalidation, charged on this memory's link so the incoming
             # copy that forced the eviction queues behind it.
@@ -345,12 +346,17 @@ class MemoryManager:
             # state the layer does not track. Host readers in that window
             # see bounded optimism; device re-fetches are unaffected (they
             # queue behind the write-back on the same link).
-            self.transfers.one_hop(size, self.transfers.mem_link.get(mem), now)
+            self.transfers.one_hop(
+                size, self.transfers.mem_link.get(mem), now, kind="writeback"
+            )
             residency.add_copy(name, HOST_MEM)
             metrics.n_writebacks += 1
             metrics.writeback_bytes += size
         residency.drop_copy(name, mem)  # observer updates lru + resident
         metrics.n_evictions += 1
+        audit = self.transfers.audit
+        if audit is not None:
+            audit.log_evict(ctx.gid, name, mem, now, dirty)
 
     # ------------------------------------------------------------------
     # the pressure signal (policy-facing)

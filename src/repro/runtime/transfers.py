@@ -33,7 +33,7 @@ class TransferEngine:
     __slots__ = (
         "machine", "model", "events", "metrics", "memory",
         "mem_link", "link_free", "_plain_link", "_link_lat", "_link_bw",
-        "cancel_stale", "faults",
+        "cancel_stale", "faults", "audit",
     )
 
     def __init__(
@@ -49,6 +49,7 @@ class TransferEngine:
         self.metrics = metrics
         self.memory = None  # MemoryManager, wired by the engine
         self.faults = None  # FaultManager, wired by the engine
+        self.audit = None  # repro.verify AuditLog, wired by the engine
         self.cancel_stale = False
         self.link_free: Dict[int, float] = {}
         # accelerator memory -> link group (first resource on that memory)
@@ -62,7 +63,9 @@ class TransferEngine:
         self._link_bw = machine.link.bandwidth
 
     # ------------------------------------------------------------------
-    def one_hop(self, nbytes: int, group: Optional[int], t: float) -> float:
+    def one_hop(
+        self, nbytes: int, group: Optional[int], t: float, kind: str = "copy"
+    ) -> float:
         """Serialize the transfer on its link group (FIFO = shared bandwidth)."""
         start = max(t, self.link_free.get(group, 0.0)) if group is not None else t
         if self._plain_link:
@@ -74,6 +77,8 @@ class TransferEngine:
             self.link_free[group] = done
         self.metrics.total_bytes += nbytes
         self.metrics.n_transfers += 1
+        if self.audit is not None:
+            self.audit.log_hop(kind, nbytes, group, t, done)
         return done
 
     # ------------------------------------------------------------------
@@ -140,11 +145,15 @@ class TransferEngine:
                     flights = inflight[name] = {}
                 flights[HOST_MEM] = mid
                 post(mid, "xfer", (ctx, name, HOST_MEM, ver, 0))
+                if self.audit is not None:
+                    self.audit.note_request(ctx.gid, name, HOST_MEM, mid, now)
             done = self.one_hop(size, mem_link.get(dst_mem), mid)
         if flights is None:
             flights = inflight[name] = {}
         flights[dst_mem] = done
         post(done, "xfer", (ctx, name, dst_mem, ver, epoch))
+        if self.audit is not None:
+            self.audit.note_request(ctx.gid, name, dst_mem, done, now)
         return done
 
     # ------------------------------------------------------------------

@@ -128,6 +128,15 @@ class SchedConfig:
       the batched surrogate episode engine (``repro.core.episode``),
       which requires the jax backend; ranking fidelity, not bit
       equality (see docs/runtime_architecture.md).
+    - ``audit``: record a structured schedule audit log on every engine
+      (``repro.verify``): placements, transfer hops, landing decisions,
+      evictions and fault windows, consumed by the independent schedule
+      verifier. Off by default — audit-off runs are bit-for-bit
+      identical to pre-audit behavior (see docs/verification.md).
+    - ``jax_cache_dir``: mirror of ``JAX_COMPILATION_CACHE_DIR`` (the one
+      non-``REPRO_*`` variable this config owns), so the surrogate
+      engine's persistent-compilation-cache setup reads it from here
+      instead of touching ``os.environ`` itself.
     - ``batch``: per-dispatch batch-size cap for the surrogate engine
       (``api.run_batch`` splits larger sweeps into chunks of this many
       configurations).
@@ -151,6 +160,8 @@ class SchedConfig:
     fault_mode: str = "drain"
     fault_trace: Optional[str] = None
     exact: bool = True
+    audit: bool = False
+    jax_cache_dir: Optional[str] = None
     batch: int = 256
     bench_backends: Optional[Tuple[str, ...]] = None
     regression_tol: float = 0.25
@@ -234,6 +245,12 @@ class SchedConfig:
                 "unknown scheduling configuration variable(s): "
                 f"{', '.join(sorted(unknown))} (known: {known})"
             )
+        # non-REPRO-prefixed variables this config mirrors (jax owns the
+        # name; we only read it so sched/config.py stays the single env
+        # source and the repo lint needs no exception for episode.py)
+        raw = env.get("JAX_COMPILATION_CACHE_DIR")
+        if raw:
+            kw["jax_cache_dir"] = raw
         return cls(**kw)
 
     def env_items(self) -> Tuple[Tuple[str, str], ...]:
@@ -269,6 +286,7 @@ _ENV_SCHEMA = {
     "REPRO_SCHED_FAULT_MODE": ("fault_mode", lambda var, v: v.lower()),
     "REPRO_SCHED_FAULT_TRACE": ("fault_trace", _parse_trace_path),
     "REPRO_SCHED_EXACT": ("exact", _parse_flag),
+    "REPRO_SCHED_AUDIT": ("audit", _parse_flag),
     "REPRO_SCHED_BATCH": ("batch", lambda var, v: _parse_int(var, v, lo=1)),
     "REPRO_SCHED_BACKENDS": ("bench_backends", _parse_str_list),
     "REPRO_SCHED_REGRESSION_TOL": ("regression_tol", _parse_float),
@@ -288,6 +306,8 @@ _ENV_SCHEMA = {
 }
 
 _FIELD_TO_ENV = {field: var for var, (field, _) in _ENV_SCHEMA.items()}
+# mirrored non-REPRO variables (special-cased in from_env)
+_FIELD_TO_ENV["jax_cache_dir"] = "JAX_COMPILATION_CACHE_DIR"
 
 KNOWN_ENV_VARS: Tuple[str, ...] = tuple(sorted(_ENV_SCHEMA))
 
@@ -303,7 +323,9 @@ def _env_snapshot() -> Tuple[Tuple[str, str], ...]:
         sorted(
             (k, v)
             for k, v in os.environ.items()
-            if k.startswith(SCHED_PREFIX) or k.startswith(BENCH_PREFIX)
+            if k.startswith(SCHED_PREFIX)
+            or k.startswith(BENCH_PREFIX)
+            or k == "JAX_COMPILATION_CACHE_DIR"
         )
     )
 

@@ -1,0 +1,34 @@
+"""Static-analysis layer over both scheduling engines.
+
+Two independent halves:
+
+- ``repro.verify.audit`` / ``repro.verify.schedule``: an opt-in audit
+  log (``REPRO_SCHED_AUDIT=1``) records every placement, transfer hop,
+  landing decision, eviction and fault window from the exact runtime
+  engine, and ``core/episode.py`` emits its surrogate placements in the
+  same schema.  The verifier reconstructs a residency timeline from the
+  log alone — zero engine-code reuse, pure stdlib — and re-checks
+  precedence, data hazards, capacity, byte conservation, exactly-once
+  execution and dead-worker windows from first principles.
+- ``repro.verify.lint``: AST-based repo lint (``python -m repro.verify
+  lint``) enforcing the determinism/config contract: no ``os.environ``
+  outside ``sched/config.py``, no unseeded global ``np.random``, no
+  wall-clock reads in ``src/repro``, no host-sync smells inside jitted
+  paths.
+
+See docs/verification.md for the invariant list and audit schema.
+"""
+
+from repro.verify.audit import AuditLog, graph_accesses
+from repro.verify.lint import LintFinding, lint_paths
+from repro.verify.schedule import Finding, errors, verify_audit
+
+__all__ = [
+    "AuditLog",
+    "Finding",
+    "LintFinding",
+    "errors",
+    "graph_accesses",
+    "lint_paths",
+    "verify_audit",
+]

@@ -1,0 +1,57 @@
+"""CLI for the static-analysis layer.
+
+    python -m repro.verify lint [paths...]
+    python -m repro.verify schedule AUDIT.jsonl [more.jsonl...]
+
+``lint`` defaults to the installed ``repro`` package tree and exits 1
+on any finding.  ``schedule`` verifies audit logs previously written
+with ``AuditLog.to_jsonl`` and exits 1 when any log has errors
+(warnings are printed but do not fail).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import Optional, Sequence
+
+from repro.verify.audit import AuditLog
+from repro.verify.lint import lint_paths
+from repro.verify.schedule import errors, verify_audit
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.verify", description=__doc__
+    )
+    sub = parser.add_subparsers(dest="cmd", required=True)
+    p_lint = sub.add_parser("lint", help="AST determinism/config lint")
+    p_lint.add_argument("paths", nargs="*", help="files or directories (default: repro package)")
+    p_sched = sub.add_parser("schedule", help="verify audit-log JSONL files")
+    p_sched.add_argument("logs", nargs="+", help="audit logs written by AuditLog.to_jsonl")
+    args = parser.parse_args(argv)
+
+    if args.cmd == "lint":
+        findings = lint_paths(args.paths)
+        for f in findings:
+            print(f)
+        print(f"lint: {len(findings)} finding(s)")
+        return 1 if findings else 0
+
+    failed = False
+    for path in args.logs:
+        log = AuditLog.from_jsonl(path)
+        findings = verify_audit(log)
+        errs = errors(findings)
+        for f in findings:
+            print(f"{path}: {f}")
+        print(
+            f"{path}: engine={log.engine} "
+            f"{len(errs)} error(s), {len(findings) - len(errs)} warning(s)"
+        )
+        failed = failed or bool(errs)
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

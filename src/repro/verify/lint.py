@@ -1,0 +1,300 @@
+"""AST-based determinism/config lint for ``src/repro``.
+
+Run as ``python -m repro.verify lint`` (exit 1 on findings).  Rules:
+
+- ``ENV001``  ``os.environ`` / ``os.getenv`` outside ``sched/config.py``.
+  ``SchedConfig`` is the single validated environment source; ad-hoc
+  reads bypass its schema, snapshot memoization and subprocess
+  propagation (``env_items``).  Allowlist: ``launch/dryrun.py`` —
+  ``XLA_FLAGS`` must be set before the first jax import (earlier than
+  any config object can exist) and ``REPRO_RESULTS_DIR`` is a
+  launcher-only output path.
+- ``RND001``  global-state numpy randomness: any ``np.random.<fn>()``
+  call on the module-level generator, or ``np.random.default_rng()``
+  with no seed.  Everything stochastic must thread an explicit seed.
+- ``TIME001`` wall-clock reads (``time.time``, ``datetime.now``,
+  ``datetime.utcnow``) — simulated time must come from the event loop,
+  never the host clock.  Allowlist: ``launch/`` (real training/serving
+  entry points legitimately read wall time).
+- ``SYNC001`` host-sync smells inside jitted paths of
+  ``core/backend.py`` / ``core/episode.py``: ``.item()`` calls or
+  ``float(...)``/``int(...)`` on non-constant arguments inside a
+  function that is wrapped by ``jax.jit`` (direct call, decorator, or
+  ``partial(jax.jit, ...)``).  Each forces a device→host transfer and a
+  blocking sync per trace.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+from dataclasses import dataclass
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+DEFAULT_ROOT = os.path.join(os.path.dirname(os.path.dirname(__file__)))
+
+ENV_HOME = "sched/config.py"
+ENV_ALLOW = {
+    # XLA_FLAGS must be exported before the first jax import, which is
+    # earlier than SchedConfig can run; REPRO_RESULTS_DIR is an output
+    # path for the launcher only.
+    "launch/dryrun.py",
+}
+TIME_ALLOW_PREFIXES = ("launch/",)
+SYNC_SUFFIXES = ("backend.py", "episode.py")
+
+# numpy module-level generator functions (implicit global state)
+_GLOBAL_RANDOM_FNS = {
+    "random",
+    "rand",
+    "randn",
+    "randint",
+    "random_sample",
+    "ranf",
+    "sample",
+    "choice",
+    "shuffle",
+    "permutation",
+    "uniform",
+    "normal",
+    "standard_normal",
+    "exponential",
+    "poisson",
+    "beta",
+    "binomial",
+    "gamma",
+    "seed",
+    "bytes",
+}
+
+
+@dataclass
+class LintFinding:
+    path: str
+    line: int
+    code: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: {self.code} {self.message}"
+
+
+def _rel(path: str) -> str:
+    """Path relative to the ``repro`` package root, '/'-separated."""
+    norm = path.replace(os.sep, "/")
+    marker = "repro/"
+    idx = norm.rfind(marker)
+    if idx >= 0:
+        return norm[idx + len(marker):]
+    return os.path.basename(norm)
+
+
+def _attr_chain(node: ast.AST) -> Optional[List[str]]:
+    """Dotted name of an attribute chain, e.g. np.random.rand -> [...]."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        parts.reverse()
+        return parts
+    return None
+
+
+def _is_jax_jit(node: ast.AST) -> bool:
+    chain = _attr_chain(node)
+    return chain is not None and chain[-1] == "jit" and chain[0] in ("jax", "jit")
+
+
+def _jit_wrapped_names(tree: ast.Module) -> Set[str]:
+    """Names of functions passed to jax.jit(...) anywhere in the module."""
+    names: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and _is_jax_jit(node.func):
+            for arg in node.args[:1]:
+                if isinstance(arg, ast.Name):
+                    names.add(arg.id)
+    return names
+
+
+def _is_jitted_def(fn: ast.AST, jit_names: Set[str]) -> bool:
+    if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+        return False
+    if fn.name in jit_names:
+        return True
+    for dec in fn.decorator_list:
+        if _is_jax_jit(dec):
+            return True
+        if isinstance(dec, ast.Call):
+            if _is_jax_jit(dec.func):
+                return True
+            # partial(jax.jit, ...) / functools.partial(jax.jit, ...)
+            chain = _attr_chain(dec.func)
+            if chain and chain[-1] == "partial":
+                if any(_is_jax_jit(a) for a in dec.args):
+                    return True
+    return False
+
+
+def _check_env(tree: ast.Module, rel: str, out: List[LintFinding]) -> None:
+    if rel == ENV_HOME or rel in ENV_ALLOW:
+        return
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Attribute):
+            chain = _attr_chain(node)
+            if chain == ["os", "environ"]:
+                out.append(
+                    LintFinding(
+                        rel,
+                        node.lineno,
+                        "ENV001",
+                        "os.environ access outside sched/config.py "
+                        "(route through SchedConfig)",
+                    )
+                )
+        elif isinstance(node, ast.Call):
+            chain = _attr_chain(node.func)
+            if chain == ["os", "getenv"]:
+                out.append(
+                    LintFinding(
+                        rel,
+                        node.lineno,
+                        "ENV001",
+                        "os.getenv outside sched/config.py "
+                        "(route through SchedConfig)",
+                    )
+                )
+
+
+def _check_random(tree: ast.Module, rel: str, out: List[LintFinding]) -> None:
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        chain = _attr_chain(node.func)
+        if not chain or len(chain) < 3:
+            continue
+        if chain[0] in ("np", "numpy") and chain[1] == "random":
+            fn = chain[2]
+            if fn in _GLOBAL_RANDOM_FNS:
+                out.append(
+                    LintFinding(
+                        rel,
+                        node.lineno,
+                        "RND001",
+                        f"np.random.{fn}() uses the unseeded module-level "
+                        "generator (thread an explicit Generator/seed)",
+                    )
+                )
+            elif fn == "default_rng" and not node.args and not node.keywords:
+                out.append(
+                    LintFinding(
+                        rel,
+                        node.lineno,
+                        "RND001",
+                        "np.random.default_rng() without a seed is "
+                        "nondeterministic (pass an explicit seed)",
+                    )
+                )
+
+
+def _check_time(tree: ast.Module, rel: str, out: List[LintFinding]) -> None:
+    if rel.startswith(TIME_ALLOW_PREFIXES):
+        return
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        chain = _attr_chain(node.func)
+        if chain is None:
+            continue
+        if chain == ["time", "time"] or (
+            len(chain) >= 2
+            and chain[-2] == "datetime"
+            and chain[-1] in ("now", "utcnow")
+        ):
+            out.append(
+                LintFinding(
+                    rel,
+                    node.lineno,
+                    "TIME001",
+                    f"wall-clock read {'.'.join(chain)}() in simulation code "
+                    "(simulated time must come from the event loop)",
+                )
+            )
+
+
+def _check_host_sync(tree: ast.Module, rel: str, out: List[LintFinding]) -> None:
+    if not rel.endswith(SYNC_SUFFIXES):
+        return
+    jit_names = _jit_wrapped_names(tree)
+    for node in ast.walk(tree):
+        if not _is_jitted_def(node, jit_names):
+            continue
+        for inner in ast.walk(node):
+            if not isinstance(inner, ast.Call):
+                continue
+            if isinstance(inner.func, ast.Attribute) and inner.func.attr == "item":
+                out.append(
+                    LintFinding(
+                        rel,
+                        inner.lineno,
+                        "SYNC001",
+                        f".item() inside jitted function {node.name!r} forces "
+                        "a host sync",
+                    )
+                )
+            elif (
+                isinstance(inner.func, ast.Name)
+                and inner.func.id in ("float", "int")
+                and inner.args
+                and not isinstance(inner.args[0], ast.Constant)
+            ):
+                out.append(
+                    LintFinding(
+                        rel,
+                        inner.lineno,
+                        "SYNC001",
+                        f"{inner.func.id}() on a traced value inside jitted "
+                        f"function {node.name!r} forces a host sync",
+                    )
+                )
+
+
+_CHECKS = (_check_env, _check_random, _check_time, _check_host_sync)
+
+
+def lint_file(path: str) -> List[LintFinding]:
+    rel = _rel(path)
+    with open(path, "r", encoding="utf-8") as fh:
+        source = fh.read()
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as exc:
+        return [LintFinding(rel, exc.lineno or 0, "PARSE", f"syntax error: {exc.msg}")]
+    out: List[LintFinding] = []
+    for check in _CHECKS:
+        check(tree, rel, out)
+    out.sort(key=lambda f: (f.path, f.line, f.code))
+    return out
+
+
+def _iter_py(paths: Iterable[str]) -> Iterable[str]:
+    for p in paths:
+        if os.path.isdir(p):
+            for dirpath, dirnames, filenames in os.walk(p):
+                dirnames[:] = [d for d in dirnames if d != "__pycache__"]
+                for fn in sorted(filenames):
+                    if fn.endswith(".py"):
+                        yield os.path.join(dirpath, fn)
+        elif p.endswith(".py"):
+            yield p
+
+
+def lint_paths(paths: Optional[Sequence[str]] = None) -> List[LintFinding]:
+    """Lint files/directories (default: the installed repro package)."""
+    if not paths:
+        paths = [DEFAULT_ROOT]
+    findings: List[LintFinding] = []
+    for path in _iter_py(paths):
+        findings.extend(lint_file(path))
+    return findings

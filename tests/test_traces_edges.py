@@ -1,0 +1,150 @@
+"""Edge cases of the JSONL preemption-trace layer (repro.runtime.traces).
+
+Complements tests/test_faults.py: exhaustive malformed-line rejection
+(every variant must name the file *and the exact line*), and the
+kill-mode fault-history round-trip — a churned run's recorded history
+must survive save_trace/load_trace field-for-field and replay to the
+same schedule.
+"""
+import os
+import tempfile
+
+import pytest
+
+from repro.configs.paper_machine import paper_machine
+from repro.core.simulator import Simulator
+from repro.linalg.cholesky import cholesky_graph
+from repro.runtime import FaultEvent, load_trace, save_trace
+from repro.sched import resolve
+
+GOOD = '{"t": 0.1, "event": "detach", "rid": 0, "mode": "drain"}'
+
+
+def _load_lines(*lines):
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "trace.jsonl")
+        with open(path, "w") as f:
+            f.write("\n".join(lines) + "\n")
+        try:
+            return load_trace(path), path
+        except ValueError as e:
+            # surface the tempdir-relative location for assertions
+            raise ValueError(str(e).replace(d + os.sep, "")) from None
+
+
+# ---------------------------------------------------------------------------
+# malformed lines: every variant names trace.jsonl:<lineno>
+
+
+@pytest.mark.parametrize(
+    "bad,needle",
+    [
+        ("{not json", "invalid JSON"),
+        ("[1, 2, 3]", "expected a JSON object, got list"),
+        ('"detach"', "expected a JSON object, got str"),
+        ('{"t": 1.0, "event": "detach", "rid": 0, "sev": 9}', "unknown trace field"),
+        ('{"event": "detach", "rid": 0}', "missing required field 't'"),
+        ('{"t": 1.0, "rid": 0}', "missing required field 'event'"),
+        ('{"t": 1.0, "event": "detach"}', "missing required field 'rid'"),
+        ('{"t": true, "event": "detach", "rid": 0}', "'t' must be a number"),
+        ('{"t": "1.0", "event": "detach", "rid": 0}', "'t' must be a number"),
+        ('{"t": 1.0, "event": "detach", "rid": true}', "'rid' must be an integer"),
+        ('{"t": 1.0, "event": "detach", "rid": 1.5}', "'rid' must be an integer"),
+        ('{"t": 1.0, "event": "melt", "rid": 0}', "fault event must be one of"),
+        ('{"t": 1.0, "event": "detach", "rid": 0, "mode": "panic"}',
+         "fault mode must be one of"),
+        ('{"t": -0.5, "event": "detach", "rid": 0}', "fault time must be >= 0"),
+        ('{"t": 1.0, "event": "detach", "rid": -1}', "fault rid must be >= 0"),
+    ],
+)
+def test_malformed_line_names_file_and_lineno(bad, needle):
+    # the bad line sits at line 3, after two valid lines and a comment —
+    # the error must carry *that* line number, not 1 or the total
+    with pytest.raises(ValueError) as exc:
+        _load_lines(GOOD, "# comment", bad, GOOD)
+    msg = str(exc.value)
+    assert "trace.jsonl:3" in msg, msg
+    assert needle in msg, msg
+
+
+def test_nan_time_rejected():
+    with pytest.raises(ValueError, match="trace.jsonl:1.*fault time"):
+        _load_lines('{"t": NaN, "event": "detach", "rid": 0}')
+
+
+def test_error_is_first_bad_line_only():
+    # fail-at-the-edge: parsing stops at line 2 even though line 3 is
+    # also malformed (no aggregation, no partial replay)
+    with pytest.raises(ValueError, match="trace.jsonl:2"):
+        _load_lines(GOOD, "junk", "more junk")
+
+
+# ---------------------------------------------------------------------------
+# kill-mode fault-history round-trip
+
+
+def _churned_sim(mode):
+    sim = Simulator(
+        cholesky_graph(6, 256, with_fns=False), paper_machine(4),
+        resolve("heft"), seed=7, noise=0.0, churn=200.0, fault_mode=mode,
+    )
+    res = sim.run()
+    assert sim.faults.history, "churn produced no events; raise the rate"
+    return sim, res
+
+
+@pytest.mark.parametrize("mode", ["drain", "kill"])
+def test_fault_history_roundtrips_field_for_field(mode):
+    sim, _res = _churned_sim(mode)
+    hist = sim.faults.history
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "hist.jsonl")
+        save_trace(hist, path)
+        back = load_trace(path)
+    assert len(back) == len(hist)
+    assert sorted(back, key=lambda e: (e.t, e.rid)) == sorted(
+        [FaultEvent(e.t, e.event, e.rid, e.mode) for e in hist],
+        key=lambda e: (e.t, e.rid),
+    )
+    if mode == "kill":
+        # the sampler tags detaches with the engine's kill mode; the
+        # round-trip must not drop or default the mode field
+        detaches = [e for e in back if e.event == "detach"]
+        assert detaches and all(e.mode == "kill" for e in detaches)
+
+
+def test_kill_history_replay_matches_programmatic_injection():
+    sim, _res = _churned_sim("kill")
+    hist = sim.faults.history
+
+    def _fp(res):
+        return (
+            res.makespan, res.total_bytes,
+            tuple((iv.tid, iv.rid, iv.start, iv.end) for iv in res.intervals),
+        )
+
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "hist.jsonl")
+        save_trace(hist, path)
+        replayed = Simulator(
+            cholesky_graph(6, 256, with_fns=False), paper_machine(4),
+            resolve("heft"), seed=7, noise=0.0, fault_trace=path,
+        ).run()
+    prog = Simulator(
+        cholesky_graph(6, 256, with_fns=False), paper_machine(4),
+        resolve("heft"), seed=7, noise=0.0,
+    )
+    for e in hist:
+        prog.inject(e.event, e.rid, at=e.t, mode=e.mode)
+    assert _fp(replayed) == _fp(prog.run())
+
+
+def test_save_trace_accepts_tuples():
+    evs = [(0.2, "detach", 1, "kill"), (0.5, "attach", 1)]
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "t.jsonl")
+        save_trace(evs, path)
+        back = load_trace(path)
+    assert back == [
+        FaultEvent(0.2, "detach", 1, "kill"), FaultEvent(0.5, "attach", 1)
+    ]

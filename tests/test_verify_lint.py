@@ -1,0 +1,194 @@
+"""The determinism/config lint (repro.verify.lint).
+
+Two directions: the shipped ``src/repro`` tree must be clean under every
+rule, and synthetic files seeded with each violation class must be
+flagged with the right code (and the documented allowlists must hold).
+"""
+import os
+import subprocess
+import sys
+import tempfile
+import textwrap
+
+from repro.verify import lint_paths
+from repro.verify.lint import lint_file
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src", "repro")
+
+
+def _lint_snippet(code, relpath="scratch/bad.py"):
+    """Lint ``code`` as if it lived at ``repro/<relpath>``."""
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "repro", *relpath.split("/"))
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        with open(path, "w") as f:
+            f.write(textwrap.dedent(code))
+        return lint_file(path)
+
+
+def _codes(findings):
+    return [f.code for f in findings]
+
+
+# ---------------------------------------------------------------------------
+# the repo itself is clean
+
+
+def test_src_repro_lints_clean():
+    findings = lint_paths([SRC])
+    assert findings == [], "\n".join(str(f) for f in findings)
+
+
+def test_module_cli_exits_zero_on_clean_tree():
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.verify", "lint", SRC],
+        capture_output=True, text=True,
+        env={**os.environ, "PYTHONPATH": os.path.join(SRC, "..")},
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_module_cli_exits_nonzero_on_findings():
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "bad.py")
+        with open(path, "w") as f:
+            f.write("import os\nX = os.environ['HOME']\n")
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro.verify", "lint", path],
+            capture_output=True, text=True,
+            env={**os.environ, "PYTHONPATH": os.path.join(SRC, "..")},
+        )
+    assert proc.returncode == 1
+    assert "ENV001" in proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# ENV001
+
+
+def test_env_access_flagged():
+    findings = _lint_snippet(
+        """
+        import os
+        A = os.environ.get("REPRO_X")
+        B = os.getenv("REPRO_Y")
+        """
+    )
+    assert _codes(findings) == ["ENV001", "ENV001"]
+    assert findings[0].line == 3
+
+
+def test_env_home_and_allowlist_exempt():
+    code = "import os\nX = os.environ.get('REPRO_X')\n"
+    assert _lint_snippet(code, "sched/config.py") == []
+    assert _lint_snippet(code, "launch/dryrun.py") == []
+    # the allowlist is exact paths, not whole directories
+    assert _codes(_lint_snippet(code, "launch/other.py")) == ["ENV001"]
+
+
+# ---------------------------------------------------------------------------
+# RND001
+
+
+def test_global_numpy_random_flagged():
+    findings = _lint_snippet(
+        """
+        import numpy as np
+        x = np.random.rand(3)
+        y = np.random.normal(0.0, 1.0)
+        rng = np.random.default_rng()
+        """
+    )
+    assert _codes(findings) == ["RND001", "RND001", "RND001"]
+
+
+def test_seeded_generator_clean():
+    findings = _lint_snippet(
+        """
+        import numpy as np
+        rng = np.random.default_rng(1234)
+        x = rng.normal(0.0, 1.0)
+        """
+    )
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# TIME001
+
+
+def test_wall_clock_reads_flagged():
+    findings = _lint_snippet(
+        """
+        import time
+        from datetime import datetime
+        t0 = time.time()
+        d = datetime.now()
+        u = datetime.utcnow()
+        """
+    )
+    assert _codes(findings) == ["TIME001", "TIME001", "TIME001"]
+
+
+def test_launch_tree_may_read_wall_clock():
+    code = "import time\nt0 = time.time()\n"
+    assert _lint_snippet(code, "launch/run.py") == []
+    # perf_counter is fine anywhere: it is not a wall-clock timestamp
+    assert _lint_snippet("import time\nt = time.perf_counter()\n") == []
+
+
+# ---------------------------------------------------------------------------
+# SYNC001
+
+
+def test_item_in_jitted_function_flagged():
+    findings = _lint_snippet(
+        """
+        import jax
+
+        @jax.jit
+        def step(x):
+            return x.sum().item()
+        """,
+        "core/backend.py",
+    )
+    assert _codes(findings) == ["SYNC001"]
+
+
+def test_float_on_traced_value_in_jit_wrapped_name_flagged():
+    findings = _lint_snippet(
+        """
+        import jax
+
+        def episode(x):
+            return float(x[0]) + float(1.0)
+
+        run = jax.jit(episode)
+        """,
+        "core/episode.py",
+    )
+    # float(x[0]) flagged; float(1.0) is a constant, not a sync
+    assert _codes(findings) == ["SYNC001"]
+
+
+def test_sync_rule_scoped_to_jitted_paths():
+    code = """
+        import jax
+
+        @jax.jit
+        def step(x):
+            return x.sum().item()
+        """
+    # same smell outside backend.py/episode.py: other files run eagerly
+    assert _lint_snippet(code, "core/other.py") == []
+
+
+def test_unjitted_host_sync_is_fine():
+    findings = _lint_snippet(
+        """
+        def summarize(arr):
+            return float(arr.sum()), arr.max().item()
+        """,
+        "core/backend.py",
+    )
+    assert findings == []

@@ -1,0 +1,239 @@
+"""Mutation testing of the schedule verifier.
+
+A verifier that never fires is worse than none. Each test here takes a
+known-good audit log from a real engine run, injects one class of
+corruption (hypothesis picks *which* record), and asserts the verifier
+flags it with the right invariant code. Together with
+tests/test_verify_schedule.py (clean runs verify clean) this pins both
+error directions.
+"""
+import copy
+from functools import lru_cache
+
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.configs.paper_machine import paper_machine
+from repro.core.simulator import Simulator
+from repro.linalg.cholesky import cholesky_graph
+from repro.sched import resolve
+from repro.verify import errors, verify_audit
+from repro.verify.schedule import derive_edges
+
+MB = 1024 * 1024
+
+
+@lru_cache(maxsize=None)
+def _base_log():
+    sim = Simulator(
+        cholesky_graph(8, 256, with_fns=False), paper_machine(4),
+        resolve("heft"), seed=0, noise=0.0, audit=True,
+    )
+    sim.run()
+    assert errors(verify_audit(sim.audit)) == []
+    return sim.audit
+
+
+def _mutant():
+    return copy.deepcopy(_base_log())
+
+
+def _codes(log):
+    return {f.code for f in errors(verify_audit(log))}
+
+
+def _pick(salt, seq):
+    assert seq, "no mutation candidates — base log too small"
+    return seq[salt % len(seq)]
+
+
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(min_value=0, max_value=10**6))
+@settings(max_examples=20, deadline=None)
+def test_shifted_start_breaks_precedence(salt):
+    log = _mutant()
+    preds = derive_edges(log.graphs[0]["tasks"])
+    exec_of = {r.tid: r for r in log.execs}
+    candidates = [
+        (r, exec_of[p].end)
+        for r in log.execs
+        for p in preds[r.tid]
+        if p in exec_of and exec_of[p].end > 1e-6
+    ]
+    rec, pred_end = _pick(salt, candidates)
+    # start the task well before its predecessor completed
+    rec.start = pred_end * 0.5 - 1e-3
+    assert "PRECEDENCE" in _codes(log)
+
+
+@given(st.integers(min_value=0, max_value=10**6))
+@settings(max_examples=20, deadline=None)
+def test_duplicate_exec_breaks_exactly_once(salt):
+    log = _mutant()
+    rec = _pick(salt, log.execs)
+    log.execs.append(copy.deepcopy(rec))
+    assert "EXACTLY_ONCE" in _codes(log)
+
+
+@given(st.integers(min_value=0, max_value=10**6))
+@settings(max_examples=20, deadline=None)
+def test_dropped_exec_breaks_exactly_once(salt):
+    log = _mutant()
+    del log.execs[salt % len(log.execs)]
+    assert "EXACTLY_ONCE" in _codes(log)
+
+
+@given(st.integers(min_value=0, max_value=10**6))
+@settings(max_examples=20, deadline=None)
+def test_shrunk_hop_bytes_break_conservation(salt):
+    log = _mutant()
+    candidates = [h for h in log.hops if h.nbytes > 1]
+    hop = _pick(salt, candidates)
+    hop.nbytes //= 2
+    assert "BYTES" in _codes(log)
+
+
+def test_inflated_claimed_total_bytes_breaks_conservation():
+    log = _mutant()
+    log.result["total_bytes"] += 12345
+    assert "BYTES" in _codes(log)
+
+
+def test_dropped_hop_breaks_transfer_count():
+    log = _mutant()
+    # keep the byte sum intact but lose one hop record: the n_transfers
+    # cross-check must still fire
+    assert len(log.hops) >= 2
+    victim = log.hops.pop()
+    log.hops[0].nbytes += victim.nbytes
+    assert "BYTES" in _codes(log)
+
+
+@given(st.integers(min_value=0, max_value=10**6))
+@settings(max_examples=20, deadline=None)
+def test_dropped_landing_breaks_data_arrival(salt):
+    log = _mutant()
+    host = log.machine["host_mem"]
+    tasks = log.graphs[0]["tasks"]
+    # a read served off-host with no write of that datum into the same
+    # memory before the read: removing every landing of (name, mem)
+    # leaves the read with no resident copy
+    writes_at = {
+        (n, r.mem)
+        for r in log.execs
+        for n, _s, m in tasks[r.tid]
+        if "w" in m
+    }
+    candidates = sorted(
+        {
+            (n, rec.mem)
+            for rec in log.execs
+            if rec.mem != host
+            for n, _s, m in tasks[rec.tid]
+            if m == "r" and (n, rec.mem) not in writes_at
+        }
+    )
+    name, mem = _pick(salt, candidates)
+    before = len(log.landings)
+    log.landings = [
+        ld for ld in log.landings if not (ld.name == name and ld.mem == mem)
+    ]
+    assert len(log.landings) < before
+    assert "DATA_ARRIVAL" in _codes(log)
+
+
+@given(st.integers(min_value=0, max_value=10**6))
+@settings(max_examples=20, deadline=None)
+def test_execution_in_dead_window_flagged(salt):
+    log = _mutant()
+    candidates = [r for r in log.execs if r.start > 1e-6]
+    rec = _pick(salt, candidates)
+    # fabricate a detach→attach window of rec's resource straddling its
+    # recorded start: drain lets in-flight work finish but never *starts*
+    # work on a dead resource, so this is illegal in either mode
+    log.log_fault(rec.start * 0.9, "detach", rec.rid, "drain")
+    log.log_fault(rec.end + 1.0, "attach", rec.rid, None)
+    assert "DEAD_WINDOW" in _codes(log)
+
+
+def test_capacity_overflow_flagged():
+    log = _mutant()
+    # the unbounded base run moved data freely; claiming a 1-byte device
+    # capacity after the fact must trip the high-water check
+    assert any(h.nbytes > 1 for h in log.hops)
+    log.machine["capacity"] = 1
+    assert "CAPACITY" in _codes(log)
+
+
+@given(st.floats(min_value=1.5, max_value=10.0))
+@settings(max_examples=20, deadline=None)
+def test_scaled_finish_breaks_makespan(factor):
+    log = _mutant()
+    log.result["per_graph"][0]["finish"] *= factor
+    assert "MAKESPAN" in _codes(log)
+
+
+# ---------------------------------------------------------------------------
+# surrogate logs: same mutation classes through the surrogate subset
+
+
+@lru_cache(maxsize=None)
+def _surrogate_log():
+    pytest.importorskip("jax")
+    import numpy as np
+
+    from repro.core import episode as ep
+
+    machine = paper_machine(4)
+    graph = cholesky_graph(6, 256, with_fns=False)
+    max_mem = max(r.mem for r in machine.resources if r.is_accelerator)
+    plan = ep.build_plan(graph, machine, n_u=max_mem + 2)
+    ig, vl, mc, lg = ep.machine_axes(machine, plan.n_res)
+    batch = ep.EpisodeBatch(
+        is_gpu=ig[None], valid_res=vl[None], mem_col=mc[None],
+        link_grp=lg[None], alpha=np.array([0.5]), use_cp=np.array([1.0]),
+        ws_pref=np.array([False]),
+        noise=ep.noise_factors(0, 0.0, plan.n, plan.n_pad)[None],
+        cap=np.array([np.inf]),
+    )
+    out = ep.run_episodes(plan, batch, emit_schedule=True)
+    (log,) = ep.episode_audit_logs(graph, batch, out)
+    assert errors(verify_audit(log)) == []
+    return log
+
+
+@given(st.integers(min_value=0, max_value=10**6))
+@settings(max_examples=20, deadline=None)
+def test_surrogate_precedence_mutation_flagged(salt):
+    log = copy.deepcopy(_surrogate_log())
+    preds = derive_edges(log.graphs[0]["tasks"])
+    exec_of = {r.tid: r for r in log.execs}
+    candidates = [
+        (r, exec_of[p].end)
+        for r in log.execs
+        for p in preds[r.tid]
+        if p in exec_of and exec_of[p].end > 1e-4
+    ]
+    rec, pred_end = _pick(salt, candidates)
+    rec.start = -1.0  # unambiguously before any predecessor in f32
+    assert "PRECEDENCE" in _codes(log)
+
+
+@given(st.integers(min_value=0, max_value=10**6))
+@settings(max_examples=20, deadline=None)
+def test_surrogate_dead_device_placement_flagged(salt):
+    log = copy.deepcopy(_surrogate_log())
+    rec = _pick(salt, log.execs)
+    for r in log.machine["resources"]:
+        if r["rid"] == rec.rid:
+            r["valid"] = False
+    assert "RESOURCE_VALID" in _codes(log)
+
+
+def test_surrogate_byte_mutation_flagged():
+    log = copy.deepcopy(_surrogate_log())
+    log.result["total_bytes"] *= 2.0
+    assert "BYTES" in _codes(log)

@@ -1,0 +1,240 @@
+"""Independent schedule verifier (repro.verify) against both engines.
+
+Every audited run of the exact engine — across strategies, capacity
+pressure, cancel-stale, multi-graph streaming and GPU churn — must
+verify with zero errors, the audit instrumentation must be a bit-level
+no-op on the schedule itself, and the JSONL round-trip must preserve
+the verdict. The surrogate engine's ``emit_schedule`` leg gets the same
+treatment through ``episode_audit_logs``.
+"""
+import os
+import tempfile
+
+import pytest
+
+from repro.configs.paper_machine import paper_machine
+from repro.core.simulator import Simulator
+from repro.linalg.cholesky import cholesky_graph
+from repro.sched import resolve
+from repro.verify import errors, verify_audit
+from repro.verify.audit import AuditLog
+
+MB = 1024 * 1024
+
+
+def _graph(nt=8):
+    return cholesky_graph(nt, 256, with_fns=False)
+
+
+def _fp(res):
+    return (
+        res.makespan,
+        res.total_bytes,
+        tuple((iv.tid, iv.rid, iv.start, iv.end) for iv in res.intervals),
+    )
+
+
+def _audited(spec="heft", nt=8, n=4, **kw):
+    sim = Simulator(
+        _graph(nt), paper_machine(n), resolve(spec), seed=0, noise=0.0,
+        audit=True, **kw,
+    )
+    sim.run()
+    return sim
+
+
+# ---------------------------------------------------------------------------
+# clean schedules verify clean
+
+
+@pytest.mark.parametrize("spec", ["heft", "dada?alpha=0.5&use_cp=1", "ws"])
+def test_exact_strategies_verify_clean(spec):
+    sim = _audited(spec)
+    findings = verify_audit(sim.audit)
+    assert errors(findings) == []
+
+
+@pytest.mark.parametrize(
+    "capacity,eviction",
+    [(64 * MB, "affinity"), (32 * MB, "lru")],
+)
+def test_capacity_bounded_verifies_clean(capacity, eviction):
+    sim = _audited(
+        "dada?alpha=0.5&use_cp=1", nt=10,
+        mem_capacity=capacity, eviction=eviction,
+    )
+    findings = verify_audit(sim.audit)
+    assert errors(findings) == []
+
+
+def test_cancel_stale_verifies_clean_with_no_stale_warnings():
+    sim = _audited("heft", cancel_stale=True)
+    findings = verify_audit(sim.audit)
+    assert errors(findings) == []
+    # cancel-stale on: stale reads are impossible, so even warnings vanish
+    assert not [f for f in findings if f.code == "STALE_READ"]
+
+
+@pytest.mark.parametrize("mode", ["drain", "kill"])
+def test_churned_runs_verify_clean(mode):
+    sim = _audited("heft", churn=150.0, fault_mode=mode)
+    assert sim.faults.history, "churn produced no events; raise the rate"
+    assert errors(verify_audit(sim.audit)) == []
+
+
+@pytest.mark.parametrize("mode", ["drain", "kill"])
+def test_scripted_faults_verify_clean(mode):
+    graph = _graph()
+    base = Simulator(
+        graph, paper_machine(4), resolve("heft"), seed=0, noise=0.0
+    ).run()
+    sim = Simulator(
+        graph, paper_machine(4), resolve("heft"), seed=0, noise=0.0,
+        audit=True,
+    )
+    gpus = [r.rid for r in sim.machine.gpus]
+    sim.inject("detach", gpus[0], at=base.makespan * 0.25, mode=mode)
+    sim.inject("detach", gpus[1], at=base.makespan * 0.4, mode=mode)
+    sim.inject("attach", gpus[0], at=base.makespan * 0.6)
+    sim.run()
+    assert errors(verify_audit(sim.audit)) == []
+
+
+def test_multi_graph_stream_verifies_clean():
+    from repro.runtime import Engine
+
+    eng = Engine(
+        paper_machine(4), resolve("dada?alpha=0.5&use_cp=1"), seed=0,
+        noise=0.0, audit=True,
+    )
+    for k in range(3):
+        eng.submit(_graph(6), at=None if k == 0 else 0.002 * k)
+    eng.run()
+    assert errors(verify_audit(eng.audit)) == []
+
+
+# ---------------------------------------------------------------------------
+# the audit log is observational: bit-identical schedules with it on/off
+
+
+def test_audit_off_is_bit_identical():
+    graph = _graph()
+    off = Simulator(
+        graph, paper_machine(4), resolve("heft"), seed=3, audit=False
+    )
+    on = Simulator(
+        graph, paper_machine(4), resolve("heft"), seed=3, audit=True
+    )
+    assert off.audit is None and on.audit is not None
+    assert _fp(off.run()) == _fp(on.run())
+
+
+def test_audit_defaults_off():
+    sim = Simulator(_graph(4), paper_machine(2), resolve("heft"), seed=0)
+    assert sim.audit is None
+
+
+# ---------------------------------------------------------------------------
+# JSONL round-trip
+
+
+def test_jsonl_roundtrip_preserves_verdict():
+    sim = _audited(
+        "dada?alpha=0.5&use_cp=1", mem_capacity=64 * MB, eviction="affinity",
+        churn=150.0, fault_mode="kill",
+    )
+    direct = verify_audit(sim.audit)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "audit.jsonl")
+        sim.audit.to_jsonl(path)
+        back = AuditLog.from_jsonl(path)
+    assert back.engine == "exact"
+    assert len(back.execs) == len(sim.audit.execs)
+    assert len(back.hops) == len(sim.audit.hops)
+    replayed = verify_audit(back)
+    assert [(f.code, f.severity) for f in replayed] == [
+        (f.code, f.severity) for f in direct
+    ]
+    assert errors(replayed) == []
+
+
+def test_jsonl_rejects_schema_drift():
+    sim = _audited(nt=4, n=2)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "audit.jsonl")
+        sim.audit.to_jsonl(path)
+        lines = open(path).read().splitlines()
+        bad = lines[0].replace('"schema": 1', '"schema": 99')
+        with open(path, "w") as f:
+            f.write("\n".join([bad] + lines[1:]))
+        with pytest.raises(ValueError, match="audit.jsonl:1"):
+            AuditLog.from_jsonl(path)
+
+
+# ---------------------------------------------------------------------------
+# run_simulation integration: REPRO_SCHED_AUDIT wires verification in
+
+
+def test_run_simulation_verifies_under_audit_config():
+    from repro.core import run_simulation
+    from repro.sched.config import SchedConfig
+
+    res = run_simulation(
+        _graph(6), paper_machine(4), resolve("heft"), seed=0,
+        config=SchedConfig(audit=True),
+    )
+    assert res.makespan > 0
+
+
+# ---------------------------------------------------------------------------
+# surrogate engine (emit_schedule leg)
+
+
+def _surrogate_out(specs, emit):
+    import numpy as np
+
+    from repro.core import episode as ep
+
+    machine = paper_machine(4)
+    graph = _graph(6)
+    max_mem = max(r.mem for r in machine.resources if r.is_accelerator)
+    plan = ep.build_plan(graph, machine, n_u=max_mem + 2)
+    ig, vl, mc, lg = ep.machine_axes(machine, plan.n_res)
+    params = [ep.surrogate_params(s) for s in specs]
+    B = len(specs)
+    batch = ep.EpisodeBatch(
+        is_gpu=np.stack([ig] * B), valid_res=np.stack([vl] * B),
+        mem_col=np.stack([mc] * B), link_grp=np.stack([lg] * B),
+        alpha=np.array([p[0] for p in params]),
+        use_cp=np.array([p[1] for p in params]),
+        ws_pref=np.array([p[2] for p in params], dtype=bool),
+        noise=np.stack([ep.noise_factors(0, 0.0, plan.n, plan.n_pad)] * B),
+        cap=np.full(B, np.inf),
+    )
+    return graph, batch, ep.run_episodes(plan, batch, emit_schedule=emit)
+
+
+def test_surrogate_schedules_verify_clean():
+    pytest.importorskip("jax")
+    from repro.core import episode as ep
+
+    specs = ("heft", "dada?alpha=0.5&use_cp=1", "ws")
+    graph, batch, out = _surrogate_out(specs, emit=True)
+    logs = ep.episode_audit_logs(graph, batch, out)
+    assert len(logs) == len(specs)
+    for spec, log in zip(specs, logs):
+        assert log.engine == "surrogate"
+        assert errors(verify_audit(log)) == [], spec
+
+
+def test_emit_schedule_does_not_perturb_results():
+    pytest.importorskip("jax")
+    specs = ("heft", "ws")
+    _, _, plain = _surrogate_out(specs, emit=False)
+    _, _, emitted = _surrogate_out(specs, emit=True)
+    assert "schedule" not in plain and "schedule" in emitted
+    import numpy as np
+
+    np.testing.assert_array_equal(plain["makespan"], emitted["makespan"])
+    np.testing.assert_array_equal(plain["total_bytes"], emitted["total_bytes"])
+    np.testing.assert_array_equal(plain["n_placed"], emitted["n_placed"])
