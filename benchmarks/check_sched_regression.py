@@ -59,7 +59,7 @@ BASELINE = RESULTS / "BENCH_sched_baseline.json"
 
 KEY_FIELDS = (
     "kernel", "strategy", "backend", "nt", "n_gpus", "capacity",
-    "churn", "fault_mode", "exact", "audit",
+    "churn", "fault_mode", "flake", "notice", "exact", "audit",
 )
 
 # hard bound on the measured slowdown of REPRO_SCHED_AUDIT=1 over the
@@ -73,10 +73,13 @@ def _rows_by_key(section: dict) -> dict:
     out = {}
     for row in section.get("whole_sim", []):
         # rows recorded before the surrogate engine existed are exact;
-        # rows recorded before the audit log existed are unaudited
+        # rows recorded before the audit log existed are unaudited; rows
+        # recorded before flaky links / preemption notices existed ran
+        # with both off
         key = tuple(
             row.get(f, True) if f == "exact" else
-            row.get(f, False) if f == "audit" else row.get(f)
+            row.get(f, False) if f == "audit" else
+            row.get(f, 0.0) if f in ("flake", "notice") else row.get(f)
             for f in KEY_FIELDS
         )
         out[key] = row

@@ -14,6 +14,9 @@ cost along two axes:
     interleaving on one ``repro.runtime.Engine``, with per-graph
     makespans), and a **churned** row family (seeded GPU detach/attach at
     ``CHURN_RATE`` under both recovery modes — the fault-handling path),
+    a **recovery** row family (flaky links at ``FLAKE_RATE`` — the
+    retry/backoff/re-source path — and churn with ``NOTICE_S`` preemption
+    notices — grace windows and proactive replication),
     an **audited** row family (``audit=True``: the schedule-verifier's
     audit log live, with the measured ``audit_overhead`` ratio over the
     paired uninstrumented pass — gated by ``AUDIT_OVERHEAD_LIMIT``),
@@ -168,7 +171,8 @@ def whole_sim_rows(nts, n_gpus: int, n_runs: int, backends) -> list:
                     row = dict(
                         kernel=kernel, strategy=label, backend=backend,
                         nt=nt, n_gpus=n_gpus, runs=n_runs, capacity=capacity,
-                        churn=0.0, fault_mode="drain", exact=True,
+                        churn=0.0, fault_mode="drain", flake=0.0, notice=0.0,
+                        exact=True,
                         wall_s=round(dt, 4), events=events,
                         events_per_s=round(events / dt, 1) if dt > 0 else 0.0,
                         tasks_per_s=round(tasks / dt, 1) if dt > 0 else 0.0,
@@ -228,7 +232,7 @@ def streaming_rows(nt: int, n_gpus: int, n_runs: int, n_graphs: int = 4) -> list
     row = dict(
         kernel=f"cholesky-x{n_graphs}stream", strategy="dada(a)+cp",
         backend="numpy", nt=nt, n_gpus=n_gpus, runs=n_runs, capacity=0,
-        churn=0.0, fault_mode="drain", exact=True,
+        churn=0.0, fault_mode="drain", flake=0.0, notice=0.0, exact=True,
         n_graphs=n_graphs, wall_s=round(dt, 4), events=events,
         events_per_s=round(events / dt, 1) if dt > 0 else 0.0,
         tasks_per_s=round(tasks / dt, 1) if dt > 0 else 0.0,
@@ -286,7 +290,8 @@ def churn_rows(nt: int, n_gpus: int, n_runs: int) -> list:
             row = dict(
                 kernel="cholesky", strategy=label, backend="numpy",
                 nt=nt, n_gpus=n_gpus, runs=n_runs, capacity=0,
-                churn=CHURN_RATE, fault_mode=mode, exact=True,
+                churn=CHURN_RATE, fault_mode=mode, flake=0.0, notice=0.0,
+                exact=True,
                 wall_s=round(dt, 4), events=events,
                 events_per_s=round(events / dt, 1) if dt > 0 else 0.0,
                 tasks_per_s=round(tasks / dt, 1) if dt > 0 else 0.0,
@@ -298,6 +303,80 @@ def churn_rows(nt: int, n_gpus: int, n_runs: int) -> list:
                 f"numpy/churn{CHURN_RATE:g}-{mode},{dt / n_runs * 1e6:.1f},"
                 f"events_per_s={row['events_per_s']};"
                 f"n_detaches={row['n_detaches']}"
+            )
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# proactive-recovery (flaky links / preemption notices) throughput
+
+
+# per-hop failure probability for the flake row: high enough that the
+# retry/backoff/re-source path dominates the transfer machinery without
+# starving the scheduler of real placement work
+FLAKE_RATE = 0.2
+# notice window for the noticed-churn row: about one task length, so the
+# grace-window and proactive-replication paths both stay hot
+NOTICE_S = 0.004
+RECOVERY_STRATEGIES = ("heft", "dada(a)+cp")
+
+
+def recovery_rows(nt: int, n_gpus: int, n_runs: int) -> list:
+    """Events/sec with the proactive-recovery machinery live — a flaky-
+    link family (seeded per-hop failures, retry with backoff, re-source
+    on timeout) and a noticed-churn family (preemption notices ahead of
+    each detach: grace windows, proactive replication, the decaying
+    pressure penalty) — regression-gating those paths the way the churn
+    rows gate blind detach/attach handling. Scoring stays on numpy: the
+    fused path disengages while a notice is pending."""
+    machine = machine_for(n_gpus)
+    gfac = graphs_for(nt)["cholesky"]
+    graphs = [gfac() for _ in range(n_runs)]
+    strats = strategies("numpy")
+    rows = []
+    for family, kwargs in (
+        ("flake", dict(link_flake=FLAKE_RATE)),
+        ("notice", dict(churn=CHURN_RATE, fault_mode="drain",
+                        notice_s=NOTICE_S)),
+    ):
+        for label in RECOVERY_STRATEGIES:
+            sfac = strats[label]
+            dt = float("inf")
+            faults = None
+            for _rep in range(2):
+                events = tasks = 0
+                t0 = time.perf_counter()
+                for i, g in enumerate(graphs):
+                    sim = Simulator(
+                        g, machine, sfac(), seed=1234 + i, **kwargs
+                    )
+                    res = sim.run()
+                    events += res.n_events
+                    tasks += len(g)
+                    faults = res.faults
+                dt = min(dt, time.perf_counter() - t0)
+            row = dict(
+                kernel="cholesky", strategy=label, backend="numpy",
+                nt=nt, n_gpus=n_gpus, runs=n_runs, capacity=0,
+                churn=kwargs.get("churn", 0.0),
+                fault_mode=kwargs.get("fault_mode", "drain"),
+                flake=kwargs.get("link_flake", 0.0),
+                notice=kwargs.get("notice_s", 0.0),
+                exact=True,
+                wall_s=round(dt, 4), events=events,
+                events_per_s=round(events / dt, 1) if dt > 0 else 0.0,
+                tasks_per_s=round(tasks / dt, 1) if dt > 0 else 0.0,
+            )
+            derived = (
+                f"n_retries={faults['n_retries']}"
+                if family == "flake"
+                else f"n_notices={faults['n_notices']}"
+            ) if faults else ""
+            rows.append(row)
+            print(
+                f"sched_overhead/cholesky/{label}/gpus{n_gpus}/nt{nt}/"
+                f"numpy/{family},{dt / n_runs * 1e6:.1f},"
+                f"events_per_s={row['events_per_s']};{derived}"
             )
     return rows
 
@@ -348,7 +427,8 @@ def audit_rows(nt: int, n_gpus: int, n_runs: int) -> list:
         row = dict(
             kernel="cholesky", strategy=label, backend="numpy",
             nt=nt, n_gpus=n_gpus, runs=n_runs, capacity=0,
-            churn=0.0, fault_mode="drain", exact=True, audit=True,
+            churn=0.0, fault_mode="drain", flake=0.0, notice=0.0,
+            exact=True, audit=True,
             wall_s=round(dt, 4), events=events,
             events_per_s=round(events / dt, 1) if dt > 0 else 0.0,
             tasks_per_s=round(tasks / dt, 1) if dt > 0 else 0.0,
@@ -422,7 +502,8 @@ def batched_sweep_rows(nt: int, n_gpus: int, n_runs: int) -> list:
         row = dict(
             kernel=kernel, strategy="sweep-mix", backend="jax",
             nt=nt, n_gpus=n_gpus, runs=n_runs, capacity=0,
-            churn=0.0, fault_mode="drain", exact=False,
+            churn=0.0, fault_mode="drain", flake=0.0, notice=0.0,
+            exact=False,
             batch=batch, n_configs=n_cfg,
             wall_s=round(dt, 4), events=0, events_per_s=0.0,
             tasks_per_s=round(n_cfg * len(graph) / dt, 1) if dt > 0 else 0.0,
@@ -595,6 +676,7 @@ def main() -> list:
     if nts:  # REPRO_BENCH_NT="" is a valid empty sweep
         rows += streaming_rows(nts[0], n_gpus, n_runs)
         rows += churn_rows(nts[0], n_gpus, n_runs)
+        rows += recovery_rows(nts[0], n_gpus, n_runs)
         rows += audit_rows(nts[0], n_gpus, n_runs)
         if "jax" in backends:
             rows += batched_sweep_rows(nts[0], n_gpus, n_runs)

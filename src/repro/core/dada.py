@@ -51,6 +51,7 @@ class DADA(ScoringBackendMixin, Strategy):
         eps_rel: float = 0.01,
         max_iters: int = 30,
         area_bound: bool = False,
+        recover: bool = False,
         backend: Optional[str] = None,
         config=None,
     ) -> None:
@@ -60,6 +61,16 @@ class DADA(ScoringBackendMixin, Strategy):
         optimum instead of descending to OPT/(2+α). Off by default (the
         paper's Algorithm 2 rejects only on the big-task criterion); the
         expert-placement bridge turns it on.
+
+        ``recover``: notice-aware placement (``resolve("dada?recover=1")``).
+        A preemption-noticed resource (detach announced, not yet fired —
+        see ``repro.runtime.faults``) has its cost column charged the
+        remaining notice window and is skipped by the affinity phase, so
+        new work and fresh affinity steer off a condemned device *before*
+        it dies instead of being requeued off it afterwards. Off by
+        default; with no pending notice the recover path is untouched, so
+        ``recover=True`` is bit-identical to ``recover=False`` outside
+        notice windows.
 
         ``backend``: placement-scoring backend (``numpy``/``jax``); default
         follows the scheduling configuration (``config`` or the
@@ -76,9 +87,11 @@ class DADA(ScoringBackendMixin, Strategy):
         self.eps_rel = eps_rel
         self.max_iters = max_iters
         self.area_bound = area_bound
+        self.recover = recover
         self._init_backend(backend, config)
         cp = "+cp" if use_cp else ""
-        self.name = f"dada({alpha:g}){cp}"
+        rec = "+rec" if recover else ""
+        self.name = f"dada({alpha:g}){cp}{rec}"
 
     # ------------------------------------------------------------------
     def place(self, sim: Simulator, ready: List[Task], src: Optional[int]) -> None:
@@ -126,13 +139,28 @@ class DADA(ScoringBackendMixin, Strategy):
             else frozenset()
         )
 
+        # notice-aware recovery (recover=True only): a condemned column
+        # pays the remaining notice window, by resource position — the
+        # same finite decaying signal pressure_rows_for feeds score-matrix
+        # policies, folded into C below so every phase of the λ search
+        # steers off a dying device. Empty whenever no notice is pending,
+        # keeping recover=True bit-identical outside notice windows.
+        noticed_pen: Dict[int, float] = {}
+        if self.recover and faults is not None and faults.noticed:
+            for j, r in enumerate(resources):
+                pending = faults.noticed.get(r.rid)
+                if pending is not None:
+                    p = pending[1] - sim.now
+                    if p > 0.0:
+                        noticed_pen[j] = p
+
         # accelerated fused scoring (wide activations, jax backend): C, X
         # and the affinity matrix come out of one jitted dispatch, bit-equal
-        # to the numpy formulas below (skipped under active faults — the
-        # backend kernels do not model liveness)
+        # to the numpy formulas below (skipped under active faults or
+        # pending notices — the backend kernels do not model liveness)
         be = self._scoring_backend()
         fused = None
-        if be is not None and n >= be.min_wide and not dead:
+        if be is not None and n >= be.min_wide and not dead and not noticed_pen:
             fused = be.score_matrices(
                 sim, tids, resources,
                 p_cpu=p_cpu, p_gpu=p_gpu,
@@ -172,6 +200,12 @@ class DADA(ScoringBackendMixin, Strategy):
                     for j in gpu_pos:
                         row[j] = pg + xrow[j]
                     C_rows.append(row)
+        if noticed_pen:
+            # condemned columns pay the remaining notice window (the fused
+            # path is disabled above, so C_rows is always the list form)
+            for row in C_rows:
+                for j, p in noticed_pen.items():
+                    row[j] += p
         offsets = [
             lt - sim.now if lt - sim.now > 0.0 else 0.0
             for lt in (sim.load_ts[r.rid] for r in resources)
@@ -229,6 +263,10 @@ class DADA(ScoringBackendMixin, Strategy):
                     for rid in range(n_res):
                         if rid in dead:
                             continue  # affinity to a vanished memory is void
+                        if rid in noticed_pen:
+                            # affinity to a condemned memory is a trap:
+                            # the data is leaving with the device
+                            continue
                         s = row[rid]
                         if s > best_score + _TINY:
                             best_score, best_rid = s, rid
@@ -403,6 +441,10 @@ class DADA(ScoringBackendMixin, Strategy):
             + worst_xfer
             + _TINY
         )
+        if noticed_pen:
+            # the notice penalties inflate C, so the feasibility anchor
+            # must cover them too (λ=upper stays provably feasible)
+            upper += n * max(noticed_pen.values())
         lower = 0.0
         kept: Optional[Tuple[Dict[int, int], List[float]]] = None
         searched = False

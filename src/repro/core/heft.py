@@ -91,11 +91,15 @@ class HEFT(ScoringBackendMixin, Strategy):
         P = pressure_rows_for(sim, tids, resources)
 
         # under active faults the scalar path runs (dead columns carry
-        # +inf, which the fused backend's kernels do not model); with no
-        # resource detached the fused path is untouched, preserving
-        # cross-backend equivalence
+        # +inf, which the fused backend's kernels do not model — and a
+        # pending preemption notice adds a time-varying finite penalty
+        # the kernels do not model either); with no resource detached or
+        # noticed the fused path is untouched, preserving cross-backend
+        # equivalence
         faults = getattr(sim, "faults", None)
-        any_dead = faults is not None and faults.any_dead
+        any_dead = faults is not None and (
+            faults.any_dead or bool(faults.noticed)
+        )
 
         # accelerated path (wide activations, jax backend): fused transfer
         # matrix + jitted sequential EFT scan, bit-identical placements

@@ -49,6 +49,10 @@ class Simulator(Engine):
         churn: Optional[float] = None,
         fault_mode: Optional[str] = None,
         fault_trace: Optional[str] = None,
+        notice_s: Optional[float] = None,
+        link_flake: Optional[float] = None,
+        retry_max: Optional[int] = None,
+        backoff_s: Optional[float] = None,
         audit: Optional[bool] = None,
     ) -> None:
         super().__init__(
@@ -64,6 +68,10 @@ class Simulator(Engine):
             churn=churn,
             fault_mode=fault_mode,
             fault_trace=fault_trace,
+            notice_s=notice_s,
+            link_flake=link_flake,
+            retry_max=retry_max,
+            backoff_s=backoff_s,
             audit=audit,
         )
         self._primary: GraphContext = self.submit(graph)
@@ -96,5 +104,9 @@ class Simulator(Engine):
             strategy=self.strategy.name,
             total_flops=self._primary.graph.total_flops(),
             n_events=m.n_events,
-            faults=m.fault_summary() if self._faults_on else None,
+            faults=(
+                m.fault_summary()
+                if (self._faults_on or self._flake_on)
+                else None
+            ),
         )

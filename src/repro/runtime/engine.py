@@ -144,6 +144,10 @@ class Engine:
         churn: Optional[float] = None,
         fault_mode: Optional[str] = None,
         fault_trace: Optional[str] = None,
+        notice_s: Optional[float] = None,
+        link_flake: Optional[float] = None,
+        retry_max: Optional[int] = None,
+        backoff_s: Optional[float] = None,
         audit: Optional[bool] = None,
     ) -> None:
         self.machine = machine
@@ -202,15 +206,37 @@ class Engine:
         self.faults = FaultManager(machine, mode=fault_mode)
         self.transfers.faults = self.faults
         self._faults_on = False
+        # preemption-notice window: detaches are announced this many
+        # simulated seconds in advance (0 = no warning, the default)
+        if notice_s is None:
+            notice_s = cfg.notice_s
+        self._notice_s = float(notice_s)
         if churn is None:
             churn = cfg.churn
         if churn:
-            self.faults.enable_churn(churn, seed=seed, mode=fault_mode)
+            self.faults.enable_churn(
+                churn, seed=seed, mode=fault_mode, notice_s=self._notice_s
+            )
             self._faults_on = True
         if fault_trace is None:
             fault_trace = cfg.fault_trace
         if fault_trace:
             self.replay_trace(fault_trace)
+
+        # transient link faults: seeded per-hop failure rate with capped
+        # exponential retry backoff (repro.runtime.transfers). Zero-flake
+        # engines never touch the flake stream — bit-for-bit identical.
+        if link_flake is None:
+            link_flake = cfg.link_flake
+        if retry_max is None:
+            retry_max = cfg.retry_max
+        if backoff_s is None:
+            backoff_s = cfg.backoff_s
+        self._flake_on = float(link_flake) > 0.0
+        if self._flake_on:
+            self.transfers.enable_flake(
+                float(link_flake), int(retry_max), float(backoff_s), seed
+            )
 
         # opt-in structured audit log (repro.verify): placements, hops,
         # landing decisions, evictions and fault windows recorded for the
@@ -360,14 +386,20 @@ class Engine:
         rid: int,
         at: Optional[float] = None,
         mode: Optional[str] = None,
+        notice_s: Optional[float] = None,
     ) -> None:
         """Schedule a ``"detach"``/``"attach"`` fault for resource ``rid``.
 
         ``at`` is simulated time (default: now; past times clamp to now —
         simulated time never rewinds). ``mode`` selects the recovery mode
         for a detach (``"drain"``/``"kill"``; default: the engine's
-        ``fault_mode``). The fault fires as an event inside the run loop,
-        interleaving deterministically with transfers and completions.
+        ``fault_mode``). ``notice_s`` (detach only; default: the engine's
+        ``notice_s``) announces the death that many seconds in advance: a
+        ``"notice"`` event fires at ``max(now, at - notice_s)``, opening
+        the proactive-recovery window (no new work on the rid, sole-copy
+        replication, finite pressure penalty). The fault fires as an
+        event inside the run loop, interleaving deterministically with
+        transfers and completions.
         """
         if event not in FAULT_EVENTS:
             raise ValueError(
@@ -377,10 +409,27 @@ class Engine:
             raise ValueError(
                 f"fault mode must be one of {FAULT_MODES}, got {mode!r}"
             )
+        if notice_s is not None:
+            if event != "detach":
+                raise ValueError(
+                    "notice_s only applies to detach events, got "
+                    f"event={event!r}"
+                )
+            if not (float(notice_s) >= 0.0):
+                raise ValueError(f"notice_s must be >= 0, got {notice_s!r}")
         self.faults._check_rid(rid)
         at = self.now if at is None else max(float(at), self.now)
         self.faults.active = True
         self._faults_on = True
+        if event == "detach":
+            ns = float(notice_s) if notice_s is not None else self._notice_s
+            if ns > 0.0:
+                t_n = max(self.now, at - ns)
+                if t_n < at:
+                    # the mode slot carries (mode, scheduled death time)
+                    self.events.post(
+                        t_n, "fault", ("notice", int(rid), (mode, at))
+                    )
         self.events.post(at, "fault", (event, int(rid), mode))
 
     def replay_trace(self, trace) -> None:
@@ -389,7 +438,10 @@ class Engine:
         :class:`~repro.runtime.traces.FaultEvent`."""
         events = load_trace(trace) if isinstance(trace, str) else trace
         for ev in events:
-            self.inject(ev.event, ev.rid, at=ev.t, mode=ev.mode)
+            self.inject(
+                ev.event, ev.rid, at=ev.t, mode=ev.mode,
+                notice_s=ev.notice_s,
+            )
 
     # ------------------------------------------------------------------
     # queue operations (pop / push / steal)
@@ -431,8 +483,11 @@ class Engine:
             progress = False
             for w in self.workers:
                 if w.running is None and not w.queue:
-                    if faults_on and not self.faults.alive[w.rid]:
-                        continue  # dead workers do not steal
+                    if faults_on and (
+                        not self.faults.alive[w.rid]
+                        or w.rid in self.faults.noticed
+                    ):
+                        continue  # dead/condemned workers do not steal
                     if self._steal(w):
                         self._try_start(w)
                         progress = True
@@ -450,8 +505,14 @@ class Engine:
         if w.running is not None or not w.queue:
             return
         rid = w.rid
-        if self._faults_on and not self.faults.alive[rid]:
-            return  # the engine never dispatches to a detached device
+        if self._faults_on and (
+            not self.faults.alive[rid] or rid in self.faults.noticed
+        ):
+            # the engine never dispatches to a detached device, and a
+            # noticed (condemned) worker starts no new work inside its
+            # grace window — the running task drains, queued tasks are
+            # re-activated on the survivors at death
+            return
         task = w.queue[-1] if self._lifo else w.queue[0]
         ctx = self._ctx_of[id(task)]
         # make sure inputs are (going to be) resident
@@ -768,7 +829,9 @@ class Engine:
             total_flops=ctx.graph.total_flops(),
             n_events=self.metrics.n_events,
             faults=(
-                self.metrics.fault_summary() if self._faults_on else None
+                self.metrics.fault_summary()
+                if (self._faults_on or self._flake_on)
+                else None
             ),
         )
 

@@ -51,7 +51,7 @@ start work nor steal. Observers subscribed via :meth:`FaultManager.subscribe`
 """
 from __future__ import annotations
 
-from typing import Callable, List, Optional
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -90,7 +90,13 @@ class FaultManager:
         self.mem_epoch: dict = {}
         self.active = False
         self.history: List[FaultEvent] = []
+        # preemption notices: rid -> (t_notice, death_at). A noticed
+        # worker is still alive (its running task drains) but the engine
+        # starts no new work on it and policies see a finite decaying
+        # pressure penalty on its column (pressure_rows_for).
+        self.noticed: Dict[int, Tuple[float, float]] = {}
         self.churn_rate = 0.0
+        self.churn_notice_s = 0.0
         self.churn_mode = mode
         self._rng: Optional[np.random.Generator] = None
         self._accel_rids = [r.rid for r in machine.resources if r.is_accelerator]
@@ -126,14 +132,23 @@ class FaultManager:
         self.any_dead = bool(self.dead_rids)
 
     # ------------------------------------------------------------------
-    def enable_churn(self, rate: float, seed: int, mode: Optional[str] = None) -> None:
+    def enable_churn(
+        self,
+        rate: float,
+        seed: int,
+        mode: Optional[str] = None,
+        notice_s: float = 0.0,
+    ) -> None:
         if rate < 0:
             raise ValueError(f"churn rate must be >= 0, got {rate}")
+        if notice_s < 0:
+            raise ValueError(f"notice_s must be >= 0, got {notice_s}")
         if mode is not None and mode not in FAULT_MODES:
             raise ValueError(
                 f"unknown fault mode {mode!r} (choose from {FAULT_MODES})"
             )
         self.churn_rate = float(rate)
+        self.churn_notice_s = float(notice_s)
         self.churn_mode = mode or self.default_mode
         self._rng = np.random.default_rng((int(seed) & 0xFFFFFFFF, _CHURN_STREAM))
         if rate > 0:
@@ -154,17 +169,33 @@ class FaultManager:
         if all(ctx.n_done >= ctx.n_tasks for ctx in engine._ctxs):
             return
         rng = self._rng
-        alive_g = [r for r in self._accel_rids if self.alive[r]]
+        # a noticed worker is already condemned: it is excluded from the
+        # detach pool (no double-notice) and counted as gone for the
+        # last-worker guard, so a delayed churn death can never strand
+        # the machine with zero alive workers
+        alive_g = [
+            r for r in self._accel_rids
+            if self.alive[r] and r not in self.noticed
+        ]
         dead_g = [r for r in self._accel_rids if not self.alive[r]]
         # never detach the last alive worker; only accelerators churn
         # (CPUs are the stable host pool, the spot-instance setup)
-        can_detach = bool(alive_g) and self.n_alive > 1
+        can_detach = bool(alive_g) and self.n_alive - len(self.noticed) > 1
         if dead_g and (not can_detach or rng.random() < 0.5):
             self.attach(engine, dead_g[int(rng.integers(len(dead_g)))])
         elif can_detach:
-            self.detach(
-                engine, alive_g[int(rng.integers(len(alive_g)))], self.churn_mode
-            )
+            rid = alive_g[int(rng.integers(len(alive_g)))]
+            ns = self.churn_notice_s
+            if ns > 0:
+                # spot-style advance warning: the notice lands now, the
+                # death is posted ns seconds out
+                death_at = engine.now + ns
+                self.notice(engine, rid, death_at, self.churn_mode)
+                engine.events.post(
+                    death_at, "fault", ("detach", rid, self.churn_mode)
+                )
+            else:
+                self.detach(engine, rid, self.churn_mode)
         self._post_tick(engine)
 
     # ------------------------------------------------------------------
@@ -176,8 +207,103 @@ class FaultManager:
             self.detach(engine, rid, mode)
         elif action == "attach":
             self.attach(engine, rid)
-        else:  # pragma: no cover - engine only posts the three above
+        elif action == "notice":
+            # the mode slot carries (recovery mode, scheduled death time)
+            m, death_at = mode
+            self.notice(engine, rid, death_at, m)
+        else:  # pragma: no cover - engine only posts the four above
             raise ValueError(f"unknown fault action {action!r}")
+
+    # ------------------------------------------------------------------
+    def notice(
+        self, engine, rid: int, death_at: float, mode: Optional[str] = None
+    ) -> None:
+        """Deliver an advance warning: ``rid`` will detach at ``death_at``.
+
+        The worker stays alive (its running task drains) but the engine
+        starts no new work on it, and if its memory dies with it every
+        sole-copy datum is proactively replicated to host *now* — ranked
+        most-pending-readers first, the same affinity signal eviction
+        uses — instead of on the critical recovery path at death.
+        Idempotent per window: a second notice for a pending death is a
+        no-op.
+        """
+        self._check_rid(rid)
+        if not self.alive[rid] or rid in self.noticed:
+            return
+        now = engine.now
+        self.noticed[rid] = (now, float(death_at))
+        engine.metrics.n_notices += 1
+        if engine.audit is not None:
+            engine.audit.log_notice(
+                now, rid, mode or self.default_mode, float(death_at)
+            )
+        # proactive replication only helps when the memory dies with the
+        # worker (same sharing test the detach salvage uses; co-noticed
+        # sharers are condemned too, so they do not count as survivors)
+        mem = engine._mem_of[rid]
+        shared = any(
+            self.alive[r.rid] and r.rid not in self.noticed
+            for r in self.machine.resources
+            if r.mem == mem and r.rid != rid
+        )
+        if mem != HOST_MEM and not shared:
+            self._replicate(engine, mem)
+        self._notify(engine, "notice", rid, mode)
+
+    def _pending_readers(self, ctx, dids: Sequence[int]) -> Dict[int, int]:
+        """Pending-reader counts for ``dids`` (the affinity signal).
+
+        Capacity-bounded runs maintain ``ctx.readers_left`` incrementally;
+        unbounded runs compute it here by scanning the not-yet-done tasks
+        (notices are rare — this is off every hot path).
+        """
+        if ctx.readers_left:
+            return {d: ctx.readers_left[d] for d in dids}
+        want = set(dids)
+        counts = {d: 0 for d in dids}
+        done = ctx.done
+        task_reads = ctx.arrays.task_reads
+        for t in ctx.graph.tasks:
+            if done[t.tid]:
+                continue
+            for did, _, _ in task_reads[t.tid]:
+                if did in want:
+                    counts[did] += 1
+        return counts
+
+    def _replicate(self, engine, mem: int) -> None:
+        """Replicate every sole-copy datum on ``mem`` to host, most
+        pending readers first (inside the notice window, before death)."""
+        bit = 1 << (mem + 1)
+        metrics = engine.metrics
+        transfers = engine.transfers
+        group = transfers.mem_link.get(mem)
+        now = engine.now
+        audit = engine.audit
+        for ctx in engine._ctxs:
+            residency = ctx.residency
+            mask_list = residency.mask_list
+            names = ctx.arrays.data_names
+            sizes = residency._sizes
+            sole = [
+                did for did in range(len(names)) if mask_list[did] == bit
+            ]
+            if not sole:
+                continue
+            readers = self._pending_readers(ctx, sole)
+            sole.sort(key=lambda d: (-readers[d], d))
+            for did in sole:
+                # same pricing (and the same immediate host-copy validity
+                # simplification) as the write-back/evacuation path
+                transfers.one_hop(sizes[did], group, now, kind="proactive")
+                residency.add_copy(names[did], HOST_MEM)
+                metrics.n_proactive += 1
+                metrics.proactive_bytes += sizes[did]
+                if audit is not None:
+                    audit.log_landing(
+                        ctx.gid, names[did], HOST_MEM, now, True, "proactive"
+                    )
 
     # ------------------------------------------------------------------
     def detach(self, engine, rid: int, mode: Optional[str] = None) -> None:
@@ -201,7 +327,11 @@ class FaultManager:
             )
         now = engine.now
         self._mark(rid, False)
-        self.history.append(FaultEvent(now, "detach", rid, mode))
+        # a noticed death closes its window: record the realized warning
+        # time so a saved history replays the notice at the same instant
+        pending = self.noticed.pop(rid, None)
+        ns = None if pending is None else now - pending[0]
+        self.history.append(FaultEvent(now, "detach", rid, mode, ns))
         if engine.audit is not None:
             engine.audit.log_fault(now, "detach", rid, mode)
         metrics = engine.metrics
@@ -298,6 +428,7 @@ class FaultManager:
             return
         now = engine.now
         self._mark(rid, True)
+        self.noticed.pop(rid, None)  # a rejoining device owes no death
         self.history.append(FaultEvent(now, "attach", rid, None))
         if engine.audit is not None:
             engine.audit.log_fault(now, "attach", rid, None)

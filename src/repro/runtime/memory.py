@@ -68,6 +68,13 @@ def pressure_rows_for(
     devices through the channel it already reads. ``fault_mask=False``
     opts out for consumers that handle liveness explicitly (DADA filters
     its placement pools — an +inf cost row would poison its λ search).
+
+    Preemption-noticed resources (a detach announced but not yet fired)
+    get a *finite, linearly decaying* penalty instead: the remaining
+    time until the scheduled death, ``max(0, death_at - now)``. New work
+    steers away from a condemned device while the warning is fresh, yet
+    the column stays comparable — near death the penalty vanishes along
+    with the window in which a placement could still matter.
     """
     memory = getattr(sim, "memory", None)
     rows = None
@@ -90,6 +97,17 @@ def pressure_rows_for(
             for j, r in enumerate(resources):
                 if r.rid in dead:
                     rows[:, j] = np.inf
+        if faults is not None and faults.noticed:
+            if rows is None:
+                rows = np.zeros(
+                    (len(tids), len(resources)), dtype=np.float64
+                )
+            now = sim.now
+            noticed = faults.noticed
+            for j, r in enumerate(resources):
+                pending = noticed.get(r.rid)
+                if pending is not None:
+                    rows[:, j] += max(0.0, pending[1] - now)
     return rows
 
 

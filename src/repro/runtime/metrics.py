@@ -57,6 +57,8 @@ class Metrics:
         "busy", "intervals", "n_evictions", "n_writebacks", "writeback_bytes",
         "n_detaches", "n_attaches", "n_killed", "n_requeued",
         "n_evacuations", "evacuated_bytes", "wasted_s",
+        "n_notices", "n_proactive", "proactive_bytes",
+        "n_retries", "n_timeouts", "retry_delay_s",
     )
 
     def __init__(self, machine: MachineModel) -> None:
@@ -76,8 +78,15 @@ class Metrics:
         self.n_killed = 0  # running tasks aborted (kill-and-requeue)
         self.n_requeued = 0  # tasks re-activated off dead workers
         self.n_evacuations = 0  # dirty data salvaged to host at detach
-        self.evacuated_bytes = 0
+        self.evacuated_bytes = 0  # reactive salvage traffic (at death)
         self.wasted_s = 0.0  # partial execution discarded by kills
+        # proactive recovery (preemption notices) and flaky-link retries
+        self.n_notices = 0  # advance warnings delivered
+        self.n_proactive = 0  # sole copies replicated inside the notice
+        self.proactive_bytes = 0
+        self.n_retries = 0  # failed hops retried with backoff
+        self.n_timeouts = 0  # retry budget exhausted -> re-sourced
+        self.retry_delay_s = 0.0  # total backoff delay injected
 
     def fault_summary(self) -> Dict[str, float]:
         """The fault counters as a plain dict (``SimResult.faults``)."""
@@ -89,6 +98,12 @@ class Metrics:
             "n_evacuations": self.n_evacuations,
             "evacuated_bytes": self.evacuated_bytes,
             "wasted_s": self.wasted_s,
+            "n_notices": self.n_notices,
+            "n_proactive": self.n_proactive,
+            "proactive_bytes": self.proactive_bytes,
+            "n_retries": self.n_retries,
+            "n_timeouts": self.n_timeouts,
+            "retry_delay_s": self.retry_delay_s,
         }
 
 
@@ -100,6 +115,14 @@ def recovery_report(faulted: SimResult, baseline: SimResult) -> Dict[str, float]
     the faults cost on top of the undisturbed schedule. ``extra_bytes``
     includes both evacuation traffic and the re-transfers that rebuilding
     affinity on the survivors required.
+
+    Evacuation traffic is split by when it moved (claim C9):
+    ``proactive_bytes`` — sole copies replicated to host inside a
+    preemption-notice window, before the device died — versus
+    ``reactive_evacuated_bytes`` — salvage at death, on the critical
+    recovery path. Retry/timeout counters from flaky links are surfaced
+    here too so benchmarks read one dict instead of re-deriving them
+    from audit logs.
     """
     out: Dict[str, float] = {
         "makespan": faulted.makespan,
@@ -114,4 +137,7 @@ def recovery_report(faulted: SimResult, baseline: SimResult) -> Dict[str, float]
     }
     if faulted.faults:
         out.update(faulted.faults)
+        out["reactive_evacuated_bytes"] = faulted.faults.get(
+            "evacuated_bytes", 0
+        )
     return out

@@ -7,13 +7,18 @@ can be replayed against the simulator deterministically. The optional
 ``"mode"`` field selects the recovery mode per event (``"drain"`` or
 ``"kill"``); omitted, the engine's default applies.
 
-Schema (documented in ``docs/runtime_architecture.md``):
+Schema v2 (documented in ``docs/runtime_architecture.md``):
 
-  * ``t``     — simulated seconds (non-negative number), required;
-  * ``event`` — ``"detach"`` or ``"attach"``, required;
-  * ``rid``   — resource id on the simulated machine (non-negative int),
-    required;
-  * ``mode``  — ``"drain"`` or ``"kill"``, optional, detach events only.
+  * ``t``        — simulated seconds (non-negative number), required;
+  * ``event``    — ``"detach"`` or ``"attach"``, required;
+  * ``rid``      — resource id on the simulated machine (non-negative
+    int), required;
+  * ``mode``     — ``"drain"`` or ``"kill"``, optional, detach events
+    only;
+  * ``notice_s`` — advance-warning window in seconds (non-negative
+    number), optional, detach events only. A detach with ``notice_s``
+    is announced that long before ``t`` (spot-style preemption notice);
+    v1 lines simply omit the field and load unchanged.
 
 Malformed lines raise ``ValueError`` naming the file and line number —
 the same fail-at-the-edge contract as ``repro.sched.SchedConfig``.
@@ -36,6 +41,7 @@ class FaultEvent:
     event: str
     rid: int
     mode: Optional[str] = None
+    notice_s: Optional[float] = None
 
     def __post_init__(self) -> None:
         if self.event not in FAULT_EVENTS:
@@ -50,12 +56,22 @@ class FaultEvent:
             raise ValueError(f"fault time must be >= 0, got {self.t!r}")
         if self.rid < 0:
             raise ValueError(f"fault rid must be >= 0, got {self.rid!r}")
+        if self.notice_s is not None:
+            if self.event != "detach":
+                raise ValueError(
+                    "fault notice_s only applies to detach events, got "
+                    f"event={self.event!r}"
+                )
+            if not (self.notice_s >= 0.0):
+                raise ValueError(
+                    f"fault notice_s must be >= 0, got {self.notice_s!r}"
+                )
 
 
 def _parse_entry(obj, where: str) -> FaultEvent:
     if not isinstance(obj, dict):
         raise ValueError(f"{where}: expected a JSON object, got {type(obj).__name__}")
-    unknown = set(obj) - {"t", "event", "rid", "mode"}
+    unknown = set(obj) - {"t", "event", "rid", "mode", "notice_s"}
     if unknown:
         raise ValueError(f"{where}: unknown trace field(s) {sorted(unknown)}")
     try:
@@ -68,8 +84,16 @@ def _parse_entry(obj, where: str) -> FaultEvent:
         raise ValueError(f"{where}: 't' must be a number, got {t!r}")
     if isinstance(rid, bool) or not isinstance(rid, int):
         raise ValueError(f"{where}: 'rid' must be an integer, got {rid!r}")
+    notice = obj.get("notice_s")
+    if notice is not None and (
+        isinstance(notice, bool) or not isinstance(notice, (int, float))
+    ):
+        raise ValueError(f"{where}: 'notice_s' must be a number, got {notice!r}")
     try:
-        return FaultEvent(float(t), event, rid, obj.get("mode"))
+        return FaultEvent(
+            float(t), event, rid, obj.get("mode"),
+            None if notice is None else float(notice),
+        )
     except ValueError as e:
         raise ValueError(f"{where}: {e}") from None
 
@@ -102,8 +126,10 @@ def save_trace(
 ) -> None:
     """Write fault events as a JSONL trace (the load_trace inverse).
 
-    Accepts :class:`FaultEvent` instances or ``(t, event, rid[, mode])``
-    sequences (e.g. a :class:`~repro.runtime.faults.FaultManager` history).
+    Accepts :class:`FaultEvent` instances or ``(t, event, rid[, mode
+    [, notice_s]])`` sequences (e.g. a
+    :class:`~repro.runtime.faults.FaultManager` history). Optional fields
+    are written only when set, so v1 traces round-trip byte-compatibly.
     """
     with open(path, "w", encoding="utf-8") as fh:
         for ev in events:
@@ -112,4 +138,6 @@ def save_trace(
             obj = {"t": ev.t, "event": ev.event, "rid": ev.rid}
             if ev.mode is not None:
                 obj["mode"] = ev.mode
+            if ev.notice_s is not None:
+                obj["notice_s"] = ev.notice_s
             fh.write(json.dumps(obj) + "\n")

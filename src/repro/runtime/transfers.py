@@ -16,15 +16,33 @@ time: space at the destination is reserved *before* the hop is scheduled,
 so any eviction write-back the reservation triggers serializes ahead of
 the incoming copy on the same link — exactly how a coherent runtime
 staging area behaves.
+
+Transient link faults (opt-in via ``REPRO_SCHED_LINK_FLAKE``): each
+demand hop fails with a seeded per-hop probability — the DMA ran, held
+the link, and was dropped in flight. Failed hops retry with capped
+exponential backoff (``REPRO_SCHED_BACKOFF_S`` base, doubling per
+attempt, capped at 64×); when the ``REPRO_SCHED_RETRY_MAX`` budget is
+exhausted the transfer *times out* and is re-sourced from another live
+copy or host, modeled as one final reliable hop. Every attempt occupies
+the link and is charged as real traffic (audited as ``retry`` /
+``resource`` hops), so byte conservation holds attempt-for-attempt. The
+flake generator lives on its own seeded stream: zero-flake runs consume
+nothing and stay bit-for-bit identical.
 """
 from __future__ import annotations
 
 from typing import Dict, Optional
 
+import numpy as np
+
 from repro.core.machine import HOST_MEM, LinkModel, MachineModel
 
 from .events import EventQueue
 from .metrics import Metrics
+
+# Dedicated flake stream key: keeps per-hop failure draws disjoint from
+# the engine's noise stream and the churn stream for every engine seed.
+_FLAKE_STREAM = 0xF1A4E
 
 
 class TransferEngine:
@@ -34,6 +52,7 @@ class TransferEngine:
         "machine", "model", "events", "metrics", "memory",
         "mem_link", "link_free", "_plain_link", "_link_lat", "_link_bw",
         "cancel_stale", "faults", "audit",
+        "flake_rate", "retry_max", "backoff_s", "_flake_rng", "_flake_on",
     )
 
     def __init__(
@@ -51,6 +70,12 @@ class TransferEngine:
         self.faults = None  # FaultManager, wired by the engine
         self.audit = None  # repro.verify AuditLog, wired by the engine
         self.cancel_stale = False
+        # transient link faults (inert until enable_flake)
+        self.flake_rate = 0.0
+        self.retry_max = 0
+        self.backoff_s = 0.0
+        self._flake_rng: Optional[np.random.Generator] = None
+        self._flake_on = False
         self.link_free: Dict[int, float] = {}
         # accelerator memory -> link group (first resource on that memory)
         self.mem_link: Dict[int, Optional[int]] = {}
@@ -79,6 +104,75 @@ class TransferEngine:
         self.metrics.n_transfers += 1
         if self.audit is not None:
             self.audit.log_hop(kind, nbytes, group, t, done)
+        return done
+
+    # ------------------------------------------------------------------
+    def enable_flake(
+        self, rate: float, retry_max: int, backoff_s: float, seed: int
+    ) -> None:
+        """Arm the seeded per-hop failure model (the engine wires this
+        when ``link_flake`` > 0; reliable engines never call it)."""
+        if not (0.0 <= rate <= 1.0):
+            raise ValueError(f"flake rate must be in [0, 1], got {rate}")
+        if retry_max < 0:
+            raise ValueError(f"retry_max must be >= 0, got {retry_max}")
+        if backoff_s < 0:
+            raise ValueError(f"backoff_s must be >= 0, got {backoff_s}")
+        self.flake_rate = float(rate)
+        self.retry_max = int(retry_max)
+        self.backoff_s = float(backoff_s)
+        self._flake_rng = np.random.default_rng(
+            (int(seed) & 0xFFFFFFFF, _FLAKE_STREAM)
+        )
+        self._flake_on = self.flake_rate > 0.0
+
+    def _flaky_hop(
+        self,
+        ctx,
+        name: str,
+        nbytes: int,
+        group: Optional[int],
+        t: float,
+        dst_mem: int,
+    ) -> float:
+        """One demand hop under the flake model: retry with capped
+        exponential backoff, re-source on timeout.
+
+        Every attempt (the failed ones included) ran on the wire: it
+        serializes on the link group and is charged as real traffic, so
+        bytes are conserved attempt-for-attempt. The whole chain is
+        priced synchronously — ``one_hop`` occupies links eagerly, and
+        only the final landing is posted as an event — which keeps the
+        event-loop structure (and the zero-flake path) untouched.
+        """
+        done = self.one_hop(nbytes, group, t)
+        attempt = 0
+        rng = self._flake_rng
+        rate = self.flake_rate
+        metrics = self.metrics
+        while rng.random() < rate:
+            if attempt >= self.retry_max:
+                # retry budget exhausted: the transfer times out and is
+                # re-sourced from another live copy or host — one final
+                # reliable hop, so every transfer eventually lands
+                metrics.n_timeouts += 1
+                if self.audit is not None:
+                    self.audit.log_timeout(
+                        ctx.gid, name, dst_mem, done, attempt + 1, nbytes
+                    )
+                return self.one_hop(nbytes, group, done, kind="resource")
+            attempt += 1
+            delay = min(
+                self.backoff_s * (2.0 ** (attempt - 1)),
+                self.backoff_s * 64.0,
+            )
+            metrics.n_retries += 1
+            metrics.retry_delay_s += delay
+            if self.audit is not None:
+                self.audit.log_retry(
+                    ctx.gid, name, dst_mem, done, attempt, delay, nbytes
+                )
+            done = self.one_hop(nbytes, group, done + delay, kind="retry")
         return done
 
     # ------------------------------------------------------------------
@@ -128,26 +222,51 @@ class TransferEngine:
         )
         mem_link = self.mem_link
         post = self.events.post
+        flake = self._flake_on
         if (mask & 1) and dst_mem != HOST_MEM:
             # a host copy exists: single host->device hop
-            done = self.one_hop(size, mem_link.get(dst_mem), now)
+            done = (
+                self._flaky_hop(
+                    ctx, name, size, mem_link.get(dst_mem), now, dst_mem
+                )
+                if flake
+                else self.one_hop(size, mem_link.get(dst_mem), now)
+            )
         elif dst_mem == HOST_MEM:
             src = (mask & -mask).bit_length() - 2  # lowest-numbered location
-            done = self.one_hop(size, mem_link.get(src), now)
+            done = (
+                self._flaky_hop(
+                    ctx, name, size, mem_link.get(src), now, HOST_MEM
+                )
+                if flake
+                else self.one_hop(size, mem_link.get(src), now)
+            )
         else:
             # GPU -> host -> GPU (two hops, paper-era PCIe path)
             src = (mask & -mask).bit_length() - 2
             if flights is not None and HOST_MEM in flights:
                 mid = flights[HOST_MEM]
             else:
-                mid = self.one_hop(size, mem_link.get(src), now)
+                mid = (
+                    self._flaky_hop(
+                        ctx, name, size, mem_link.get(src), now, HOST_MEM
+                    )
+                    if flake
+                    else self.one_hop(size, mem_link.get(src), now)
+                )
                 if flights is None:
                     flights = inflight[name] = {}
                 flights[HOST_MEM] = mid
                 post(mid, "xfer", (ctx, name, HOST_MEM, ver, 0))
                 if self.audit is not None:
                     self.audit.note_request(ctx.gid, name, HOST_MEM, mid, now)
-            done = self.one_hop(size, mem_link.get(dst_mem), mid)
+            done = (
+                self._flaky_hop(
+                    ctx, name, size, mem_link.get(dst_mem), mid, dst_mem
+                )
+                if flake
+                else self.one_hop(size, mem_link.get(dst_mem), mid)
+            )
         if flights is None:
             flights = inflight[name] = {}
         flights[dst_mem] = done

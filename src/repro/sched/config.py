@@ -123,6 +123,18 @@ class SchedConfig:
       ``kill`` (kill-and-requeue).
     - ``fault_trace``: path to a JSONL preemption trace replayed into
       every engine (``repro.runtime.traces``); must exist at parse time.
+    - ``notice_s``: advance-warning window for detach events in simulated
+      seconds (0 = no notice, the default). With a notice, the engine
+      stops starting new work on the dying resource, proactively
+      replicates sole-copy data to host, and policies see a finite
+      decaying pressure penalty instead of a surprise death.
+    - ``link_flake``: seeded per-hop transfer failure probability in
+      [0, 1] (0 = reliable links, the default; see
+      ``repro.runtime.transfers``).
+    - ``retry_max``: failed-hop retry budget before the transfer times
+      out and is re-sourced from another live copy or host.
+    - ``backoff_s``: base delay for the capped exponential retry backoff
+      (delay doubles per attempt, capped at 64×).
     - ``exact``: simulation engine selector. ``True`` (default) runs the
       exact Python event loop — the verification oracle. ``0`` opts into
       the batched surrogate episode engine (``repro.core.episode``),
@@ -159,6 +171,10 @@ class SchedConfig:
     churn: float = 0.0
     fault_mode: str = "drain"
     fault_trace: Optional[str] = None
+    notice_s: float = 0.0
+    link_flake: float = 0.0
+    retry_max: int = 3
+    backoff_s: float = 1e-4
     exact: bool = True
     audit: bool = False
     jax_cache_dir: Optional[str] = None
@@ -202,6 +218,26 @@ class SchedConfig:
             raise _err(
                 "REPRO_SCHED_FAULT_MODE", self.fault_mode,
                 f"choose from {FAULT_MODES}",
+            )
+        if self.notice_s < 0:
+            raise _err(
+                "REPRO_SCHED_NOTICE_S", str(self.notice_s),
+                "expected a number >= 0",
+            )
+        if not (0.0 <= self.link_flake <= 1.0):
+            raise _err(
+                "REPRO_SCHED_LINK_FLAKE", str(self.link_flake),
+                "expected a probability in [0, 1]",
+            )
+        if self.retry_max < 0:
+            raise _err(
+                "REPRO_SCHED_RETRY_MAX", str(self.retry_max),
+                "expected an integer >= 0",
+            )
+        if self.backoff_s < 0:
+            raise _err(
+                "REPRO_SCHED_BACKOFF_S", str(self.backoff_s),
+                "expected a number >= 0",
             )
         if not self.exact and self.backend != "jax":
             # the surrogate episode engine is a jax program; a silent
@@ -285,6 +321,11 @@ _ENV_SCHEMA = {
     "REPRO_SCHED_CHURN": ("churn", _parse_rate),
     "REPRO_SCHED_FAULT_MODE": ("fault_mode", lambda var, v: v.lower()),
     "REPRO_SCHED_FAULT_TRACE": ("fault_trace", _parse_trace_path),
+    "REPRO_SCHED_NOTICE_S": ("notice_s", _parse_rate),
+    "REPRO_SCHED_LINK_FLAKE": ("link_flake", _parse_rate),
+    "REPRO_SCHED_RETRY_MAX": (
+        "retry_max", lambda var, v: _parse_int(var, v, lo=0)),
+    "REPRO_SCHED_BACKOFF_S": ("backoff_s", _parse_rate),
     "REPRO_SCHED_EXACT": ("exact", _parse_flag),
     "REPRO_SCHED_AUDIT": ("audit", _parse_flag),
     "REPRO_SCHED_BATCH": ("batch", lambda var, v: _parse_int(var, v, lo=1)),

@@ -48,7 +48,9 @@ class HopRecord:
     """One accounted link occupation (the only place bytes count).
 
     ``kind``: "copy" (demand transfer hop), "writeback" (dirty
-    eviction), "evacuate" (fault salvage).
+    eviction), "evacuate" (fault salvage), "proactive" (notice-window
+    replication), "retry" (flaky hop re-attempt), "resource"
+    (post-timeout re-source from another live copy or host).
     """
 
     seq: int
@@ -102,12 +104,67 @@ class FaultRecord:
     mode: Optional[str]
 
 
+@dataclass
+class NoticeRecord:
+    """A preemption notice: ``rid`` will detach at ``death_at``.
+
+    Opens the grace window ``(t, death_at)`` inside which the engine
+    must start no new execution on ``rid`` (the NOTICE_GRACE invariant).
+    """
+
+    seq: int
+    t: float
+    rid: int
+    mode: Optional[str]
+    death_at: float
+
+
+@dataclass
+class RetryRecord:
+    """A flaky demand hop failed and was retried with backoff.
+
+    ``attempt`` is 1-based; ``delay_s`` the backoff injected before the
+    re-attempt; ``nbytes`` must match a same-sized ``retry`` hop (the
+    RETRY_BYTES invariant: every retried byte is re-charged on the wire).
+    """
+
+    seq: int
+    gid: int
+    name: str
+    mem: int
+    t: float
+    attempt: int
+    delay_s: float
+    nbytes: int
+
+
+@dataclass
+class TimeoutRecord:
+    """A transfer exhausted its retry budget and was re-sourced.
+
+    ``attempts`` counts the failed tries; the transfer must still land —
+    a matching ``resource`` hop and a later landing record close it (the
+    TRANSFER_COMPLETES invariant).
+    """
+
+    seq: int
+    gid: int
+    name: str
+    mem: int
+    t: float
+    attempts: int
+    nbytes: int
+
+
 _RECORD_TYPES = {
     "exec": ExecRecord,
     "hop": HopRecord,
     "land": LandRecord,
     "evict": EvictRecord,
     "fault": FaultRecord,
+    "notice": NoticeRecord,
+    "retry": RetryRecord,
+    "timeout": TimeoutRecord,
 }
 
 
@@ -137,6 +194,9 @@ class AuditLog:
         self.landings: List[LandRecord] = []
         self.evictions: List[EvictRecord] = []
         self.faults: List[FaultRecord] = []
+        self.notices: List[NoticeRecord] = []
+        self.retries: List[RetryRecord] = []
+        self.timeouts: List[TimeoutRecord] = []
         self.result: Dict[str, Any] = {}
         self._seq = 0
         # (gid, name, dst_mem, done_t) -> request time, popped on landing
@@ -234,6 +294,42 @@ class AuditLog:
     def log_fault(self, t: float, event: str, rid: int, mode: Optional[str]) -> None:
         self.faults.append(FaultRecord(self._next_seq(), float(t), event, int(rid), mode))
 
+    def log_notice(
+        self, t: float, rid: int, mode: Optional[str], death_at: float
+    ) -> None:
+        self.notices.append(
+            NoticeRecord(
+                self._next_seq(), float(t), int(rid), mode, float(death_at)
+            )
+        )
+
+    def log_retry(
+        self,
+        gid: int,
+        name: str,
+        mem: int,
+        t: float,
+        attempt: int,
+        delay_s: float,
+        nbytes: int,
+    ) -> None:
+        self.retries.append(
+            RetryRecord(
+                self._next_seq(), int(gid), name, int(mem), float(t),
+                int(attempt), float(delay_s), int(nbytes),
+            )
+        )
+
+    def log_timeout(
+        self, gid: int, name: str, mem: int, t: float, attempts: int, nbytes: int
+    ) -> None:
+        self.timeouts.append(
+            TimeoutRecord(
+                self._next_seq(), int(gid), name, int(mem), float(t),
+                int(attempts), int(nbytes),
+            )
+        )
+
     def finalize(self, engine: Any) -> None:
         """Snapshot the engine's claimed result after the run loop ends."""
         per_graph: Dict[int, Dict[str, Any]] = {}
@@ -250,6 +346,8 @@ class AuditLog:
             "total_bytes": int(engine.metrics.total_bytes),
             "n_transfers": int(engine.metrics.n_transfers),
             "makespan": float(engine.now),
+            "n_retries": int(engine.metrics.n_retries),
+            "n_timeouts": int(engine.metrics.n_timeouts),
             "per_graph": per_graph,
         }
 
@@ -276,6 +374,9 @@ class AuditLog:
                 ("land", self.landings),
                 ("evict", self.evictions),
                 ("fault", self.faults),
+                ("notice", self.notices),
+                ("retry", self.retries),
+                ("timeout", self.timeouts),
             ):
                 for rec in records:
                     fh.write(json.dumps({"type": tag, **asdict(rec)}) + "\n")
@@ -322,6 +423,9 @@ class AuditLog:
                             "land": "landings",
                             "evict": "evictions",
                             "fault": "faults",
+                            "notice": "notices",
+                            "retry": "retries",
+                            "timeout": "timeouts",
                         }[kind],
                     ).append(rec)
                     log._seq = max(log._seq, rec.seq)

@@ -28,6 +28,17 @@ Invariants (exact engine):
   requeue, so a start inside the window is always a bug).
 - ``BYTES``          sum of logged hop bytes equals the engine's claimed
   ``total_bytes``, and the hop count equals ``n_transfers``.
+- ``NOTICE_GRACE``   no execution starts strictly inside a preemption
+  notice window — (notice, next detach/attach) of its resource.  A
+  noticed worker may finish in-flight work but must accept no new work.
+- ``RETRY_BYTES``    every retry record pairs with a ``retry`` hop and
+  every timeout record with a ``resource`` hop, byte-for-byte and
+  count-for-count (retried traffic is re-charged on the wire, never
+  silently absorbed); claimed ``n_retries``/``n_timeouts`` match the
+  record counts when the result reports them.
+- ``TRANSFER_COMPLETES``  every retried or timed-out transfer is
+  followed by a landing record for the same (graph, datum, memory) at
+  or after the retry/timeout time — no transfer retries forever.
 - ``MAKESPAN``       each graph's recorded finish time equals the max
   recorded execution end for that graph.
 
@@ -324,6 +335,87 @@ def _verify_exact(log: AuditLog) -> List[Finding]:
                         f"dead window ({t0:.6g}, {t1:.6g}) of resource {rec.rid}",
                     )
                 )
+
+    # notice grace windows -----------------------------------------------
+    if log.notices:
+        fault_ts: Dict[int, List[float]] = {}
+        for f in log.faults:
+            fault_ts.setdefault(f.rid, []).append(f.t)
+        for ts in fault_ts.values():
+            ts.sort()
+        for note in log.notices:
+            # the grace window closes at the first fault event after the
+            # notice (the promised detach, or an attach cancelling it);
+            # if none was recorded, the promised death time bounds it
+            ts = fault_ts.get(note.rid, [])
+            i = bisect_right(ts, note.t)
+            end = ts[i] if i < len(ts) else note.death_at
+            for rec in log.execs:
+                if rec.rid != note.rid:
+                    continue
+                if note.t + eps < rec.start < end - eps:
+                    out.append(
+                        Finding(
+                            "NOTICE_GRACE",
+                            "error",
+                            f"g{rec.gid}/t{rec.tid} starts at {rec.start:.6g} "
+                            f"inside notice window ({note.t:.6g}, {end:.6g}) "
+                            f"of resource {note.rid}",
+                        )
+                    )
+
+    # retry / timeout accounting -----------------------------------------
+    for kind, recs, claimed_key in (
+        ("retry", log.retries, "n_retries"),
+        ("resource", log.timeouts, "n_timeouts"),
+    ):
+        hops = [h for h in log.hops if h.kind == kind]
+        if hops or recs:
+            hop_bytes = sum(h.nbytes for h in hops)
+            rec_bytes = sum(r.nbytes for r in recs)
+            if len(hops) != len(recs) or hop_bytes != rec_bytes:
+                out.append(
+                    Finding(
+                        "RETRY_BYTES",
+                        "error",
+                        f"{len(hops)} '{kind}' hops ({hop_bytes} bytes) vs "
+                        f"{len(recs)} records ({rec_bytes} bytes): every "
+                        "re-attempt must be re-charged on the wire",
+                    )
+                )
+        n_claimed = log.result.get(claimed_key)
+        if n_claimed is not None and len(recs) != n_claimed:
+            out.append(
+                Finding(
+                    "RETRY_BYTES",
+                    "error",
+                    f"claimed {claimed_key} {n_claimed} != "
+                    f"{len(recs)} recorded events",
+                )
+            )
+    if log.retries or log.timeouts:
+        land_ts: Dict[Tuple[int, str, int], List[float]] = {}
+        for land in log.landings:
+            land_ts.setdefault((land.gid, land.name, land.mem), []).append(land.t)
+        for ts in land_ts.values():
+            ts.sort()
+
+        def _completes(recs: Sequence[Any], what: str) -> None:
+            for rec in recs:
+                ts = land_ts.get((rec.gid, rec.name, rec.mem))
+                if not ts or ts[-1] < rec.t - eps:
+                    out.append(
+                        Finding(
+                            "TRANSFER_COMPLETES",
+                            "error",
+                            f"g{rec.gid}/{rec.name} {what} at t={rec.t:.6g} "
+                            f"toward memory {rec.mem} but no landing was "
+                            "recorded at or after it",
+                        )
+                    )
+
+        _completes(log.retries, "retried")
+        _completes(log.timeouts, "timed out")
 
     # write-end times per datum, for version-at-time queries -------------
     write_ends: Dict[Tuple[int, str], List[float]] = {}

@@ -384,6 +384,98 @@ def test_churn_env_knob_drives_simulator(monkeypatch):
 
 
 # ---------------------------------------------------------------------------
+# preemption notices: grace window, proactive replication, config knobs
+
+
+def test_notice_grace_blocks_new_starts():
+    base = _baseline("heft")
+    m = paper_machine(4)
+    rid = m.gpus[0].rid
+    death = base.makespan * 0.5
+    notice_w = base.makespan * 0.2
+    sim = Simulator(_graph(), m, resolve("heft"), seed=0, noise=0.0)
+    sim.inject("detach", rid, at=death, mode="drain", notice_s=notice_w)
+    res = sim.run()
+    _assert_all_complete_once(res)
+    assert sim.metrics.n_notices == 1
+    t_notice = death - notice_w
+    for iv in res.intervals:
+        if iv.rid == rid:
+            assert not (t_notice < iv.start < death), (
+                f"task {iv.tid} started on noticed rid {rid} at {iv.start} "
+                f"inside grace window ({t_notice}, {death})"
+            )
+
+
+def test_notice_triggers_proactive_replication():
+    # a generous warning on a worker holding sole copies pushes them
+    # hostward inside the window, counted apart from death-time salvage
+    base = _baseline("heft")
+    m = paper_machine(4)
+    rid = m.gpus[0].rid
+    sim = Simulator(
+        _graph(), m, resolve("heft"), seed=0, noise=0.0, audit=True
+    )
+    sim.inject(
+        "detach", rid, at=base.makespan * 0.5, mode="kill",
+        notice_s=base.makespan * 0.1,
+    )
+    res = sim.run()
+    _assert_all_complete_once(res)
+    assert sim.metrics.n_proactive > 0
+    assert sim.metrics.proactive_bytes > 0
+    fs = res.faults
+    assert fs["n_notices"] == 1
+    assert fs["proactive_bytes"] == sim.metrics.proactive_bytes
+    from repro.verify import errors, verify_audit
+
+    assert errors(verify_audit(sim.audit)) == []
+
+
+def test_attach_before_death_cancels_notice():
+    # the promised death never comes: an attach (spot reprieve) clears
+    # the pending notice and the worker takes new work again
+    base = _baseline("heft")
+    m = paper_machine(4)
+    rid = m.gpus[0].rid
+    sim = Simulator(_graph(), m, resolve("heft"), seed=0, noise=0.0)
+    sim.inject(
+        "detach", rid, at=base.makespan * 0.4, mode="drain",
+        notice_s=base.makespan * 0.2,
+    )
+    sim.inject("attach", rid, at=base.makespan * 0.6)
+    res = sim.run()
+    _assert_all_complete_once(res)
+    assert rid not in sim.faults.noticed
+
+
+def test_recovery_env_knobs_parse_and_validate():
+    cfg = SchedConfig.from_env(
+        {
+            "REPRO_SCHED_NOTICE_S": "0.004",
+            "REPRO_SCHED_LINK_FLAKE": "0.25",
+            "REPRO_SCHED_RETRY_MAX": "4",
+            "REPRO_SCHED_BACKOFF_S": "2e-4",
+        }
+    )
+    assert cfg.notice_s == pytest.approx(0.004)
+    assert cfg.link_flake == pytest.approx(0.25)
+    assert cfg.retry_max == 4
+    assert cfg.backoff_s == pytest.approx(2e-4)
+    for var, bad in [
+        ("REPRO_SCHED_NOTICE_S", "-1"),
+        ("REPRO_SCHED_NOTICE_S", "banana"),
+        ("REPRO_SCHED_LINK_FLAKE", "1.5"),
+        ("REPRO_SCHED_LINK_FLAKE", "banana"),
+        ("REPRO_SCHED_RETRY_MAX", "-2"),
+        ("REPRO_SCHED_RETRY_MAX", "2.5"),
+        ("REPRO_SCHED_BACKOFF_S", "-0.1"),
+    ]:
+        with pytest.raises(ValueError, match=var):
+            SchedConfig.from_env({var: bad})
+
+
+# ---------------------------------------------------------------------------
 # recovery metrics + the elastic bridge
 
 

@@ -55,6 +55,16 @@ def _load_lines(*lines):
          "fault mode must be one of"),
         ('{"t": -0.5, "event": "detach", "rid": 0}', "fault time must be >= 0"),
         ('{"t": 1.0, "event": "detach", "rid": -1}', "fault rid must be >= 0"),
+        ('{"t": 1.0, "event": "detach", "rid": 0, "notice_s": true}',
+         "'notice_s' must be a number"),
+        ('{"t": 1.0, "event": "detach", "rid": 0, "notice_s": "0.1"}',
+         "'notice_s' must be a number"),
+        ('{"t": 1.0, "event": "detach", "rid": 0, "notice_s": -0.5}',
+         "notice_s must be >= 0"),
+        ('{"t": 1.0, "event": "detach", "rid": 0, "notice_s": NaN}',
+         "notice_s must be >= 0"),
+        ('{"t": 1.0, "event": "attach", "rid": 0, "notice_s": 0.1}',
+         "notice_s only applies to detach events"),
     ],
 )
 def test_malformed_line_names_file_and_lineno(bad, needle):
@@ -148,3 +158,71 @@ def test_save_trace_accepts_tuples():
     assert back == [
         FaultEvent(0.2, "detach", 1, "kill"), FaultEvent(0.5, "attach", 1)
     ]
+
+
+# ---------------------------------------------------------------------------
+# schema v2: preemption notices in traces
+
+
+def test_noticed_history_roundtrips_with_notice_s():
+    # noticed churn records the realized warning on each detach; the v2
+    # field must survive save/load field-for-field, notice_s included
+    sim = Simulator(
+        cholesky_graph(6, 256, with_fns=False), paper_machine(4),
+        resolve("heft"), seed=7, noise=0.0, churn=200.0, fault_mode="drain",
+        notice_s=0.003,
+    )
+    sim.run()
+    hist = sim.faults.history
+    detaches = [e for e in hist if e.event == "detach"]
+    assert detaches, "churn produced no detaches; raise the rate"
+    assert all(e.notice_s is not None and e.notice_s > 0 for e in detaches)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "hist.jsonl")
+        save_trace(hist, path)
+        back = load_trace(path)
+    assert sorted(back, key=lambda e: (e.t, e.rid)) == sorted(
+        hist, key=lambda e: (e.t, e.rid)
+    )
+
+
+def test_noticed_trace_replay_matches_programmatic_injection():
+    trace = [
+        FaultEvent(0.004, "detach", 4, "drain", notice_s=0.002),
+        FaultEvent(0.009, "attach", 4),
+    ]
+    def _run(**kw):
+        sim = Simulator(
+            cholesky_graph(6, 256, with_fns=False), paper_machine(4),
+            resolve("heft"), seed=7, noise=0.0, **kw,
+        )
+        return sim, sim.run()
+
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "t.jsonl")
+        save_trace(trace, path)
+        rsim, replayed = _run(fault_trace=path)
+    psim = Simulator(
+        cholesky_graph(6, 256, with_fns=False), paper_machine(4),
+        resolve("heft"), seed=7, noise=0.0,
+    )
+    for e in trace:
+        psim.inject(e.event, e.rid, at=e.t, mode=e.mode, notice_s=e.notice_s)
+    prog = psim.run()
+    assert (replayed.makespan, replayed.total_bytes) == (
+        prog.makespan, prog.total_bytes
+    )
+    assert [
+        (iv.tid, iv.rid, iv.start, iv.end) for iv in replayed.intervals
+    ] == [(iv.tid, iv.rid, iv.start, iv.end) for iv in prog.intervals]
+    # both saw the notice: the grace window and proactive path engaged
+    assert rsim.metrics.n_notices == psim.metrics.n_notices == 1
+
+
+def test_v1_trace_without_notice_saves_byte_compatibly():
+    evs = [FaultEvent(0.2, "detach", 1, "kill"), FaultEvent(0.5, "attach", 1)]
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "t.jsonl")
+        save_trace(evs, path)
+        text = open(path).read()
+    assert "notice_s" not in text

@@ -177,6 +177,110 @@ def test_scaled_finish_breaks_makespan(factor):
 
 
 # ---------------------------------------------------------------------------
+# recovery records: notices, retries, timeouts
+
+
+@lru_cache(maxsize=None)
+def _recovery_log():
+    sim = Simulator(
+        cholesky_graph(8, 256, with_fns=False), paper_machine(4),
+        resolve("heft"), seed=2, noise=0.0, audit=True,
+        churn=250.0, fault_mode="drain", notice_s=0.004,
+        link_flake=0.35, retry_max=2, backoff_s=1e-4,
+    )
+    sim.run()
+    log = sim.audit
+    assert log.notices and log.retries, "recovery base log too quiet"
+    assert errors(verify_audit(log)) == []
+    return log
+
+
+def _recovery_mutant():
+    return copy.deepcopy(_recovery_log())
+
+
+@given(st.integers(min_value=0, max_value=10**6))
+@settings(max_examples=20, deadline=None)
+def test_fabricated_notice_over_exec_flagged(salt):
+    log = _mutant()
+    rec = _pick(salt, [r for r in log.execs if r.start > 1e-3])
+    # a notice opens strictly before rec starts and promises death after
+    # rec ends: rec.start now sits inside the grace window
+    log.log_notice(rec.start * 0.5, rec.rid, "drain", rec.end + 1.0)
+    assert "NOTICE_GRACE" in _codes(log)
+
+
+@given(st.integers(min_value=0, max_value=10**6))
+@settings(max_examples=20, deadline=None)
+def test_shifted_start_into_notice_window_flagged(salt):
+    from bisect import bisect_right
+
+    log = _recovery_mutant()
+    fault_ts = {}
+    for f in log.faults:
+        fault_ts.setdefault(f.rid, []).append(f.t)
+    for ts in fault_ts.values():
+        ts.sort()
+    candidates = []
+    for note in log.notices:
+        ts = fault_ts.get(note.rid, [])
+        i = bisect_right(ts, note.t)
+        end = ts[i] if i < len(ts) else note.death_at
+        if end - note.t < 1e-5:
+            continue
+        for rec in log.execs:
+            if rec.rid == note.rid:
+                candidates.append((rec, note.t, end))
+    rec, t0, t1 = _pick(salt, candidates)
+    dur = rec.end - rec.start
+    rec.start = 0.5 * (t0 + t1)
+    rec.end = rec.start + dur
+    assert "NOTICE_GRACE" in _codes(log)
+
+
+@given(st.integers(min_value=0, max_value=10**6))
+@settings(max_examples=20, deadline=None)
+def test_dropped_retry_record_flagged(salt):
+    log = _recovery_mutant()
+    del log.retries[salt % len(log.retries)]
+    assert "RETRY_BYTES" in _codes(log)
+
+
+@given(st.integers(min_value=0, max_value=10**6))
+@settings(max_examples=20, deadline=None)
+def test_shrunk_retry_record_bytes_flagged(salt):
+    log = _recovery_mutant()
+    rec = _pick(salt, [r for r in log.retries if r.nbytes > 1])
+    # the matching 'retry' hop keeps its size: re-charged traffic no
+    # longer reconciles byte-for-byte
+    rec.nbytes //= 2
+    assert "RETRY_BYTES" in _codes(log)
+
+
+def test_inflated_claimed_retry_count_flagged():
+    log = _recovery_mutant()
+    log.result["n_retries"] += 1
+    assert "RETRY_BYTES" in _codes(log)
+
+
+@given(st.integers(min_value=0, max_value=10**6))
+@settings(max_examples=20, deadline=None)
+def test_missing_landing_after_retry_flagged(salt):
+    log = _recovery_mutant()
+    rec = _pick(salt, log.retries)
+    before = len(log.landings)
+    log.landings = [
+        ld for ld in log.landings
+        if not (
+            ld.gid == rec.gid and ld.name == rec.name
+            and ld.mem == rec.mem and ld.t >= rec.t - 1e-6
+        )
+    ]
+    assert len(log.landings) < before, "retried transfer never landed?"
+    assert "TRANSFER_COMPLETES" in _codes(log)
+
+
+# ---------------------------------------------------------------------------
 # surrogate logs: same mutation classes through the surrogate subset
 
 

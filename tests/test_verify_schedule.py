@@ -82,6 +82,21 @@ def test_churned_runs_verify_clean(mode):
     assert errors(verify_audit(sim.audit)) == []
 
 
+def test_flaky_runs_verify_clean():
+    sim = _audited("heft", link_flake=0.35, retry_max=2, backoff_s=1e-4)
+    assert sim.audit.retries, "flake rate produced no retries; raise it"
+    assert errors(verify_audit(sim.audit)) == []
+
+
+@pytest.mark.parametrize(
+    "spec", ["heft", "dada?alpha=0.5&use_cp=1&recover=1"]
+)
+def test_noticed_churn_verifies_clean(spec):
+    sim = _audited(spec, churn=250.0, fault_mode="drain", notice_s=0.004)
+    assert sim.audit.notices, "churn produced no notices; raise the rate"
+    assert errors(verify_audit(sim.audit)) == []
+
+
 @pytest.mark.parametrize("mode", ["drain", "kill"])
 def test_scripted_faults_verify_clean(mode):
     graph = _graph()
@@ -151,6 +166,31 @@ def test_jsonl_roundtrip_preserves_verdict():
     assert back.engine == "exact"
     assert len(back.execs) == len(sim.audit.execs)
     assert len(back.hops) == len(sim.audit.hops)
+    replayed = verify_audit(back)
+    assert [(f.code, f.severity) for f in replayed] == [
+        (f.code, f.severity) for f in direct
+    ]
+    assert errors(replayed) == []
+
+
+def test_jsonl_roundtrip_preserves_recovery_records():
+    sim = _audited(
+        "heft", churn=200.0, fault_mode="kill", notice_s=0.004,
+        link_flake=0.3, retry_max=2, backoff_s=1e-4,
+    )
+    assert sim.audit.notices and sim.audit.retries, (
+        "base run too quiet for a recovery round-trip; raise churn/flake"
+    )
+    direct = verify_audit(sim.audit)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "audit.jsonl")
+        sim.audit.to_jsonl(path)
+        back = AuditLog.from_jsonl(path)
+    assert len(back.notices) == len(sim.audit.notices)
+    assert len(back.retries) == len(sim.audit.retries)
+    assert len(back.timeouts) == len(sim.audit.timeouts)
+    assert back.notices[0] == sim.audit.notices[0]
+    assert back.retries[0] == sim.audit.retries[0]
     replayed = verify_audit(back)
     assert [(f.code, f.severity) for f in replayed] == [
         (f.code, f.severity) for f in direct
