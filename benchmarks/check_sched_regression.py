@@ -29,6 +29,14 @@ an in-run ``audit_overhead`` ratio — audited pass over the paired
 uninstrumented pass on the same graphs — that is bounded by
 ``AUDIT_OVERHEAD_LIMIT`` with no baseline or calibration involved.
 
+The ``serving`` section (produced by ``serving_load.py``) gets three
+gates of its own: the in-run incremental-rescoring speedup probe must
+clear ``SERVING_SPEEDUP_FLOOR`` (baseline-free — both rescore modes run
+in one process), serving events/sec is compared against the baseline
+with the same calibrated tolerance, and per-configuration p99 tenant
+slowdown — simulated time, so deterministic and uncalibrated — may not
+grow past ``P99_SLOWDOWN_TOL``.
+
 Usage (CI runs this right after ``sched_overhead.py``)::
 
     python benchmarks/sched_overhead.py
@@ -60,6 +68,7 @@ BASELINE = RESULTS / "BENCH_sched_baseline.json"
 KEY_FIELDS = (
     "kernel", "strategy", "backend", "nt", "n_gpus", "capacity",
     "churn", "fault_mode", "flake", "notice", "exact", "audit",
+    "tenants", "arrival", "rescore",
 )
 
 # hard bound on the measured slowdown of REPRO_SCHED_AUDIT=1 over the
@@ -68,6 +77,19 @@ KEY_FIELDS = (
 # calibration scaling or committed baseline)
 AUDIT_OVERHEAD_LIMIT = 3.0
 
+# in-run floor on the serving speedup probe (serving_load.speedup_probe):
+# incremental dirty-row rescoring vs the full-rescore baseline on the
+# same arrival stream, same event cap, same process.  Demonstrated runs
+# show ≥9×; the CI floor is deliberately loose so a noisy shared box
+# never fails a healthy build, while a broken cache (speedup ≈ 1×)
+# always does
+SERVING_SPEEDUP_FLOOR = 1.5
+# per-row bound on tenant-visible p99 slowdown vs the committed serving
+# baseline.  Slowdown is *simulated* time — deterministic for a given
+# seed and code — so no calibration scaling applies; growth beyond this
+# factor means the scheduler's tail behavior regressed, not the machine
+P99_SLOWDOWN_TOL = 0.25
+
 
 def _rows_by_key(section: dict) -> dict:
     out = {}
@@ -75,15 +97,97 @@ def _rows_by_key(section: dict) -> dict:
         # rows recorded before the surrogate engine existed are exact;
         # rows recorded before the audit log existed are unaudited; rows
         # recorded before flaky links / preemption notices existed ran
-        # with both off
+        # with both off; rows recorded before the serving layer existed
+        # are single-tenant with no arrival process and rescoring off
         key = tuple(
             row.get(f, True) if f == "exact" else
             row.get(f, False) if f == "audit" else
-            row.get(f, 0.0) if f in ("flake", "notice") else row.get(f)
+            row.get(f, 0.0) if f in ("flake", "notice") else
+            row.get(f, 1) if f == "tenants" else
+            row.get(f, "none") if f == "arrival" else
+            row.get(f, "off") if f == "rescore" else row.get(f)
             for f in KEY_FIELDS
         )
         out[key] = row
     return out
+
+
+def _serving_rows_by_key(section: dict) -> dict:
+    return {
+        (row["tenants"], row["arrival"], row["strategy"]): row
+        for row in section.get("rows", [])
+    }
+
+
+def _check_serving(cur_doc: dict, base_doc: dict, tol: float) -> bool:
+    """Serving-load gates: the in-run incremental-rescoring speedup floor,
+    events/sec vs the serving baseline, and the p99-slowdown tail bound.
+    True when everything passes (or no serving section was measured)."""
+    cur = cur_doc.get("serving")
+    if not cur:
+        print("no serving section in current results; serving gate skipped")
+        return True
+    ok = True
+
+    # 1) in-run speedup probe: baseline-free, calibration-free
+    probe = cur.get("speedup") or {}
+    speedup = probe.get("speedup")
+    if speedup is not None:
+        mark = "ok  " if speedup >= SERVING_SPEEDUP_FLOOR else "FAIL"
+        print(
+            f"  [{mark}] serving incremental-rescore speedup at "
+            f"{probe.get('tenants')} tenants: {speedup:.2f}x "
+            f"(floor {SERVING_SPEEDUP_FLOOR:.1f}x)"
+        )
+        if speedup < SERVING_SPEEDUP_FLOOR:
+            ok = False
+
+    base = base_doc.get("serving")
+    if not base:
+        print("no serving section in baseline; serving baseline gate skipped")
+        return ok
+
+    # 2) events/sec vs the committed serving baseline (calibrated)
+    cal_cur = cur.get("calibration_score") or 0.0
+    cal_base = base.get("calibration_score") or 0.0
+    scale = cal_cur / cal_base if cal_cur > 0 and cal_base > 0 else 1.0
+    cur_rows = _serving_rows_by_key(cur)
+    base_rows = _serving_rows_by_key(base)
+    log_ratios = []
+    tail_failures = []
+    for key, brow in sorted(base_rows.items()):
+        crow = cur_rows.get(key)
+        if crow is None:
+            continue
+        expect = brow["events_per_s"] * scale
+        got = crow["events_per_s"]
+        if expect > 0 and got > 0:
+            log_ratios.append(math.log(got / expect))
+        # 3) the tenant-visible tail: deterministic simulated time
+        b_p99, c_p99 = brow.get("p99_slowdown"), crow.get("p99_slowdown")
+        if b_p99 and c_p99 and c_p99 > b_p99 * (1.0 + P99_SLOWDOWN_TOL):
+            tail_failures.append((key, b_p99, c_p99))
+            print(
+                f"  [FAIL] serving p99 slowdown {'/'.join(map(str, key))}: "
+                f"{c_p99:.2f} vs baseline {b_p99:.2f} "
+                f"(limit +{P99_SLOWDOWN_TOL:.0%})"
+            )
+    if log_ratios:
+        geo = math.exp(sum(log_ratios) / len(log_ratios))
+        mark = "ok  " if geo >= 1.0 - tol else "FAIL"
+        print(
+            f"  [{mark}] serving events/sec vs baseline: {geo - 1.0:+.1%} "
+            f"(geometric mean over {len(log_ratios)} configurations)"
+        )
+        if geo < 1.0 - tol:
+            ok = False
+    if tail_failures:
+        print(
+            f"serving p99 slowdown regressed on {len(tail_failures)} "
+            "configuration(s) — gate FAILED"
+        )
+        ok = False
+    return ok
 
 
 def _check_audit_overhead(cur: dict) -> bool:
@@ -112,7 +216,8 @@ def main() -> int:
     if not CURRENT.exists():
         print(f"no current results at {CURRENT}; run sched_overhead.py first")
         return 1
-    cur = json.loads(CURRENT.read_text()).get("sched_overhead", {})
+    cur_doc = json.loads(CURRENT.read_text())
+    cur = cur_doc.get("sched_overhead", {})
     # the audit-overhead bound is in-run (paired instrumented vs plain
     # pass), so it applies even without a committed baseline
     audit_ok = _check_audit_overhead(cur)
@@ -123,8 +228,13 @@ def main() -> int:
         )
     if not BASELINE.exists():
         print(f"no committed baseline at {BASELINE}; baseline gate skipped")
-        return 0 if audit_ok else 1
-    base = json.loads(BASELINE.read_text()).get("sched_overhead", {})
+        serving_ok = _check_serving(cur_doc, {}, tol)
+        return 0 if (audit_ok and serving_ok) else 1
+    base_doc = json.loads(BASELINE.read_text())
+    base = base_doc.get("sched_overhead", {})
+    serving_ok = _check_serving(cur_doc, base_doc, tol)
+    if not serving_ok:
+        print("serving-load gate FAILED")
     cal_cur = cur.get("calibration_score") or 0.0
     cal_base = base.get("calibration_score") or 0.0
     if cal_cur <= 0 or cal_base <= 0:
@@ -163,13 +273,13 @@ def main() -> int:
             collapsed.append(key)
     if not log_ratios:
         print("no overlapping configurations between run and baseline")
-        return 0 if audit_ok else 1
+        return 0 if (audit_ok and serving_ok) else 1
     geo = math.exp(sum(log_ratios) / len(log_ratios))
     print(
         f"\naggregate events/sec vs baseline: {geo - 1.0:+.1%} "
         f"(geometric mean over {len(log_ratios)} configurations)"
     )
-    failed = not audit_ok
+    failed = not (audit_ok and serving_ok)
     if geo < 1.0 - tol:
         print(f"aggregate drop exceeds {tol:.0%} — gate FAILED")
         failed = True

@@ -1,0 +1,189 @@
+"""Open-loop serving benchmark: multi-tenant load on one live engine.
+
+Sweeps tenant count × arrival process × strategy over the mixed graph
+catalog (``repro.runtime.load.default_catalog``), driving every
+configuration through ``run_serving`` with incremental rescoring — the
+serving hot path this benchmark regression-gates.  Each row reports
+
+  * engine throughput (events/sec, wall seconds, rows built), and
+  * tenant-visible tails — p50/p99 makespan and slowdown vs the
+    empty-machine baseline, queueing delay, Jain fairness — plus the
+    admission counters,
+
+into the ``serving`` section of ``results/BENCH_sched.json`` (consumed by
+``check_sched_regression.py``).
+
+The **speedup probe** is the headline: at 256 tenants the
+same arrival stream is replayed twice in this one process — once with
+``rescore="full"`` (rebuild every row, every round: the naive O(R·M)
+baseline) and once with ``rescore="incremental"`` (dirty rows only) —
+both capped at the same event count, so the events/sec ratio isolates
+the scoring work the incremental cache elides.  The two modes place
+bit-for-bit identically (tests/test_load_property.py pins this), so the
+ratio is pure overhead, not a schedule change.
+
+Knobs: REPRO_BENCH_FAST=1 drops the 1024-tenant column.  The arrival
+rate is fixed at 2000 arrivals/sec — deep open-loop backlog at every
+swept tenant count, so the scheduler (not the load generator) is what
+gets measured.
+"""
+from __future__ import annotations
+
+import sys
+import time
+from pathlib import Path
+
+if __package__ in (None, ""):
+    _repo = Path(__file__).resolve().parents[1]
+    for p in (str(_repo), str(_repo / "src")):
+        if p not in sys.path:
+            sys.path.insert(0, p)
+
+from benchmarks.common import update_bench_json
+from benchmarks.sched_overhead import calibration_score
+
+TENANTS_FULL = (16, 64, 256, 1024)
+TENANTS_FAST = (16, 64, 256)
+ARRIVALS = ("poisson", "bursty", "diurnal")
+STRATEGIES = ("heft", "dada?alpha=0.5&use_cp=1", "wfq")
+# labels keep the regression key readable and stable across spec tweaks
+STRATEGY_LABELS = {
+    "heft": "heft",
+    "dada?alpha=0.5&use_cp=1": "dada(a)+cp",
+    "wfq": "wfq",
+}
+DEFAULT_RATE = 2000.0
+# speedup probe: both rescore modes replay this many events of the same
+# arrival stream — large enough that steady-state dirty-row behavior
+# dominates, small enough that the full-rescore pass stays affordable
+PROBE_EVENTS = 4000
+# the probe runs at a fixed 256 tenants (present in fast and full sweeps
+# alike): deep enough backlog that scoring dominates, small enough that
+# the ready pool fits the cache's sweet spot — at 1024 tenants the pool
+# itself (heap churn, dirty fan-out) eats into the win (≈2× vs ≈9×)
+PROBE_TENANTS = 256
+
+
+def serving_rows(tenant_counts, rate: float) -> list:
+    from repro.configs.paper_machine import paper_machine
+    from repro.runtime.load import make_arrivals, run_serving
+
+    machine = paper_machine(4)
+    rows = []
+    # slowdown denominators are per (strategy, kind): share them across
+    # the sweep so each is computed once
+    baselines = {spec: {} for spec in STRATEGIES}
+    for tenants in tenant_counts:
+        for arrival in ARRIVALS:
+            arr = make_arrivals(arrival, tenants, rate=rate, seed=7)
+            for spec in STRATEGIES:
+                label = STRATEGY_LABELS[spec]
+                # best-of-2: a transient stall must not record a phantom
+                # slowdown into the perf trajectory (simulated results
+                # are seeded — repetitions reproduce the same schedule)
+                dt = float("inf")
+                out = None
+                for _rep in range(2):
+                    t0 = time.perf_counter()
+                    out = run_serving(
+                        arr, machine, spec, seed=0,
+                        rescore="incremental",
+                        baselines=baselines[spec],
+                    )
+                    dt = min(dt, time.perf_counter() - t0)
+                rep = out["report"]
+                row = dict(
+                    tenants=tenants, arrival=arrival, strategy=label,
+                    rescore="incremental", rate=rate,
+                    wall_s=round(dt, 4), events=out["n_events"],
+                    events_per_s=(
+                        round(out["n_events"] / dt, 1) if dt > 0 else 0.0
+                    ),
+                    rows_built=out["rows_built"],
+                    n_admitted=out["n_admitted"],
+                    n_rejected=out["n_rejected"],
+                    p50_makespan=rep["p50_makespan"],
+                    p99_makespan=rep["p99_makespan"],
+                    p50_slowdown=rep["p50_slowdown"],
+                    p99_slowdown=rep["p99_slowdown"],
+                    p50_queue_delay=rep["p50_queue_delay"],
+                    p99_queue_delay=rep["p99_queue_delay"],
+                    mean_slowdown=rep["mean_slowdown"],
+                    jain_fairness=rep["jain_fairness"],
+                )
+                rows.append(row)
+                print(
+                    f"serving/{arrival}/{label}/tenants{tenants},"
+                    f"{dt * 1e6:.1f},"
+                    f"events_per_s={row['events_per_s']};"
+                    f"p99_slowdown={row['p99_slowdown']:.2f};"
+                    f"jain={row['jain_fairness']:.3f}"
+                )
+    return rows
+
+
+def speedup_probe(tenants: int, rate: float) -> dict:
+    """Full-rescore vs incremental events/sec on the same arrival stream,
+    same process, same event cap — the incremental-rescoring headline."""
+    from repro.configs.paper_machine import paper_machine
+    from repro.runtime.load import make_arrivals, run_serving
+
+    machine = paper_machine(4)
+    arr = make_arrivals("poisson", tenants, rate=rate, seed=7)
+    probe = {}
+    for mode in ("full", "incremental"):
+        dt = float("inf")
+        out = None
+        for _rep in range(2):
+            t0 = time.perf_counter()
+            out = run_serving(
+                arr, machine, "heft", seed=0,
+                rescore=mode, max_events=PROBE_EVENTS,
+            )
+            dt = min(dt, time.perf_counter() - t0)
+        probe[mode] = dict(
+            wall_s=round(dt, 4), events=out["n_events"],
+            events_per_s=round(out["n_events"] / dt, 1) if dt > 0 else 0.0,
+            rows_built=out["rows_built"],
+        )
+    full_ev = probe["full"]["events_per_s"]
+    incr_ev = probe["incremental"]["events_per_s"]
+    speedup = round(incr_ev / full_ev, 2) if full_ev > 0 else 0.0
+    result = dict(
+        tenants=tenants, arrival="poisson", strategy="heft",
+        max_events=PROBE_EVENTS, rate=rate,
+        full=probe["full"], incremental=probe["incremental"],
+        speedup=speedup,
+    )
+    print(
+        f"serving/speedup/tenants{tenants},"
+        f"{probe['incremental']['wall_s'] * 1e6:.1f},"
+        f"incremental={incr_ev};full={full_ev};speedup={speedup}x"
+    )
+    return result
+
+
+def main() -> dict:
+    from repro.sched import current_config
+
+    cfg = current_config()
+    fast = cfg.bench_fast
+    tenant_counts = list(TENANTS_FAST if fast else TENANTS_FULL)
+    rate = DEFAULT_RATE
+
+    print("name,us_per_call,derived")
+    rows = serving_rows(tenant_counts, rate)
+    probe = speedup_probe(PROBE_TENANTS, rate)
+    payload = dict(
+        config=dict(tenants=tenant_counts, arrivals=list(ARRIVALS),
+                    strategies=list(STRATEGY_LABELS.values()), rate=rate),
+        calibration_score=round(calibration_score(), 2),
+        rows=rows,
+        speedup=probe,
+    )
+    update_bench_json("serving", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Open-loop serving: 256 bursty tenants, WFQ vs HEFT tail behavior.
+
+The serving layer (``repro.runtime.load``) turns the engine into a
+trace-driven multi-tenant simulator: a seeded arrival process posts
+hundreds of small DAGs from the mixed catalog onto one machine, the
+incremental-rescoring scheduler (``rescore="incremental"``) keeps the
+hot path cheap, and the report rolls up tenant-visible tails — makespan
+slowdown vs an empty machine, queueing delay, Jain fairness.
+
+Here the same 256-tenant bursty arrival trace is replayed under plain
+HEFT (throughput-first, tenant-blind) and under WFQ (weighted fair
+queueing over virtual finish times): WFQ trades a little median latency
+for a fairer spread across tenants caught behind a burst.
+
+Run:  PYTHONPATH=src python examples/serving_sim.py
+"""
+from repro.configs.paper_machine import paper_machine
+from repro.runtime.load import make_arrivals, run_serving
+
+TENANTS = 256
+RATE = 2000.0  # arrivals/sec of simulated time: deep open-loop backlog
+
+machine = paper_machine(n_gpus=4)
+arrivals = make_arrivals("bursty", TENANTS, rate=RATE, seed=7)
+print(
+    f"{TENANTS} tenants, bursty arrivals over "
+    f"{max(a.t for a in arrivals):.3f}s of simulated time"
+)
+
+outs = {}
+for spec in ("heft", "wfq"):
+    outs[spec] = run_serving(
+        arrivals, machine, spec, seed=0, rescore="incremental"
+    )
+
+print(f"\n{'strategy':8s} {'p50 slow':>9s} {'p99 slow':>9s} "
+      f"{'p99 queue':>10s} {'jain':>6s} {'events':>7s}")
+for spec, out in outs.items():
+    rep = out["report"]
+    print(
+        f"{spec:8s} {rep['p50_slowdown']:9.2f} {rep['p99_slowdown']:9.2f} "
+        f"{rep['p99_queue_delay']:10.4f} {rep['jain_fairness']:6.3f} "
+        f"{out['n_events']:7d}"
+    )
+
+heft, wfq = outs["heft"]["report"], outs["wfq"]["report"]
+assert all(len(out["tenants"]) == TENANTS for out in outs.values()), (
+    "every tenant must finish (no admission control in this example)"
+)
+assert wfq["jain_fairness"] > heft["jain_fairness"], (
+    "WFQ must spread burst pain more evenly than tenant-blind HEFT"
+)
+print(
+    f"\nWFQ fairness {wfq['jain_fairness']:.3f} vs HEFT "
+    f"{heft['jain_fairness']:.3f}; "
+    f"p99 slowdown {wfq['p99_slowdown']:.1f} vs {heft['p99_slowdown']:.1f}"
+)
+print("OK")

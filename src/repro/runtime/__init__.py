@@ -19,8 +19,21 @@ layers (each owning one concern, each independently testable):
     evacuation, seeded churn;
   * :mod:`~repro.runtime.traces`    — NEW: JSONL preemption-trace replay
     (the varuna-style spot-instance shape);
+  * :mod:`~repro.runtime.load`      — NEW: open-loop serving load —
+    seeded arrival generators (Poisson / bursty / diurnal), the JSONL
+    arrival-trace format, the mixed graph catalog and the
+    :func:`run_serving` driver;
+  * :mod:`~repro.runtime.rescore`   — NEW: the serving hot path —
+    persistent ready pool with dirty-row incremental rescoring
+    (``REPRO_SCHED_RESCORE``);
   * :mod:`~repro.runtime.metrics`   — counters, intervals,
-    :class:`SimResult` and the recovery report.
+    :class:`SimResult`, the recovery report and the serving p50/p99 +
+    fairness aggregates.
+
+The fault-trace helpers keep the unqualified ``load_trace``/``save_trace``
+names they shipped with; the arrival-trace equivalents are exported as
+``load_arrival_trace``/``save_arrival_trace`` (inside ``repro.runtime.load``
+they are plain ``load_trace``/``save_trace``, mirroring ``traces.py``).
 
 ``repro.core.Simulator`` remains the single-graph facade over
 :class:`Engine` and is bit-for-bit identical to the pre-decomposition
@@ -43,13 +56,34 @@ import repro.core  # noqa: F401  (deliberate cycle-breaking import)
 from .engine import Engine, GraphContext, Strategy
 from .events import EventQueue
 from .faults import FaultManager
+from .load import (
+    ADMISSION_MODES,
+    ARRIVAL_PROCESSES,
+    Arrival,
+    default_catalog,
+    make_arrivals,
+    run_serving,
+)
+from .load import load_trace as load_arrival_trace
+from .load import save_trace as save_arrival_trace
 from .memory import MemoryManager, predicted_eviction_bytes
-from .metrics import Metrics, ScheduledInterval, SimResult, recovery_report
+from .metrics import (
+    Metrics,
+    ScheduledInterval,
+    SimResult,
+    jain_fairness,
+    recovery_report,
+    serving_report,
+)
 from .queues import Worker, WorkSteal, eligible_victims
+from .rescore import RESCORE_MODES, ServingScheduler
 from .traces import FAULT_EVENTS, FAULT_MODES, FaultEvent, load_trace, save_trace
 from .transfers import TransferEngine
 
 __all__ = [
+    "ADMISSION_MODES",
+    "ARRIVAL_PROCESSES",
+    "Arrival",
     "Engine",
     "EventQueue",
     "FAULT_EVENTS",
@@ -59,15 +93,24 @@ __all__ = [
     "GraphContext",
     "MemoryManager",
     "Metrics",
+    "RESCORE_MODES",
     "ScheduledInterval",
+    "ServingScheduler",
     "SimResult",
     "Strategy",
     "TransferEngine",
     "Worker",
     "WorkSteal",
+    "default_catalog",
     "eligible_victims",
+    "jain_fairness",
+    "load_arrival_trace",
     "load_trace",
+    "make_arrivals",
     "predicted_eviction_bytes",
     "recovery_report",
+    "run_serving",
+    "save_arrival_trace",
     "save_trace",
+    "serving_report",
 ]

@@ -57,9 +57,11 @@ from repro.core.perfmodel import (
 
 from .events import EventQueue
 from .faults import FaultManager
+from .load import ADMISSION_MODES
 from .memory import MemoryManager
 from .metrics import Metrics, ScheduledInterval, SimResult
 from .queues import Worker, eligible_victims
+from .rescore import RESCORE_MODES, ServingScheduler
 from .traces import FAULT_EVENTS, FAULT_MODES, load_trace
 from .transfers import TransferEngine
 
@@ -88,6 +90,8 @@ class GraphContext:
         "noise_mult", "preds", "succ", "done", "n_done", "n_tasks",
         "rid_static", "predictors", "submit_at", "finish", "intervals",
         "data_version", "readers_left", "attempt",
+        "priority", "ws_bytes", "arrived", "admitted", "rejected",
+        "admit_at",
     )
 
     def __init__(self, gid: int, graph: TaskGraph) -> None:
@@ -118,6 +122,16 @@ class GraphContext:
         # the running task: the already-posted "done" event of the aborted
         # execution is recognized as stale by its recorded attempt
         self.attempt: List[int] = [0] * len(graph)
+        # serving-mode tenancy state (repro.runtime.load): priority feeds
+        # the fairness policies, ws_bytes the admission controller; the
+        # arrival/admission flags are only ever set in Engine._arrive, so
+        # default-loop runs never touch them
+        self.priority = 1.0
+        self.ws_bytes = int(self.arrays.data_sizes.sum())
+        self.arrived = False
+        self.admitted = False
+        self.rejected = False
+        self.admit_at = 0.0
 
 
 class Engine:
@@ -149,6 +163,9 @@ class Engine:
         retry_max: Optional[int] = None,
         backoff_s: Optional[float] = None,
         audit: Optional[bool] = None,
+        rescore: Optional[str] = None,
+        admission: Optional[str] = None,
+        admit_defer_s: Optional[float] = None,
     ) -> None:
         self.machine = machine
         self.strategy = strategy
@@ -262,6 +279,55 @@ class Engine:
             )
         self.transfers.audit = self.audit
 
+        # serving mode (repro.runtime.rescore / repro.runtime.load):
+        # a persistent ready pool with incremental dirty-row rescoring
+        # replaces per-activation strategy.place, plus admission control
+        # at arrival. rescore="off" (the default) leaves the classic
+        # run loop — and its bit-for-bit contract — completely untouched.
+        if rescore is None:
+            rescore = cfg.rescore
+        if admission is None:
+            admission = cfg.admission
+        if admit_defer_s is None:
+            admit_defer_s = cfg.admit_defer_s
+        if rescore not in RESCORE_MODES:
+            raise ValueError(
+                f"rescore mode must be one of {RESCORE_MODES}, got {rescore!r}"
+            )
+        if admission not in ADMISSION_MODES:
+            raise ValueError(
+                f"admission mode must be one of {ADMISSION_MODES}, "
+                f"got {admission!r}"
+            )
+        self._serving: Optional[ServingScheduler] = None
+        if rescore != "off":
+            if strategy.allow_steal:
+                raise ValueError(
+                    f"serving mode (rescore={rescore!r}) places from the "
+                    "shared ready pool; work-stealing strategies "
+                    f"({strategy.name!r}) are not supported there"
+                )
+            self._serving = ServingScheduler(rescore)
+        self._admission = admission
+        if admission != "none" and self._serving is None:
+            raise ValueError(
+                f"admission={admission!r} requires serving mode "
+                "(rescore='full' or 'incremental'); the classic loop "
+                "activates every submitted graph unconditionally"
+            )
+        if not (float(admit_defer_s) > 0.0):
+            raise ValueError(
+                f"admit_defer_s must be > 0, got {admit_defer_s!r}"
+            )
+        self._admit_defer_s = float(admit_defer_s)
+        # admission accounting: predicted working-set bytes of admitted,
+        # unfinished graphs vs the total device capacity
+        self._active_ws = 0
+        n_dev = len({r.mem for r in machine.resources if r.mem != HOST_MEM})
+        self._mem_total = self.memory.capacity * n_dev
+        # optional per-tenant fairness hooks on the strategy (wfq)
+        self._retire = getattr(strategy, "retire_tenant", None)
+
         # submitted graphs
         self._ctxs: List[GraphContext] = []
         self._ctx_of: Dict[int, GraphContext] = {}  # id(task) -> context
@@ -309,14 +375,23 @@ class Engine:
         return self.metrics.intervals
 
     # ------------------------------------------------------------------
-    def submit(self, graph: TaskGraph, at: Optional[float] = None) -> GraphContext:
+    def submit(
+        self,
+        graph: TaskGraph,
+        at: Optional[float] = None,
+        priority: float = 1.0,
+    ) -> GraphContext:
         """Add a task graph to the run (multi-tenant streaming).
 
         Before ``run()`` the graph's roots are placed when the run starts;
         with ``at`` (or mid-run) the arrival is an event at that simulated
-        time, so tenant DAGs stream into a live machine. Returns the
-        graph's :class:`GraphContext` (its per-graph result handle).
+        time, so tenant DAGs stream into a live machine. ``priority``
+        (> 0) weights the tenant for priority/weighted-fair policies and
+        is ignored by the classic strategies. Returns the graph's
+        :class:`GraphContext` (its per-graph result handle).
         """
+        if not (float(priority) > 0.0):
+            raise ValueError(f"priority must be > 0, got {priority!r}")
         if graph.tasks and id(graph.tasks[0]) in self._ctx_of:
             raise ValueError(
                 "this TaskGraph object is already submitted to the engine; "
@@ -332,11 +407,14 @@ class Engine:
             ctx.noise_mult = np.exp(
                 self.rng.normal(0.0, self.noise, size=len(graph))
             ).tolist()
+        ctx.priority = float(priority)
         ctx.rid_static = [
             self._predictor(ctx, r.cls).static_list
             for r in self.machine.resources
         ]
         self.memory.attach_ctx(ctx)
+        if self._serving is not None:
+            self._serving.watch_ctx(ctx)
         ctx_of = self._ctx_of
         for t in graph.tasks:
             ctx_of[id(t)] = ctx
@@ -348,9 +426,12 @@ class Engine:
             self.events.post(at, "submit", ctx)
         elif self._running:
             ctx.submit_at = self.now
-            self._activate_roots(ctx)
-            if self._steal_on:
-                self._steal_round()
+            if self._serving is not None:
+                self._arrive(ctx)
+            else:
+                self._activate_roots(ctx)
+                if self._steal_on:
+                    self._steal_round()
         else:
             ctx.submit_at = max(0.0, at if at is not None else 0.0)
             self._pending.append(ctx)
@@ -658,20 +739,80 @@ class Engine:
                 newly_ready.append(tasks[s])
         if ctx.n_done == ctx.n_tasks:
             ctx.finish = self.now
+            if self._serving is not None:
+                self._graph_finished(ctx)
         if newly_ready:
             # the *activate* operation — where scheduling decisions happen
-            self._set_ctx(ctx)
-            self.strategy.place(self, newly_ready, rid)
+            self._place_ready(ctx, newly_ready, rid)
         self._try_start(w)
         if self._steal_on:
             self._steal_round()
 
     # ------------------------------------------------------------------
+    def _place_ready(
+        self, ctx: GraphContext, ready: List[Task], src: Optional[int]
+    ) -> None:
+        """Route an activation: the strategy's ``place`` (classic loop)
+        or the serving pool (rescore mode). The one seam every
+        newly-ready task flows through."""
+        if self._serving is not None:
+            self._serving.add_ready(self, ctx, ready)
+        else:
+            self._set_ctx(ctx)
+            self.strategy.place(self, ready, src)
+
     def _activate_roots(self, ctx: GraphContext) -> None:
         roots = ctx.graph.roots()
         if roots:
-            self._set_ctx(ctx)
-            self.strategy.place(self, roots, None)
+            self._place_ready(ctx, roots, None)
+
+    # ------------------------------------------------------------------
+    # serving mode: arrivals, admission control, tenant teardown
+    def _graph_finished(self, ctx: GraphContext) -> None:
+        if self._admission != "none" and ctx.admitted:
+            self._active_ws -= ctx.ws_bytes
+        if self._retire is not None:
+            self._retire(ctx)
+
+    def _arrive(self, ctx: GraphContext) -> None:
+        """A tenant graph arrives at ``self.now`` (serving mode only):
+        log the arrival once, run admission control, then activate."""
+        audit = self.audit
+        if not ctx.arrived:
+            ctx.arrived = True
+            self.metrics.n_arrivals += 1
+            if audit is not None:
+                audit.log_arrival(ctx.gid, ctx.submit_at)
+        if self._admission != "none" and self._bounded:
+            ws = ctx.ws_bytes
+            total = self._mem_total
+            if ws > total:
+                # can never fit, under any interleaving: reject outright
+                # (defer would retry forever)
+                ctx.rejected = True
+                self.metrics.n_rejected += 1
+                if audit is not None:
+                    audit.log_reject(ctx.gid, self.now, "too_large")
+                return
+            if self._active_ws + ws > total:
+                if self._admission == "defer":
+                    self.metrics.n_deferred += 1
+                    self.events.post(
+                        self.now + self._admit_defer_s, "submit", ctx
+                    )
+                else:
+                    ctx.rejected = True
+                    self.metrics.n_rejected += 1
+                    if audit is not None:
+                        audit.log_reject(ctx.gid, self.now, "pressure")
+                return
+            self._active_ws += ws
+        ctx.admitted = True
+        ctx.admit_at = self.now
+        self.metrics.n_admitted += 1
+        if audit is not None:
+            audit.log_admit(ctx.gid, self.now)
+        self._activate_roots(ctx)
 
     def _run_loop(self) -> None:
         self._running = True
@@ -795,8 +936,129 @@ class Engine:
             audit.finalize(self)
         self._check_complete()
 
+    def _run_loop_serving(self, max_events: Optional[int] = None) -> bool:
+        """Serving-mode run loop: same-timestamp event batching plus one
+        placement round per batch over the shared ready pool.
+
+        Events of one simulated instant are drained together and the
+        :class:`~repro.runtime.rescore.ServingScheduler` round runs once
+        per distinct timestamp — one rescoring pass per instant instead
+        of one per event.  Returns ``True`` when ``max_events`` capped
+        the run (throughput probes measure a fixed amount of work);
+        capped runs skip audit finalization and the completeness check.
+        """
+        serving = self._serving
+        self._running = True
+        self.strategy.init(self)
+        self.faults.schedule_churn(self)
+        pending, self._pending = self._pending, []
+        for ctx in pending:
+            self._arrive(ctx)
+        serving.round(self)
+        events = self.events.heap
+        heappop = heapq.heappop
+        workers = self.workers
+        bounded = self._bounded
+        cancel_stale = self._cancel_stale
+        faults = self.faults
+        audit = self.audit
+        n_events = 0
+        capped = False
+        while events and not capped:
+            t = events[0][0]
+            self.now = t
+            while events and events[0][0] == t:
+                _, _, kind, payload = heappop(events)
+                n_events += 1
+                if kind == "xfer":
+                    ctx, name, mem, ver, epoch = payload
+                    inflight = ctx.inflight
+                    flights = inflight.get(name)
+                    if flights is not None:
+                        flights.pop(mem, None)
+                        if not flights:
+                            del inflight[name]
+                    if bounded and mem != HOST_MEM:
+                        self.memory.release(ctx, name, mem)
+                    if self._faults_on and mem != HOST_MEM and (
+                        mem in faults.dead_mems
+                        or epoch != faults.mem_epoch.get(mem, 0)
+                    ):
+                        if audit is not None:
+                            audit.log_landing(
+                                ctx.gid, name, mem, t, False, "dead"
+                            )
+                    elif cancel_stale and ver != ctx.data_version.get(name, 0):
+                        if audit is not None:
+                            audit.log_landing(
+                                ctx.gid, name, mem, t, False, "stale"
+                            )
+                    else:
+                        if bounded and mem != HOST_MEM:
+                            did = ctx.arrays.name_to_id.get(name)
+                            if did is not None and not (
+                                ctx.residency.mask_list[did]
+                                & (1 << (mem + 1))
+                            ):
+                                self.memory.ensure_capacity(
+                                    mem,
+                                    ctx.residency._sizes[did],
+                                    t,
+                                    ctx,
+                                    (did,),
+                                )
+                        ctx.residency.add_copy(name, mem)
+                        if audit is not None:
+                            audit.log_landing(ctx.gid, name, mem, t, True, "ok")
+                    waiters = ctx.waiting.pop((name, mem), None)
+                    if waiters:
+                        if bounded and mem != HOST_MEM:
+                            did = ctx.arrays.name_to_id.get(name)
+                        for rid in waiters:
+                            w = workers[rid]
+                            if w.blocked_on > 0:
+                                w.blocked_on -= 1
+                                if (
+                                    bounded
+                                    and mem != HOST_MEM
+                                    and did is not None
+                                    and w.pins is not None
+                                    and w.pins[0] == mem
+                                    and w.pins[2] is ctx
+                                    and w.blocked_on > 0
+                                ):
+                                    self.memory.pin(ctx, did, mem)
+                                    w.pins[1].append(did)
+                                if w.blocked_on == 0:
+                                    self._try_start(w)
+                elif kind == "done":
+                    rid, ctx, tid, dur, att = payload
+                    if att == ctx.attempt[tid]:
+                        self._complete(rid, ctx, tid, dur)
+                elif kind == "fault":
+                    action, rid, mode = payload
+                    faults.handle(self, action, rid, mode)
+                    # worker liveness / memory epochs moved: every cached
+                    # row's eligible set is suspect — coarse invalidation
+                    serving.epoch += 1
+                else:  # "submit": a streamed tenant graph arrives
+                    self._arrive(payload)
+                if max_events is not None and n_events >= max_events:
+                    capped = True
+                    break
+            serving.round(self)
+        self.metrics.n_events = n_events
+        if capped:
+            return True
+        if audit is not None:
+            audit.finalize(self)
+        self._check_complete()
+        return False
+
     def _check_complete(self) -> None:
         for ctx in self._ctxs:
+            if getattr(ctx, "rejected", False):
+                continue  # admission control turned this tenant away
             if ctx.n_done != ctx.n_tasks:
                 missing = [
                     t.tid for t in ctx.graph.tasks if not ctx.done[t.tid]
@@ -817,7 +1079,12 @@ class Engine:
         for iv in ctx.intervals:
             busy[iv.rid] += iv.end - iv.start
         return SimResult(
-            makespan=ctx.finish - ctx.submit_at,
+            makespan=(ctx.finish - ctx.submit_at) if not ctx.rejected else 0.0,
+            submit_at=ctx.submit_at,
+            admit_at=(
+                ctx.admit_at if self._serving is not None else ctx.submit_at
+            ),
+            admitted=not ctx.rejected,
             # transfer/steal counters are machine-global (links and queues
             # are shared across tenant graphs)
             total_bytes=self.metrics.total_bytes,
@@ -835,8 +1102,23 @@ class Engine:
             ),
         )
 
-    def run(self) -> List[SimResult]:
+    def run(self, max_events: Optional[int] = None) -> List[SimResult]:
         """Run every submitted graph to completion; one result per graph
-        (submit order), with per-graph makespans and interval timelines."""
-        self._run_loop()
+        (submit order), with per-graph makespans and interval timelines.
+
+        ``max_events`` (serving mode only) caps the number of processed
+        events — throughput probes measure a fixed amount of work — and
+        returns ``[]``, since per-graph results are meaningless for a
+        truncated run."""
+        if self._serving is not None:
+            capped = self._run_loop_serving(max_events)
+            if capped:
+                return []
+        else:
+            if max_events is not None:
+                raise ValueError(
+                    "max_events requires serving mode "
+                    "(rescore='full' or 'incremental')"
+                )
+            self._run_loop()
         return [self._graph_result(ctx) for ctx in self._ctxs]

@@ -13,7 +13,7 @@ the same order the monolithic simulator fired them.
 from __future__ import annotations
 
 import heapq
-from typing import Any, List, Tuple
+from typing import Any, List, Optional, Tuple
 
 Event = Tuple[float, int, str, Any]
 
@@ -36,6 +36,16 @@ class EventQueue:
         """Schedule ``(kind, payload)`` at simulated time ``t``."""
         self.seq += 1
         heapq.heappush(self.heap, (t, self.seq, kind, payload))
+
+    def next_time(self) -> Optional[float]:
+        """Timestamp of the earliest pending event (``None`` when empty).
+
+        The serving loop's same-timestamp batching reads this to drain
+        every event of one simulated instant before running a single
+        placement round over the merged ready pool — one rescoring pass
+        per distinct time instead of one per event.
+        """
+        return self.heap[0][0] if self.heap else None
 
     def __len__(self) -> int:
         return len(self.heap)

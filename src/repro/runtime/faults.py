@@ -409,8 +409,7 @@ class FaultManager:
                     by_ctx.append(bucket)
                 bucket[1].append(task)
             for ctx, tasks in by_ctx:
-                engine._set_ctx(ctx)
-                engine.strategy.place(engine, tasks, None)
+                engine._place_ready(ctx, tasks, None)
         if engine._steal_on:
             engine._steal_round()
         self._notify(engine, "detach", rid, mode)

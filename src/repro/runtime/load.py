@@ -1,0 +1,406 @@
+"""Open-loop serving load: seeded arrival generators + JSONL arrival traces.
+
+The multi-tenant measurement layer: thousands of tenant DAGs stream into a
+live :class:`~repro.runtime.engine.Engine` as an *open-loop* arrival
+process (arrivals do not wait for completions — the serving regime where
+placement overhead actually matters).  Three seeded generators cover the
+canonical shapes:
+
+  * ``poisson``  — memoryless arrivals at a constant rate;
+  * ``bursty``   — an on/off modulated process: tight intra-burst gaps,
+    long off periods (flash crowds);
+  * ``diurnal``  — a sinusoidally modulated rate, sampled by thinning
+    (the day/night load curve, compressed).
+
+Arrival traces share the JSONL shape discipline of
+:mod:`repro.runtime.traces`: one object per line
+(``{"t": <seconds>, "kind": <catalog key>, "tenant": <id>,
+"priority": <float, optional>}``), blank/comment lines skipped, and any
+malformed line rejected with a ``path:lineno`` error — a truncated or
+hand-edited trace must not silently replay half a workload.
+
+``run_serving`` is the one-call driver: it submits every arrival against a
+mixed graph-size catalog, runs the engine (optionally with incremental
+rescoring and admission control), and reports per-tenant makespan,
+slowdown versus the empty-machine baseline, queueing delay and the
+p50/p99 + Jain fairness aggregates from :mod:`repro.runtime.metrics`.
+"""
+from __future__ import annotations
+
+import json
+import math
+from dataclasses import dataclass
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Union
+
+import numpy as np
+
+ARRIVAL_PROCESSES = ("poisson", "bursty", "diurnal")
+ADMISSION_MODES = ("none", "reject", "defer")
+
+# sub-stream tags: each generator owns a disjoint seeded stream, so e.g.
+# poisson(seed=0) and bursty(seed=0) never alias
+_POISSON_STREAM = 0x10AD01
+_BURSTY_STREAM = 0x10AD02
+_DIURNAL_STREAM = 0x10AD03
+_KIND_STREAM = 0x10AD04
+
+
+@dataclass(frozen=True)
+class Arrival:
+    """One tenant arrival: (when, which graph kind, who, how important)."""
+
+    t: float
+    kind: str
+    tenant: int
+    priority: float = 1.0
+
+    def __post_init__(self) -> None:
+        if not (self.t >= 0.0):
+            raise ValueError(f"arrival time must be >= 0, got {self.t!r}")
+        if not isinstance(self.kind, str) or not self.kind:
+            raise ValueError(
+                f"arrival kind must be a non-empty string, got {self.kind!r}"
+            )
+        if self.tenant < 0:
+            raise ValueError(f"arrival tenant must be >= 0, got {self.tenant!r}")
+        if not (self.priority > 0.0):
+            raise ValueError(
+                f"arrival priority must be > 0, got {self.priority!r}"
+            )
+
+
+# ---------------------------------------------------------------------------
+# JSONL round-trip (the traces.py shape discipline)
+
+
+def _parse_entry(obj, where: str) -> Arrival:
+    if not isinstance(obj, dict):
+        raise ValueError(
+            f"{where}: expected a JSON object, got {type(obj).__name__}"
+        )
+    unknown = set(obj) - {"t", "kind", "tenant", "priority"}
+    if unknown:
+        raise ValueError(f"{where}: unknown trace field(s) {sorted(unknown)}")
+    try:
+        t = obj["t"]
+        kind = obj["kind"]
+        tenant = obj["tenant"]
+    except KeyError as e:
+        raise ValueError(f"{where}: missing required field {e.args[0]!r}") from None
+    if isinstance(t, bool) or not isinstance(t, (int, float)):
+        raise ValueError(f"{where}: 't' must be a number, got {t!r}")
+    if not isinstance(kind, str):
+        raise ValueError(f"{where}: 'kind' must be a string, got {kind!r}")
+    if isinstance(tenant, bool) or not isinstance(tenant, int):
+        raise ValueError(f"{where}: 'tenant' must be an integer, got {tenant!r}")
+    priority = obj.get("priority")
+    if priority is not None and (
+        isinstance(priority, bool) or not isinstance(priority, (int, float))
+    ):
+        raise ValueError(
+            f"{where}: 'priority' must be a number, got {priority!r}"
+        )
+    try:
+        return Arrival(
+            float(t), kind, tenant,
+            1.0 if priority is None else float(priority),
+        )
+    except ValueError as e:
+        raise ValueError(f"{where}: {e}") from None
+
+
+def load_trace(path: str) -> List[Arrival]:
+    """Parse a JSONL arrival trace, sorted by (time, tenant) (stable).
+
+    Raises ``ValueError`` with the file and line number on the first
+    malformed line.
+    """
+    arrivals: List[Arrival] = []
+    with open(path, "r", encoding="utf-8") as fh:
+        for lineno, line in enumerate(fh, start=1):
+            line = line.strip()
+            if not line or line.startswith("#"):
+                continue
+            where = f"{path}:{lineno}"
+            try:
+                obj = json.loads(line)
+            except json.JSONDecodeError as e:
+                raise ValueError(f"{where}: invalid JSON ({e.msg})") from None
+            arrivals.append(_parse_entry(obj, where))
+    arrivals.sort(key=lambda a: (a.t, a.tenant))
+    return arrivals
+
+
+def save_trace(
+    arrivals: Iterable[Union[Arrival, Sequence]], path: str
+) -> None:
+    """Write arrivals as a JSONL trace (the :func:`load_trace` inverse).
+
+    Accepts :class:`Arrival` instances or ``(t, kind, tenant[, priority])``
+    sequences. The default priority is omitted on disk, so traces without
+    priorities round-trip byte-compatibly.
+    """
+    with open(path, "w", encoding="utf-8") as fh:
+        for a in arrivals:
+            if not isinstance(a, Arrival):
+                a = Arrival(*a)
+            obj = {"t": a.t, "kind": a.kind, "tenant": a.tenant}
+            if a.priority != 1.0:
+                obj["priority"] = a.priority
+            fh.write(json.dumps(obj) + "\n")
+
+
+# ---------------------------------------------------------------------------
+# seeded open-loop generators
+
+
+def _rng(seed: int, stream: int) -> np.random.Generator:
+    return np.random.default_rng((int(seed) & 0xFFFFFFFF, stream))
+
+
+def poisson_arrival_times(n: int, rate: float, seed: int = 0) -> np.ndarray:
+    """``n`` arrival times of a homogeneous Poisson process at ``rate``
+    arrivals per simulated second (exponential inter-arrival gaps)."""
+    if n < 0:
+        raise ValueError(f"n must be >= 0, got {n}")
+    if not (rate > 0.0):
+        raise ValueError(f"rate must be > 0, got {rate!r}")
+    gaps = _rng(seed, _POISSON_STREAM).exponential(1.0 / rate, size=n)
+    return np.cumsum(gaps)
+
+
+def bursty_arrival_times(
+    n: int,
+    rate: float,
+    seed: int = 0,
+    burst: int = 8,
+    duty: float = 0.25,
+) -> np.ndarray:
+    """``n`` arrival times of an on/off (interrupted Poisson) process.
+
+    Geometric bursts of mean size ``burst`` arrive back-to-back at the
+    fast *on* rate ``rate / duty``; between bursts the source goes quiet
+    long enough that the long-run average rate is still ``rate``. Smaller
+    ``duty`` = spikier load at the same average throughput.
+    """
+    if n < 0:
+        raise ValueError(f"n must be >= 0, got {n}")
+    if not (rate > 0.0):
+        raise ValueError(f"rate must be > 0, got {rate!r}")
+    if burst < 1:
+        raise ValueError(f"burst must be >= 1, got {burst}")
+    if not (0.0 < duty <= 1.0):
+        raise ValueError(f"duty must be in (0, 1], got {duty!r}")
+    rng = _rng(seed, _BURSTY_STREAM)
+    on_rate = rate / duty
+    # mean off gap sized so the cycle average matches `rate`:
+    # burst arrivals per cycle, cycle length = burst/on_rate + off_gap
+    off_gap = burst * (1.0 / rate - 1.0 / on_rate)
+    times: List[float] = []
+    t = 0.0
+    while len(times) < n:
+        size = 1 + rng.geometric(1.0 / burst)
+        gaps = rng.exponential(1.0 / on_rate, size=size)
+        for g in gaps:
+            t += float(g)
+            times.append(t)
+            if len(times) == n:
+                break
+        t += float(rng.exponential(off_gap))
+    return np.asarray(times, dtype=np.float64)
+
+
+def diurnal_arrival_times(
+    n: int,
+    rate: float,
+    seed: int = 0,
+    period: float = 1.0,
+    depth: float = 0.9,
+) -> np.ndarray:
+    """``n`` arrival times of a sinusoidally modulated Poisson process.
+
+    Instantaneous rate ``λ(t) = rate · (1 + depth · sin(2πt/period))``,
+    sampled by thinning against the peak rate — the compressed day/night
+    curve. ``depth`` in [0, 1) sets how deep the troughs go.
+    """
+    if n < 0:
+        raise ValueError(f"n must be >= 0, got {n}")
+    if not (rate > 0.0):
+        raise ValueError(f"rate must be > 0, got {rate!r}")
+    if not (period > 0.0):
+        raise ValueError(f"period must be > 0, got {period!r}")
+    if not (0.0 <= depth < 1.0):
+        raise ValueError(f"depth must be in [0, 1), got {depth!r}")
+    rng = _rng(seed, _DIURNAL_STREAM)
+    peak = rate * (1.0 + depth)
+    times: List[float] = []
+    t = 0.0
+    while len(times) < n:
+        t += float(rng.exponential(1.0 / peak))
+        lam = rate * (1.0 + depth * math.sin(2.0 * math.pi * t / period))
+        if rng.random() * peak <= lam:
+            times.append(t)
+    return np.asarray(times, dtype=np.float64)
+
+
+def make_arrivals(
+    process: str,
+    n: int,
+    rate: float = 50.0,
+    seed: int = 0,
+    kinds: Optional[Sequence[str]] = None,
+    priorities: Sequence[float] = (1.0,),
+    **kwargs,
+) -> List[Arrival]:
+    """``n`` tenant arrivals from the named process, with graph kinds and
+    priorities drawn from their own seeded stream (so the same seed gives
+    the same tenant mix under every arrival process)."""
+    if process == "poisson":
+        times = poisson_arrival_times(n, rate, seed, **kwargs)
+    elif process == "bursty":
+        times = bursty_arrival_times(n, rate, seed, **kwargs)
+    elif process == "diurnal":
+        times = diurnal_arrival_times(n, rate, seed, **kwargs)
+    else:
+        raise ValueError(
+            f"arrival process must be one of {ARRIVAL_PROCESSES}, "
+            f"got {process!r}"
+        )
+    if kinds is None:
+        kinds = tuple(sorted(default_catalog()))
+    rng = _rng(seed, _KIND_STREAM)
+    kind_ix = rng.integers(len(kinds), size=n)
+    prio_ix = rng.integers(len(priorities), size=n)
+    return [
+        Arrival(
+            float(times[i]),
+            kinds[int(kind_ix[i])],
+            i,
+            float(priorities[int(prio_ix[i])]),
+        )
+        for i in range(n)
+    ]
+
+
+# ---------------------------------------------------------------------------
+# graph catalog + the serving driver
+
+
+def default_catalog() -> Dict[str, Callable[[], object]]:
+    """The mixed graph-size catalog tenants draw from: small dense-linalg
+    DAGs (5–30 tasks), sized so thousand-tenant sweeps stay tractable."""
+    from repro.linalg.cholesky import cholesky_graph
+    from repro.linalg.lu import lu_graph
+    from repro.linalg.qr import qr_graph
+
+    return {
+        "chol2": lambda: cholesky_graph(2, 256, with_fns=False),
+        "chol4": lambda: cholesky_graph(4, 256, with_fns=False),
+        "lu3": lambda: lu_graph(3, 256, with_fns=False),
+        "qr3": lambda: qr_graph(3, 256, with_fns=False),
+    }
+
+
+def run_serving(
+    arrivals: Sequence[Arrival],
+    machine=None,
+    strategy: Union[str, object] = "heft",
+    *,
+    seed: int = 0,
+    noise: float = 0.0,
+    rescore: str = "incremental",
+    admission: str = "none",
+    mem_capacity: Optional[int] = None,
+    catalog: Optional[Dict[str, Callable[[], object]]] = None,
+    audit: Optional[bool] = None,
+    max_events: Optional[int] = None,
+    baselines: Optional[Dict[str, float]] = None,
+) -> Dict[str, object]:
+    """Drive one serving run: submit every arrival, run, report.
+
+    Arrivals are submitted in canonical ``(t, tenant)`` order, so a
+    permuted arrival list produces a bit-identical run (the permutation-
+    stability property tests rely on this). ``baselines`` optionally
+    memoizes the per-kind empty-machine makespans across calls (the
+    slowdown denominators); pass a shared dict when sweeping.
+    """
+    from repro.runtime.engine import Engine
+    from repro.sched import resolve
+
+    from .metrics import serving_report
+
+    if machine is None:
+        from repro.configs.paper_machine import paper_machine
+
+        machine = paper_machine(4)
+    catalog = default_catalog() if catalog is None else catalog
+    spec = strategy if isinstance(strategy, str) else None
+    strat = resolve(strategy) if isinstance(strategy, str) else strategy
+    engine = Engine(
+        machine, strat, seed=seed, noise=noise, rescore=rescore,
+        admission=admission, mem_capacity=mem_capacity, audit=audit,
+    )
+    ordered = sorted(arrivals, key=lambda a: (a.t, a.tenant))
+    ctxs = []
+    for a in ordered:
+        builder = catalog.get(a.kind)
+        if builder is None:
+            raise ValueError(
+                f"arrival kind {a.kind!r} not in catalog "
+                f"(known: {sorted(catalog)})"
+            )
+        ctxs.append(
+            (a, engine.submit(builder(), at=a.t, priority=a.priority))
+        )
+    results = engine.run(max_events=max_events)
+
+    # empty-machine baselines per kind: the slowdown denominator
+    # (skipped for event-capped throughput probes — no tenant finishes
+    # are reported from a truncated run)
+    if baselines is None:
+        baselines = {}
+    if max_events is None:
+        for a, _ctx in ctxs:
+            if a.kind not in baselines:
+                base = Engine(
+                    machine, resolve(spec or "heft"), seed=seed, noise=0.0
+                )
+                base.submit(catalog[a.kind]())
+                baselines[a.kind] = base.run()[0].makespan
+
+    tenants: List[Dict[str, float]] = []
+    for a, ctx in ctxs:
+        if max_events is not None:
+            break
+        if ctx.rejected or ctx.n_done != ctx.n_tasks:
+            continue
+        makespan = ctx.finish - ctx.submit_at
+        base = baselines[a.kind]
+        first_start = min(iv.start for iv in ctx.intervals)
+        tenants.append(
+            {
+                "tenant": a.tenant,
+                "kind": a.kind,
+                "priority": a.priority,
+                "submit_at": ctx.submit_at,
+                "admit_at": ctx.admit_at,
+                "makespan": makespan,
+                "slowdown": makespan / base if base > 0 else float("inf"),
+                "queue_delay": first_start - ctx.submit_at,
+            }
+        )
+    m = engine.metrics
+    return {
+        "engine": engine,
+        "results": results,
+        "tenants": tenants,
+        "report": serving_report(tenants),
+        "n_events": m.n_events,
+        "n_arrivals": m.n_arrivals,
+        "n_admitted": m.n_admitted,
+        "n_rejected": m.n_rejected,
+        "n_deferred": m.n_deferred,
+        "rows_built": (
+            engine._serving.rows_built if engine._serving is not None else None
+        ),
+    }

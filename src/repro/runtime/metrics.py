@@ -37,6 +37,10 @@ class SimResult:
     # fault/recovery counters (None for runs with no fault source active;
     # see Metrics.fault_summary and repro.runtime.faults)
     faults: Optional[Dict[str, float]] = None
+    # serving-mode arrival accounting (engine.submit at= / admission)
+    submit_at: float = 0.0
+    admit_at: float = 0.0
+    admitted: bool = True
 
     @property
     def gflops(self) -> float:
@@ -59,6 +63,7 @@ class Metrics:
         "n_evacuations", "evacuated_bytes", "wasted_s",
         "n_notices", "n_proactive", "proactive_bytes",
         "n_retries", "n_timeouts", "retry_delay_s",
+        "n_arrivals", "n_admitted", "n_rejected", "n_deferred",
     )
 
     def __init__(self, machine: MachineModel) -> None:
@@ -87,6 +92,11 @@ class Metrics:
         self.n_retries = 0  # failed hops retried with backoff
         self.n_timeouts = 0  # retry budget exhausted -> re-sourced
         self.retry_delay_s = 0.0  # total backoff delay injected
+        # serving-mode arrivals and admission control (repro.runtime.load)
+        self.n_arrivals = 0  # tenant graphs that reached the machine
+        self.n_admitted = 0  # ... admitted past admission control
+        self.n_rejected = 0  # ... turned away (working set vs capacity)
+        self.n_deferred = 0  # defer re-posts (one arrival may defer many times)
 
     def fault_summary(self) -> Dict[str, float]:
         """The fault counters as a plain dict (``SimResult.faults``)."""
@@ -141,3 +151,63 @@ def recovery_report(faulted: SimResult, baseline: SimResult) -> Dict[str, float]
             "evacuated_bytes", 0
         )
     return out
+
+
+# ---------------------------------------------------------------------------
+# serving-mode aggregates (multi-tenant open-loop load, repro.runtime.load)
+
+
+def percentile(values: List[float], q: float) -> float:
+    """Nearest-rank percentile (``q`` in [0, 100]); 0.0 for empty input.
+
+    Nearest-rank (not interpolated) so a reported p99 is always a value
+    some tenant actually experienced.
+    """
+    if not values:
+        return 0.0
+    if not (0.0 <= q <= 100.0):
+        raise ValueError(f"percentile q must be in [0, 100], got {q!r}")
+    s = sorted(values)
+    rank = max(1, -(-len(s) * q // 100))  # ceil(len * q / 100), min 1
+    return float(s[int(rank) - 1])
+
+
+def jain_fairness(values: List[float]) -> float:
+    """Jain's fairness index (Σx)² / (n·Σx²) — 1.0 means every tenant got
+    identical treatment, 1/n means one tenant got everything; 1.0 for
+    empty or all-zero input (nobody was treated unequally)."""
+    if not values:
+        return 1.0
+    total = sum(values)
+    sq = sum(v * v for v in values)
+    if sq <= 0.0:
+        return 1.0
+    return (total * total) / (len(values) * sq)
+
+
+def serving_report(tenants: List[Dict[str, float]]) -> Dict[str, float]:
+    """Aggregate per-tenant serving rows (``repro.runtime.load.run_serving``)
+    into the p50/p99 + fairness summary benchmarks and BENCH_sched.json
+    consume.
+
+    Each row carries ``makespan``, ``slowdown`` (vs the tenant's
+    empty-machine baseline) and ``queue_delay`` (first execution start
+    minus submit time). Fairness is Jain's index over the slowdowns:
+    equal slowdown = perfectly fair service, regardless of how different
+    the tenants' graph sizes are.
+    """
+    slow = [float(r["slowdown"]) for r in tenants]
+    qd = [float(r["queue_delay"]) for r in tenants]
+    mk = [float(r["makespan"]) for r in tenants]
+    n = len(tenants)
+    return {
+        "n_tenants": n,
+        "p50_makespan": percentile(mk, 50),
+        "p99_makespan": percentile(mk, 99),
+        "p50_slowdown": percentile(slow, 50),
+        "p99_slowdown": percentile(slow, 99),
+        "mean_slowdown": (sum(slow) / n) if n else 0.0,
+        "p50_queue_delay": percentile(qd, 50),
+        "p99_queue_delay": percentile(qd, 99),
+        "jain_fairness": jain_fairness(slow),
+    }

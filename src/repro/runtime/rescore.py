@@ -1,0 +1,287 @@
+"""Incremental score maintenance for the serving hot path.
+
+The default engine rescores the full (ready × resources) matrix on every
+activation (``strategy.place(self, newly_ready, rid)``): O(R·M) per event,
+growing linearly with concurrent tenants.  At serving scale — thousands of
+tenant DAGs streaming through one machine — most of those rows are
+recomputed unchanged, because a single completion only moves a handful of
+residency bits.
+
+:class:`ServingScheduler` replaces the per-activation rebuild with a
+persistent ready pool and *dirty-row* rescoring:
+
+  * every ready task holds a :class:`PoolEntry` with its cached affinity
+    row ``row[j] = transfer(tid → mem_j) + static_duration(tid, rid_j)
+    (+ pressure)`` — everything about the score that does **not** depend
+    on the instantaneous backlog;
+  * rows are invalidated through the residency observer (a mask change on
+    datum ``did`` dirties exactly the pool entries reading ``did``, via
+    the ``rev`` reverse-dependency index) and through coarse epochs
+    (fault events, capacity pressure) — the *invalidation rules*
+    documented in ``docs/runtime_architecture.md``;
+  * assignment pops a lazy min-heap ranked by each row's best-case score;
+    per-worker backlog (``load_ts``) and the policy's fairness scale are
+    applied per pop, so ranking tuples never go stale when a round
+    charges a worker;
+  * ``by_graph`` is the O(1) per-graph ready-set index (tenant teardown
+    and per-graph introspection without scanning the pool).
+
+``mode="full"`` runs the identical round algorithm but marks every entry
+dirty each round — the naive rescore-everything baseline, kept first-class
+so ``benchmarks/serving_load.py`` can measure both paths in one process
+and the equivalence test can assert full and incremental modes place
+bit-for-bit identically.
+
+Correctness over cleverness at the cache boundary: any state whose effect
+on a row decays with *time* rather than with a countable event (the
+noticed-worker penalty, capacity pressure) degrades the round to
+full-rescore while it is active, so a cached row never embeds a stale
+clock reading.
+"""
+from __future__ import annotations
+
+import heapq
+from typing import Dict, List, Optional, Set, Tuple
+
+from .memory import pressure_rows_for
+
+RESCORE_MODES = ("off", "full", "incremental")
+
+
+class PoolEntry:
+    """One ready task waiting in the serving pool."""
+
+    __slots__ = ("ctx", "tid", "task", "row", "version")
+
+    def __init__(self, ctx, tid: int, task) -> None:
+        self.ctx = ctx
+        self.tid = tid
+        self.task = task
+        self.row: Optional[List[float]] = None  # None = dirty, never built
+        self.version = 0
+
+
+class ServingScheduler:
+    """Persistent ready pool with dirty-row incremental rescoring.
+
+    One instance per serving-mode engine.  The engine calls
+    :meth:`add_ready` wherever the default loop would call
+    ``strategy.place`` and one :meth:`round` after draining each
+    same-timestamp event batch.
+    """
+
+    def __init__(self, mode: str) -> None:
+        if mode not in RESCORE_MODES:
+            raise ValueError(
+                f"rescore mode must be one of {RESCORE_MODES}, got {mode!r}"
+            )
+        self.mode = mode
+        # (gid, tid) -> PoolEntry: the ready pool
+        self.entries: Dict[Tuple[int, int], PoolEntry] = {}
+        # gid -> ready tids: the O(1) per-graph ready-set index
+        self.by_graph: Dict[int, Set[int]] = {}
+        # (gid, did) -> tids reading did: reverse dependency index for
+        # residency-driven invalidation
+        self.rev: Dict[Tuple[int, int], Set[int]] = {}
+        self.dirty: Set[Tuple[int, int]] = set()
+        # lazy min-heap of (best_row_score, gid, tid, version); stale
+        # versions are skipped on pop
+        self.heap: List[Tuple[float, int, int, int]] = []
+        # coarse invalidation epoch: bumped by the engine on fault events
+        # (worker liveness changed → every row's eligible set changed)
+        self.epoch = 0
+        self._seen_epoch = 0
+        # instrumentation: how many rows were actually (re)built — the
+        # quantity incremental mode exists to shrink
+        self.rows_built = 0
+        self.n_rounds = 0
+
+    # ------------------------------------------------------------------
+    # pool maintenance
+    def watch_ctx(self, ctx) -> None:
+        """Chain onto ``ctx``'s residency observer: a mask change on
+        datum ``did`` dirties exactly the pool entries that read it.
+
+        The capacity-bounded memory layer may have installed its own
+        observer at ``memory.attach_ctx``; it is preserved and called
+        first (same ``(did, name, old, new)`` signature).
+        """
+        prev = ctx.residency.observer
+        gid = ctx.gid
+        rev = self.rev
+        dirty = self.dirty
+
+        def observer(did, name, old, new, _prev=prev, _gid=gid):
+            if _prev is not None:
+                _prev(did, name, old, new)
+            tids = rev.get((_gid, did))
+            if tids:
+                for tid in tids:
+                    dirty.add((_gid, tid))
+
+        ctx.residency.observer = observer
+
+    def add_ready(self, engine, ctx, ready) -> None:
+        """Admit newly-ready tasks into the pool (rows built lazily at
+        the next round)."""
+        gid = ctx.gid
+        entries = self.entries
+        by_graph = self.by_graph.setdefault(gid, set())
+        rev = self.rev
+        dirty = self.dirty
+        task_reads = ctx.arrays.task_reads
+        for task in ready:
+            tid = task.tid
+            key = (gid, tid)
+            entries[key] = PoolEntry(ctx, tid, task)
+            by_graph.add(tid)
+            dirty.add(key)
+            for did, _name, _size in task_reads[tid]:
+                rev.setdefault((gid, did), set()).add(tid)
+
+    def _remove(self, key: Tuple[int, int]) -> None:
+        entry = self.entries.pop(key)
+        gid, tid = key
+        tids = self.by_graph.get(gid)
+        if tids is not None:
+            tids.discard(tid)
+            if not tids:
+                del self.by_graph[gid]
+        rev = self.rev
+        for did, _name, _size in entry.ctx.arrays.task_reads[tid]:
+            bucket = rev.get((gid, did))
+            if bucket is not None:
+                bucket.discard(tid)
+                if not bucket:
+                    del rev[(gid, did)]
+        self.dirty.discard(key)
+
+    # ------------------------------------------------------------------
+    # the round: rebuild dirty rows, then assign from the heap
+    def _rebuild(self, engine, keys) -> None:
+        """(Re)build the cached affinity rows for ``keys``, grouped per
+        graph so the batched transfer-row kernel amortizes."""
+        entries = self.entries
+        resources = engine.machine.resources
+        mems = engine._mem_of
+        heap = self.heap
+        by_gid: Dict[int, List[PoolEntry]] = {}
+        for key in sorted(keys):
+            entry = entries.get(key)
+            if entry is not None:
+                by_gid.setdefault(key[0], []).append(entry)
+        for gid in sorted(by_gid):
+            group = by_gid[gid]
+            ctx = group[0].ctx
+            tids = [e.tid for e in group]
+            engine._set_ctx(ctx)
+            X = engine.transfer_model.task_input_transfer_rows(
+                ctx.arrays, tids, mems, ctx.residency
+            )
+            P = pressure_rows_for(engine, tids, resources)
+            rid_static = ctx.rid_static
+            for i, entry in enumerate(group):
+                xrow = X[i]
+                tid = entry.tid
+                if P is None:
+                    row = [
+                        xrow[j] + rid_static[j][tid]
+                        for j in range(len(xrow))
+                    ]
+                else:
+                    prow = P[i]
+                    row = [
+                        xrow[j] + rid_static[j][tid] + prow[j]
+                        for j in range(len(xrow))
+                    ]
+                entry.row = row
+                entry.version += 1
+                self.rows_built += 1
+                heapq.heappush(
+                    heap, (min(row), gid, tid, entry.version)
+                )
+
+    def round(self, engine) -> None:
+        """One placement round over the pool at ``engine.now``.
+
+        Invalidation rules (in order of coarseness):
+
+        1. ``mode="full"`` — everything is dirty, every round (the naive
+           baseline).
+        2. capacity-bounded memories or an open preemption-notice window
+           — the pressure term decays with wall-clock time, so cached
+           rows cannot be trusted across rounds: degrade to full.
+        3. epoch advanced (a fault event fired) — worker liveness and
+           memory epochs moved: rebuild everything once.
+        4. otherwise — rebuild exactly the rows the residency observer
+           and ``add_ready`` marked dirty.
+        """
+        if not self.entries:
+            self.dirty.clear()
+            return
+        self.n_rounds += 1
+        faults = engine.faults
+        if (
+            self.mode == "full"
+            or engine._bounded
+            or (engine._faults_on and faults.noticed)
+            or self.epoch != self._seen_epoch
+        ):
+            self.dirty.update(self.entries)
+        self._seen_epoch = self.epoch
+        if self.dirty:
+            # drain in place: the residency observers hold a reference to
+            # THIS set object — rebinding self.dirty would strand them
+            # writing into a dead set and rows would silently go stale
+            dirty = tuple(self.dirty)
+            self.dirty.clear()
+            self._rebuild(engine, dirty)
+
+        entries = self.entries
+        heap = self.heap
+        workers = engine.workers
+        load_ts = engine.load_ts
+        now = engine.now
+        faults_on = engine._faults_on
+        alive = faults.alive
+        noticed = faults.noticed
+        strategy = engine.strategy
+        scale_fn = getattr(strategy, "tenant_scale", None)
+        charge = getattr(strategy, "charge_tenant", None)
+        heappop = heapq.heappop
+        while heap:
+            item = heap[0]
+            _rank, gid, tid, version = item
+            entry = entries.get((gid, tid))
+            if entry is None or entry.version != version:
+                heappop(heap)  # stale: assigned or rebuilt since pushed
+                continue
+            ctx = entry.ctx
+            scale = 1.0 if scale_fn is None else float(scale_fn(engine, ctx))
+            row = entry.row
+            best_j = -1
+            best = 0.0
+            for j, w in enumerate(workers):
+                if w.queue:
+                    continue  # one queued task per worker per pass
+                if faults_on and (not alive[j] or j in noticed):
+                    continue
+                lt = load_ts[j]
+                backlog = lt - now if lt > now else 0.0
+                s = row[j] + backlog * scale
+                if best_j < 0 or s < best:
+                    best_j = j
+                    best = s
+            if best_j < 0:
+                # every eligible worker already took a task this round:
+                # leave the entry ranked for the next round
+                break
+            heappop(heap)
+            dur = ctx.rid_static[best_j][tid]
+            lt = load_ts[best_j]
+            load_ts[best_j] = (lt if lt > now else now) + dur
+            if charge is not None:
+                charge(ctx, dur)
+            self._remove((gid, tid))
+            engine._set_ctx(ctx)
+            engine.push(entry.task, best_j)

@@ -18,7 +18,9 @@ extension surface here:
     shared with ``repro.dist.sched_bridge``'s expert placement.
 
 Built-in policies: ``heft``, ``dada``, ``dual``, ``ws`` (bit-for-bit equal
-to ``repro.core._reference``), plus ``random`` and ``locality``.
+to ``repro.core._reference``), plus ``random``, ``locality``, and the
+serving-tenant policies ``priority`` / ``wfq`` (weighted-fair queueing;
+see ``repro.runtime.load``).
 """
 from .config import KNOWN_ENV_VARS, SchedConfig, current_config
 from .policy import Policy, ScoreMatrixPolicy, assign_from_scores
@@ -30,13 +32,15 @@ from .registry import (
     resolve,
     unregister,
 )
-from .policies import LocalityPolicy, RandomPolicy
+from .policies import LocalityPolicy, PriorityPolicy, RandomPolicy, WFQPolicy
 
 __all__ = [
     "KNOWN_ENV_VARS",
     "LocalityPolicy",
     "Policy",
+    "PriorityPolicy",
     "RandomPolicy",
+    "WFQPolicy",
     "SchedConfig",
     "ScoreMatrixPolicy",
     "assign_from_scores",

@@ -27,7 +27,9 @@ from typing import Mapping, Optional, Tuple
 SCHED_PREFIX = "REPRO_SCHED_"
 BENCH_PREFIX = "REPRO_BENCH_"
 
+from repro.runtime.load import ADMISSION_MODES, ARRIVAL_PROCESSES
 from repro.runtime.memory import EVICTION_POLICIES
+from repro.runtime.rescore import RESCORE_MODES
 from repro.runtime.traces import FAULT_MODES
 
 BACKENDS = ("numpy", "jax")
@@ -140,6 +142,24 @@ class SchedConfig:
       the batched surrogate episode engine (``repro.core.episode``),
       which requires the jax backend; ranking fidelity, not bit
       equality (see docs/runtime_architecture.md).
+    - ``arrival``: open-loop arrival process for the serving load layer,
+      ``poisson`` (default), ``bursty`` or ``diurnal``; consumed by
+      ``repro.runtime.load.make_arrivals`` and the serving benchmark.
+    - ``tenants``: tenant count for serving runs (0 = the consumer's
+      default sweep; see ``benchmarks/serving_load.py``).
+    - ``admission``: admission control at graph arrival, ``none``
+      (default), ``reject`` (turn away tenants whose predicted working
+      set exceeds free aggregate capacity) or ``defer`` (retry the
+      arrival after ``admit_defer_s``); requires serving mode.
+    - ``rescore``: serving-pool rescoring mode, ``off`` (default: the
+      classic per-activation ``strategy.place`` loop, bit-for-bit
+      identical to pre-serving engines), ``full`` (shared ready pool,
+      every row rebuilt every round — the naive baseline) or
+      ``incremental`` (dirty-row rescoring keyed on residency bitmasks
+      and fault/pressure epochs; see ``repro.runtime.rescore``).
+    - ``admit_defer_s``: simulated delay before a deferred arrival
+      retries admission (> 0, or a deferred tenant would respin at the
+      same instant forever).
     - ``audit``: record a structured schedule audit log on every engine
       (``repro.verify``): placements, transfer hops, landing decisions,
       evictions and fault windows, consumed by the independent schedule
@@ -176,6 +196,11 @@ class SchedConfig:
     retry_max: int = 3
     backoff_s: float = 1e-4
     exact: bool = True
+    arrival: str = "poisson"
+    tenants: int = 0
+    admission: str = "none"
+    rescore: str = "off"
+    admit_defer_s: float = 0.005
     audit: bool = False
     jax_cache_dir: Optional[str] = None
     batch: int = 256
@@ -238,6 +263,31 @@ class SchedConfig:
             raise _err(
                 "REPRO_SCHED_BACKOFF_S", str(self.backoff_s),
                 "expected a number >= 0",
+            )
+        if self.arrival not in ARRIVAL_PROCESSES:
+            raise _err(
+                "REPRO_SCHED_ARRIVAL", self.arrival,
+                f"choose from {ARRIVAL_PROCESSES}",
+            )
+        if self.tenants < 0:
+            raise _err(
+                "REPRO_SCHED_TENANTS", str(self.tenants),
+                "expected an integer >= 0",
+            )
+        if self.admission not in ADMISSION_MODES:
+            raise _err(
+                "REPRO_SCHED_ADMISSION", self.admission,
+                f"choose from {ADMISSION_MODES}",
+            )
+        if self.rescore not in RESCORE_MODES:
+            raise _err(
+                "REPRO_SCHED_RESCORE", self.rescore,
+                f"choose from {RESCORE_MODES}",
+            )
+        if not (self.admit_defer_s > 0):
+            raise _err(
+                "REPRO_SCHED_ADMIT_DEFER_S", str(self.admit_defer_s),
+                "expected a number > 0",
             )
         if not self.exact and self.backend != "jax":
             # the surrogate episode engine is a jax program; a silent
@@ -327,6 +377,12 @@ _ENV_SCHEMA = {
         "retry_max", lambda var, v: _parse_int(var, v, lo=0)),
     "REPRO_SCHED_BACKOFF_S": ("backoff_s", _parse_rate),
     "REPRO_SCHED_EXACT": ("exact", _parse_flag),
+    "REPRO_SCHED_ARRIVAL": ("arrival", lambda var, v: v.lower()),
+    "REPRO_SCHED_TENANTS": (
+        "tenants", lambda var, v: _parse_int(var, v, lo=0)),
+    "REPRO_SCHED_ADMISSION": ("admission", lambda var, v: v.lower()),
+    "REPRO_SCHED_RESCORE": ("rescore", lambda var, v: v.lower()),
+    "REPRO_SCHED_ADMIT_DEFER_S": ("admit_defer_s", _parse_rate),
     "REPRO_SCHED_AUDIT": ("audit", _parse_flag),
     "REPRO_SCHED_BATCH": ("batch", lambda var, v: _parse_int(var, v, lo=1)),
     "REPRO_SCHED_BACKENDS": ("bench_backends", _parse_str_list),

@@ -78,6 +78,87 @@ class LocalityPolicy(ScoreMatrixPolicy):
         return np.asarray(rows, dtype=np.float64)
 
 
+class PriorityPolicy(ScoreMatrixPolicy):
+    """Strict-weight tenant priority over earliest-finish placement.
+
+    Score = predicted input-transfer time + static duration (HEFT's EFT
+    decomposition without the backlog, which the load-aware driver adds).
+    The tenant's submit-time ``priority`` divides the backlog a tenant
+    perceives: a priority-2 tenant sees only half the queue, so its tasks
+    jump ahead of priority-1 work contending for the same resource, while
+    the *real* shared time-stamps stay unscaled.  Starvation is the
+    policy's documented failure mode — that is what :class:`WFQPolicy`
+    exists to fix.
+    """
+
+    name = "priority"
+    allow_steal = False
+    owner_lifo = False
+    load_aware = True
+
+    def score_matrix(self, sim: Simulator, ready: Sequence[Task]) -> np.ndarray:
+        tids = [t.tid for t in ready]
+        rows = sim.transfer_model.task_input_transfer_rows(
+            sim.arrays, tids,
+            [r.mem for r in sim.machine.resources], sim.residency,
+        )
+        return np.asarray(rows, dtype=np.float64) + class_duration_matrix(
+            sim, tids
+        )
+
+    def tenant_scale(self, sim, ctx) -> float:
+        return 1.0 / max(float(ctx.priority), 1e-9)
+
+
+class WFQPolicy(PriorityPolicy):
+    """Weighted-fair queueing over the same affinity scores.
+
+    Classic WFQ virtual time: each tenant accumulates normalized service
+    ``v[g] += duration / priority`` as its tasks are placed
+    (``charge_tenant``); a new tenant starts at the pool minimum so it
+    cannot claim infinite catch-up credit.  The backlog a tenant
+    perceives is scaled by how far *ahead* of the least-served tenant it
+    is — ahead tenants yield, behind tenants push — which bounds
+    worst-case tenant slowdown (Jain fairness in
+    ``repro.runtime.metrics.serving_report``) instead of letting heavy
+    or high-priority tenants starve the tail.
+    """
+
+    name = "wfq"
+    _EPS = 1e-6
+
+    def __init__(self) -> None:
+        self._vt: dict = {}
+
+    def init(self, sim: Simulator) -> None:
+        # reset per simulation: two runs with the same seed accumulate
+        # identical virtual-time streams
+        self._vt = {}
+
+    def charge_tenant(self, ctx, dur: float) -> None:
+        vt = self._vt
+        gid = ctx.gid
+        if gid not in vt:
+            vt[gid] = min(vt.values()) if vt else 0.0
+        vt[gid] += float(dur) / max(float(ctx.priority), 1e-9)
+
+    def retire_tenant(self, ctx) -> None:
+        # drop the finished tenant so the pool minimum tracks *live*
+        # tenants only (a long-dead gid at v=0 would stall everyone)
+        self._vt.pop(ctx.gid, None)
+
+    def tenant_scale(self, sim, ctx) -> float:
+        vt = self._vt
+        v = vt.get(ctx.gid)
+        if v is None:
+            v = min(vt.values()) if vt else 0.0
+            vt[ctx.gid] = v
+        vmin = min(vt.values())
+        eps = self._EPS
+        scale = (eps + v) / (eps + vmin)
+        return 1.0 if scale < 1.0 else (8.0 if scale > 8.0 else scale)
+
+
 # ---------------------------------------------------------------------------
 # score_matrix views for the ported strategies: HEFT and DADA expose the
 # (ready × resources) matrices their placement logic is driven by, making
@@ -159,3 +240,5 @@ register("dual", DualApprox)
 register("ws", WorkSteal)
 register("random", RandomPolicy)
 register("locality", LocalityPolicy)
+register("priority", PriorityPolicy)
+register("wfq", WFQPolicy)

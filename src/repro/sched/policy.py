@@ -144,6 +144,21 @@ class ScoreMatrixPolicy(Strategy):
     def score_matrix(self, sim: Simulator, ready: Sequence[Task]) -> np.ndarray:
         raise NotImplementedError
 
+    def tenant_scale(self, sim, ctx) -> float:
+        """Multiplier on the backlog term for ``ctx``'s tenant (> 0).
+
+        ``1.0`` (the default) is plain load-aware placement.  Fairness
+        policies override it: a scale < 1 lets a tenant see less of the
+        shared backlog (it may queue behind others more aggressively), a
+        scale > 1 makes a tenant yield.  Consumed by the load-aware
+        driver below and by the serving pool's per-entry ranking
+        (``repro.runtime.rescore``); optional companion hooks
+        ``charge_tenant(ctx, dur)`` / ``retire_tenant(ctx)`` let a
+        policy account per-tenant service (see :class:`WFQPolicy
+        <repro.sched.policies.WFQPolicy>`).
+        """
+        return 1.0
+
     def pressure_matrix(
         self, sim: Simulator, ready: Sequence[Task]
     ) -> Optional[np.ndarray]:
@@ -184,13 +199,32 @@ class ScoreMatrixPolicy(Strategy):
                 [max(lt - now, 0.0) for lt in sim.load_ts], dtype=np.float64
             )
             dur = class_duration_matrix(sim, tids)
-            choice, loads = assign_from_scores(
-                S, loads=offsets, costs=dur, return_loads=True
-            )
-            # charge the placements into the shared completion time-stamps
-            # (paper §2.3) so interleaved strategies see the backlog
-            for j, load in enumerate(loads):
-                sim.load_ts[j] = now + float(load)
+            ctx = getattr(sim, "_cur", None)
+            scale = 1.0 if ctx is None else float(self.tenant_scale(sim, ctx))
+            if scale == 1.0:
+                choice, loads = assign_from_scores(
+                    S, loads=offsets, costs=dur, return_loads=True
+                )
+                # charge the placements into the shared completion
+                # time-stamps (paper §2.3) so interleaved strategies see
+                # the backlog
+                for j, load in enumerate(loads):
+                    sim.load_ts[j] = now + float(load)
+            else:
+                # fairness scaling only biases the *choice*; the real
+                # backlog charged into load_ts stays unscaled, or every
+                # other tenant would see a distorted machine
+                choice = assign_from_scores(
+                    S, loads=offsets * scale, costs=dur * scale
+                )
+                for i in range(len(ready)):
+                    j = int(choice[i])
+                    sim.load_ts[j] = now + float(offsets[j]) + float(dur[i, j])
+                    offsets[j] += dur[i, j]
+            charge = getattr(self, "charge_tenant", None)
+            if charge is not None and ctx is not None:
+                for i in range(len(ready)):
+                    charge(ctx, float(dur[i, int(choice[i])]))
             for i, t in enumerate(ready):
                 sim.push(t, int(choice[i]))
         else:

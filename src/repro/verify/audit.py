@@ -156,6 +156,40 @@ class TimeoutRecord:
     nbytes: int
 
 
+@dataclass
+class ArrivalRecord:
+    """A tenant graph reached the machine (serving mode): ``t`` is its
+    submit time — no execution of the graph may start before it (the
+    ARRIVAL invariant)."""
+
+    seq: int
+    gid: int
+    t: float
+
+
+@dataclass
+class AdmitRecord:
+    """Admission control let the tenant in at ``t``; executions must not
+    start before the admit time either (deferred tenants wait)."""
+
+    seq: int
+    gid: int
+    t: float
+
+
+@dataclass
+class RejectRecord:
+    """Admission control turned the tenant away: the graph must show no
+    executions at all.  ``reason``: "too_large" (working set exceeds the
+    machine's aggregate capacity outright) or "pressure" (no room amid
+    currently-admitted tenants)."""
+
+    seq: int
+    gid: int
+    t: float
+    reason: str
+
+
 _RECORD_TYPES = {
     "exec": ExecRecord,
     "hop": HopRecord,
@@ -165,6 +199,9 @@ _RECORD_TYPES = {
     "notice": NoticeRecord,
     "retry": RetryRecord,
     "timeout": TimeoutRecord,
+    "arrival": ArrivalRecord,
+    "admit": AdmitRecord,
+    "reject": RejectRecord,
 }
 
 
@@ -197,6 +234,9 @@ class AuditLog:
         self.notices: List[NoticeRecord] = []
         self.retries: List[RetryRecord] = []
         self.timeouts: List[TimeoutRecord] = []
+        self.arrivals: List[ArrivalRecord] = []
+        self.admits: List[AdmitRecord] = []
+        self.rejects: List[RejectRecord] = []
         self.result: Dict[str, Any] = {}
         self._seq = 0
         # (gid, name, dst_mem, done_t) -> request time, popped on landing
@@ -330,6 +370,17 @@ class AuditLog:
             )
         )
 
+    def log_arrival(self, gid: int, t: float) -> None:
+        self.arrivals.append(ArrivalRecord(self._next_seq(), int(gid), float(t)))
+
+    def log_admit(self, gid: int, t: float) -> None:
+        self.admits.append(AdmitRecord(self._next_seq(), int(gid), float(t)))
+
+    def log_reject(self, gid: int, t: float, reason: str) -> None:
+        self.rejects.append(
+            RejectRecord(self._next_seq(), int(gid), float(t), reason)
+        )
+
     def finalize(self, engine: Any) -> None:
         """Snapshot the engine's claimed result after the run loop ends."""
         per_graph: Dict[int, Dict[str, Any]] = {}
@@ -340,6 +391,12 @@ class AuditLog:
                 "finish": float(ctx.finish),
                 "n_done": int(ctx.n_done),
             }
+            # serving-mode arrival accounting (surrogate contexts carry
+            # no admission state — default to plain admitted-at-submit)
+            if getattr(ctx, "rejected", False):
+                per_graph[gid]["rejected"] = True
+            if getattr(ctx, "admitted", False):
+                per_graph[gid]["admit_at"] = float(ctx.admit_at)
             if gid in self.graphs:
                 self.graphs[gid]["submit_at"] = float(ctx.submit_at)
         self.result = {
@@ -377,6 +434,9 @@ class AuditLog:
                 ("notice", self.notices),
                 ("retry", self.retries),
                 ("timeout", self.timeouts),
+                ("arrival", self.arrivals),
+                ("admit", self.admits),
+                ("reject", self.rejects),
             ):
                 for rec in records:
                     fh.write(json.dumps({"type": tag, **asdict(rec)}) + "\n")
@@ -426,6 +486,9 @@ class AuditLog:
                             "notice": "notices",
                             "retry": "retries",
                             "timeout": "timeouts",
+                            "arrival": "arrivals",
+                            "admit": "admits",
+                            "reject": "rejects",
                         }[kind],
                     ).append(rec)
                     log._seq = max(log._seq, rec.seq)

@@ -41,6 +41,11 @@ Invariants (exact engine):
   or after the retry/timeout time — no transfer retries forever.
 - ``MAKESPAN``       each graph's recorded finish time equals the max
   recorded execution end for that graph.
+- ``ARRIVAL``        no execution of a graph's task starts before the
+  graph's submit time (and, in serving mode, before its admit time); a
+  graph admission control rejected must show no executions at all, and
+  the claimed per-graph admission accounting (admit_at / rejected in
+  the result) must agree with the arrival/admit/reject records.
 
 The surrogate engine logs coarser records (no per-copy landings), so it
 gets the subset that is meaningful there: EXACTLY_ONCE, PRECEDENCE,
@@ -131,6 +136,9 @@ def _exec_index(
     """EXACTLY_ONCE check; returns the (gid, tid) -> record map."""
     seen: Dict[Tuple[int, int], int] = {}
     index: Dict[Tuple[int, int], ExecRecord] = {}
+    # admission-rejected graphs legitimately never execute; the ARRIVAL
+    # invariant separately errors if they *do* show executions
+    rejected = {r.gid for r in log.rejects}
     for rec in log.execs:
         key = (rec.gid, rec.tid)
         seen[key] = seen.get(key, 0) + 1
@@ -145,6 +153,8 @@ def _exec_index(
                 )
             )
     for gid, ginfo in log.graphs.items():
+        if gid in rejected:
+            continue
         for tid in range(len(ginfo["tasks"])):
             n = seen.get((gid, tid), 0)
             if n != 1:
@@ -286,6 +296,86 @@ def _verify_exact(log: AuditLog) -> List[Finding]:
 
     exec_of = _exec_index(log, out)
     _check_bytes(log, out)
+
+    # arrival / admission ------------------------------------------------
+    arrive_at = {r.gid: r.t for r in log.arrivals}
+    admit_at = {r.gid: r.t for r in log.admits}
+    rejected_at = {r.gid: r.t for r in log.rejects}
+    for gid in rejected_at:
+        if gid in admit_at:
+            out.append(
+                Finding(
+                    "ARRIVAL",
+                    "error",
+                    f"graph {gid} carries both an admit and a reject record",
+                )
+            )
+    for rec in log.execs:
+        ginfo = log.graphs.get(rec.gid)
+        submit = (
+            float(ginfo.get("submit_at", 0.0)) if ginfo is not None else None
+        )
+        t0 = arrive_at.get(rec.gid, submit)
+        if t0 is not None and rec.start < t0 - eps:
+            out.append(
+                Finding(
+                    "ARRIVAL",
+                    "error",
+                    f"g{rec.gid}/t{rec.tid} starts at {rec.start:.6g} before "
+                    f"the graph's arrival at {t0:.6g}",
+                )
+            )
+        ta = admit_at.get(rec.gid)
+        if ta is not None and rec.start < ta - eps:
+            out.append(
+                Finding(
+                    "ARRIVAL",
+                    "error",
+                    f"g{rec.gid}/t{rec.tid} starts at {rec.start:.6g} before "
+                    f"the graph was admitted at {ta:.6g}",
+                )
+            )
+        if rec.gid in rejected_at:
+            out.append(
+                Finding(
+                    "ARRIVAL",
+                    "error",
+                    f"g{rec.gid}/t{rec.tid} executed but admission control "
+                    f"rejected graph {rec.gid} at {rejected_at[rec.gid]:.6g}",
+                )
+            )
+    # claimed per-graph admission accounting must agree with the records
+    pg = log.result.get("per_graph", {})
+    for gid in log.graphs:
+        info = pg.get(gid, pg.get(str(gid)))
+        if info is None:
+            continue
+        claimed_admit = info.get("admit_at")
+        ta = admit_at.get(gid)
+        if (
+            claimed_admit is not None
+            and ta is not None
+            and not math.isclose(
+                float(claimed_admit), ta, rel_tol=1e-9, abs_tol=eps
+            )
+        ):
+            out.append(
+                Finding(
+                    "ARRIVAL",
+                    "error",
+                    f"graph {gid} claims admit_at {float(claimed_admit):.6g} "
+                    f"but the admit record says {ta:.6g}",
+                )
+            )
+        if bool(info.get("rejected")) != (gid in rejected_at):
+            out.append(
+                Finding(
+                    "ARRIVAL",
+                    "error",
+                    f"graph {gid} claimed rejected={bool(info.get('rejected'))} "
+                    "but the reject records disagree",
+                )
+            )
 
     # static context -----------------------------------------------------
     sizes: Dict[Tuple[int, str], int] = {}

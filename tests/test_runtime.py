@@ -88,6 +88,60 @@ def test_submit_after_run_start_uses_arrival_event():
 
 
 # ---------------------------------------------------------------------------
+# submission error paths + serving-mode arrivals under faults
+
+
+def test_double_submission_rejected():
+    eng = Engine(paper_machine(2), resolve("heft"), seed=0)
+    g = cholesky_graph(4, 256, with_fns=False)
+    eng.submit(g)
+    with pytest.raises(ValueError, match="already submitted"):
+        eng.submit(g)
+    # a fresh graph of the same shape is a different tenant: fine
+    eng.submit(cholesky_graph(4, 256, with_fns=False))
+    assert len(eng.run()) == 2
+
+
+def test_mid_run_submit_during_fault_drain():
+    """A tenant arriving while a GPU is draining must be admitted, placed
+    only on live workers, and completed once the GPU reattaches."""
+    detach_t, attach_t = 0.005, 0.08
+
+    def run():
+        eng = Engine(
+            paper_machine(2), resolve("heft"), seed=0,
+            rescore="incremental",
+        )
+        first = eng.submit(cholesky_graph(8, 256, with_fns=False))
+        gpu = eng.machine.gpus[0].rid
+        eng.inject("detach", gpu, at=detach_t, mode="drain")
+        eng.inject("attach", gpu, at=attach_t)
+        # arrives mid-run, inside the dead window
+        late = eng.submit(lu_graph(5, 256, with_fns=False), at=0.01)
+        eng.run()
+        return eng, first, late, gpu
+
+    eng, first, late, gpu = run()
+    assert first.n_done == first.n_tasks
+    assert late.n_done == late.n_tasks
+    assert eng.metrics.n_arrivals == 2
+    assert late.submit_at == 0.01
+    assert min(iv.start for iv in late.intervals) >= 0.01
+    # drain semantics: the task running at detach finishes, but nothing
+    # new starts on the dead rid until the attach event
+    for iv in eng.intervals:
+        if iv.rid == gpu:
+            assert not (
+                detach_t + 1e-12 < iv.start < attach_t - 1e-12
+            ), f"task {iv.tid} started on drained rid {gpu} at {iv.start}"
+    # and the whole interleaving is deterministic
+    fp = lambda e: [
+        (iv.tid, iv.rid, iv.start, iv.end) for iv in e.intervals
+    ]
+    assert fp(eng) == fp(run()[0])
+
+
+# ---------------------------------------------------------------------------
 # stale-transfer cancellation (REPRO_SCHED_CANCEL_STALE)
 
 

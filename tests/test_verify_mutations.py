@@ -281,6 +281,124 @@ def test_missing_landing_after_retry_flagged(salt):
 
 
 # ---------------------------------------------------------------------------
+# serving logs: the ARRIVAL invariant (arrivals, admission, rejections)
+
+
+@lru_cache(maxsize=None)
+def _serving_log():
+    from repro.runtime.load import make_arrivals, run_serving
+
+    # capacity holds the largest single-task working set (the memory
+    # layer's floor) but only ~6 MB aggregate: overlapping tenants at
+    # this rate force admission-control rejections
+    out = run_serving(
+        make_arrivals("poisson", 16, rate=200.0, seed=1),
+        paper_machine(4), "heft", seed=0,
+        admission="reject", mem_capacity=1572864, audit=True,
+    )
+    log = out["engine"].audit
+    assert log.arrivals and log.admits, "serving base log too quiet"
+    assert log.rejects, "no rejections — tighten the capacity"
+    assert errors(verify_audit(log)) == []
+    return log
+
+
+def _serving_mutant():
+    return copy.deepcopy(_serving_log())
+
+
+@given(st.integers(min_value=0, max_value=10**6))
+@settings(max_examples=20, deadline=None)
+def test_exec_before_arrival_flagged(salt):
+    log = _serving_mutant()
+    arrive_at = {r.gid: r.t for r in log.arrivals}
+    candidates = [
+        r for r in log.execs if arrive_at.get(r.gid, 0.0) > 1e-3
+    ]
+    rec = _pick(salt, candidates)
+    rec.start = arrive_at[rec.gid] * 0.5  # before the tenant even arrived
+    assert "ARRIVAL" in _codes(log)
+
+
+@given(st.integers(min_value=0, max_value=10**6))
+@settings(max_examples=20, deadline=None)
+def test_exec_before_admit_flagged(salt):
+    log = _serving_mutant()
+    first_start = {}
+    for r in log.execs:
+        if r.gid not in first_start or r.start < first_start[r.gid].start:
+            first_start[r.gid] = r
+    candidates = [
+        a for a in log.admits
+        if a.gid in first_start and first_start[a.gid].end > a.t + 1e-3
+    ]
+    admit = _pick(salt, candidates)
+    # push the admit record past the graph's first execution: the run
+    # now claims work started on a tenant that had not been let in
+    admit.t = first_start[admit.gid].start + 1e-4
+    assert "ARRIVAL" in _codes(log)
+
+
+@given(st.integers(min_value=0, max_value=10**6))
+@settings(max_examples=20, deadline=None)
+def test_fabricated_reject_for_executed_graph_flagged(salt):
+    log = _serving_mutant()
+    already = {r.gid for r in log.rejects}
+    candidates = sorted(
+        {r.gid for r in log.execs if r.gid not in already}
+    )
+    gid = _pick(salt, candidates)
+    log.log_reject(gid, 0.0, "pressure")
+    assert "ARRIVAL" in _codes(log)
+
+
+@given(st.integers(min_value=0, max_value=10**6))
+@settings(max_examples=20, deadline=None)
+def test_tampered_claimed_admit_at_flagged(salt):
+    log = _serving_mutant()
+    admit_at = {r.gid: r.t for r in log.admits}
+    candidates = sorted(
+        gid for gid, info in log.result["per_graph"].items()
+        if not info.get("rejected") and admit_at.get(gid, 0.0) > 1e-6
+    )
+    gid = _pick(salt, candidates)
+    log.result["per_graph"][gid]["admit_at"] = admit_at[gid] * 3.0 + 1.0
+    assert "ARRIVAL" in _codes(log)
+
+
+@given(st.integers(min_value=0, max_value=10**6))
+@settings(max_examples=20, deadline=None)
+def test_flipped_rejected_flag_flagged(salt):
+    log = _serving_mutant()
+    candidates = sorted(
+        gid for gid, info in log.result["per_graph"].items()
+        if not info.get("rejected")
+    )
+    gid = _pick(salt, candidates)
+    log.result["per_graph"][gid]["rejected"] = True
+    assert "ARRIVAL" in _codes(log)
+
+
+def test_serving_round_trip_preserves_arrival_records(tmp_path):
+    log = _serving_log()
+    p = tmp_path / "serving_audit.jsonl"
+    log.to_jsonl(str(p))
+    from repro.verify.audit import AuditLog
+
+    back = AuditLog.from_jsonl(str(p))
+    assert [(r.gid, r.t) for r in back.arrivals] == [
+        (r.gid, r.t) for r in log.arrivals
+    ]
+    assert [(r.gid, r.t) for r in back.admits] == [
+        (r.gid, r.t) for r in log.admits
+    ]
+    assert [(r.gid, r.t, r.reason) for r in back.rejects] == [
+        (r.gid, r.t, r.reason) for r in log.rejects
+    ]
+    assert errors(verify_audit(back)) == []
+
+
+# ---------------------------------------------------------------------------
 # surrogate logs: same mutation classes through the surrogate subset
 
 
